@@ -1,0 +1,154 @@
+"""Shared benchmark machinery: scale presets, runners, result storage.
+
+Every benchmark module reproduces one paper artifact (Table I–IV,
+Fig 5–7) on the synthetic federated stand-ins (offline container —
+DESIGN.md §1 faithfulness caveat).  Two presets:
+
+  quick : minutes-scale sanity pass (CI / bench_output.txt)
+  full  : the EXPERIMENTS.md numbers (tens of minutes per table)
+
+Results append to experiments/results/<name>.json so EXPERIMENTS.md is
+reproducible from artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.cyclic import CyclicConfig
+from repro.core.pipeline import run_cyclic_then_federated
+from repro.data.synthetic import DATASETS
+from repro.fl.simulation import FLConfig
+from repro.fl.task import charlm_task, vision_task
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "results"
+
+
+@dataclasses.dataclass(frozen=True)
+class Scale:
+    """One benchmark scale preset (paper values in comments)."""
+    name: str
+    n_clients: int          # paper: 100
+    n_train: int            # paper: 50k (CIFAR)
+    n_test: int
+    p1_rounds: int          # paper: 100
+    p2_rounds: int          # paper: 900 (1000 total)
+    p1_participation: float = 0.25   # paper: 25%
+    p2_participation: float = 0.1    # paper: 10%
+    p1_local_steps: int = 20         # paper: 20
+    p2_local_steps: int = 15         # paper: 5 epochs
+    eval_every: int = 2
+
+
+QUICK = Scale("quick", n_clients=20, n_train=2400, n_test=600,
+              p1_rounds=4, p2_rounds=10, p1_participation=0.25,
+              p2_participation=0.15, p1_local_steps=10, p2_local_steps=10,
+              eval_every=2)
+FULL = Scale("full", n_clients=50, n_train=8000, n_test=1500,
+             p1_rounds=12, p2_rounds=36, p1_local_steps=15,
+             p2_local_steps=12, eval_every=3)
+
+SCALES = {"quick": QUICK, "full": FULL}
+
+# default benchmark dataset: 20-class + heavy noise so tiny-round runs
+# retain headroom (cifar10-like saturates to 1.0 in <15 rounds)
+DEFAULT_VISION = ("cifar100c-hard", 20)
+
+
+def make_vision_setup(scale: Scale, beta: Optional[float], *, model="lenet5",
+                      dataset=None, n_classes=None, seed=0):
+    if dataset is None:
+        dataset, n_classes = DEFAULT_VISION
+    data = DATASETS.get(dataset)(
+        n_clients=scale.n_clients, beta=beta, seed=seed,
+        n_train=scale.n_train, n_test=scale.n_test)
+    in_ch = data.x.shape[-1]
+    task = vision_task(model, n_classes=n_classes or data.n_classes,
+                       in_ch=in_ch)
+    return task, data
+
+
+def make_charlm_setup(scale: Scale, seed=0):
+    data = DATASETS.get("shakespeare-like")(
+        n_clients=max(scale.n_clients // 2, 8), seed=seed,
+        n_seq_per_client=48, n_test=min(scale.n_test, 256))
+    task = charlm_task(vocab=64)
+    return task, data
+
+
+def cyclic_cfg(scale: Scale, seed=0, rounds: Optional[int] = None) -> CyclicConfig:
+    return CyclicConfig(
+        rounds=rounds if rounds is not None else scale.p1_rounds,
+        participation=scale.p1_participation,
+        local_steps=scale.p1_local_steps, eval_every=scale.eval_every,
+        seed=seed)
+
+
+def fl_cfg(scale: Scale, algorithm: str, seed=0,
+           rounds: Optional[int] = None) -> FLConfig:
+    return FLConfig(
+        algorithm=algorithm,
+        rounds=rounds if rounds is not None else scale.p2_rounds,
+        participation=scale.p2_participation,
+        local_steps=scale.p2_local_steps, eval_every=scale.eval_every,
+        seed=seed)
+
+
+def run_method(task, data, scale: Scale, *, algorithm: str, cyclic: bool,
+               seed=0, p1_rounds: Optional[int] = None,
+               p2_rounds: Optional[int] = None, verbose=False):
+    """One (method × setting) cell.  Baselines get the FULL round budget
+    (P1+P2) in P2, matching the paper's equal-total-rounds protocol."""
+    p1 = (p1_rounds if p1_rounds is not None else scale.p1_rounds) if cyclic else 0
+    p2 = p2_rounds if p2_rounds is not None else scale.p2_rounds
+    total = (scale.p1_rounds if p1_rounds is None else p1_rounds) + \
+        (scale.p2_rounds if p2_rounds is None else p2_rounds)
+    if not cyclic:
+        p2 = total
+    res = run_cyclic_then_federated(
+        task, data,
+        cyclic_cfg(scale, seed=seed, rounds=p1) if cyclic else None,
+        fl_cfg(scale, algorithm, seed=seed, rounds=p2),
+        verbose=verbose)
+    return res
+
+
+def summarize(res, target_acc: Optional[float] = None) -> Dict[str, Any]:
+    best = res.best_acc()
+    out = {
+        "best_acc": round(best.get("acc", 0.0), 4),
+        "best_round": best.get("round", -1),
+        "final_acc": round(
+            [h for h in res.history if "acc" in h][-1]["acc"], 4),
+        "comm": res.ledger.summary(),
+    }
+    if target_acc is not None:
+        out["rounds_to_target"] = res.rounds_to_acc(target_acc)
+    return out
+
+
+def save_result(name: str, payload: Dict[str, Any]) -> pathlib.Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    payload = dict(payload, _written_at=time.strftime("%Y-%m-%d %H:%M:%S"))
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path
+
+
+def load_result(name: str) -> Optional[Dict[str, Any]]:
+    path = RESULTS_DIR / f"{name}.json"
+    if path.exists():
+        return json.loads(path.read_text())
+    return None
+
+
+def fmt_table(rows: List[Dict[str, Any]], cols: List[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+    header = "  ".join(c.ljust(widths[c]) for c in cols)
+    lines = [header, "  ".join("-" * widths[c] for c in cols)]
+    for r in rows:
+        lines.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(lines)

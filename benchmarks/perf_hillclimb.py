@@ -1,0 +1,162 @@
+"""§Perf hillclimb driver — hypothesis → change → re-lower → re-analyse.
+
+Targets the three chosen pairs (worst roofline fraction / most
+collective-bound / most representative) and, for each, walks a ladder of
+named variants, recording the three roofline terms per step.  Output:
+experiments/results/perf_<pair>.json + a markdown iteration log on
+stdout that EXPERIMENTS.md §Perf quotes directly.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb --pair qwen2_train
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb --all
+"""
+from __future__ import annotations
+
+# XLA flag must precede any jax import (512 fake devices) — noqa: E402
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "results"
+
+
+def _patched(arch, **fields):
+    import dataclasses
+    from repro.configs import get_config
+    return dataclasses.replace(get_config(arch), **fields)
+
+
+def _variants_qwen2_train():
+    """qwen2-1.5b × train_4k — most collective-bound pair
+    (t_coll 16.0s vs t_comp 0.14s at baseline: 0.9% of roofline).
+
+    H1 (layout): 16-way TP all-reduces ~200MB of activations per layer
+    per direction; a 1.5B model needs NO tensor parallelism on 256 chips
+    — pure 256-way FSDP turns the per-layer activation all-reduce into a
+    per-step param all-gather + grad reduce-scatter (~GB total, not
+    ~100s of GB).  Predicted: collective term drops >10×.
+    H2 (anchor): batch anchors on attention scores keep SPMD from
+    replicating activations under FSDP weights (cheap insurance; expect
+    ~neutral here, big win on MLA archs).
+    H3 (microbatch): with the layout fixed, 4-way gradient accumulation
+    shrinks peak activation memory ~4× at small extra collective cost.
+    """
+    arch = "qwen2-1.5b"
+    return arch, "train_4k", [
+        ("baseline fsdp_tp", dict(layout="fsdp_tp", n_micro=1)),
+        ("H1 fsdp_only (no TP)", dict(layout="fsdp_only", n_micro=1)),
+        ("H2 fsdp_only + batch anchors",
+         dict(layout="fsdp_only", n_micro=1,
+              cfg_override=_patched(arch, shard_activations=True))),
+        ("H3 fsdp_only + anchors + 4 microbatches",
+         dict(layout="fsdp_only", n_micro=4,
+              cfg_override=_patched(arch, shard_activations=True))),
+    ]
+
+
+def _variants_dsv3_train():
+    """deepseek-v3-671b × train_4k — the paper technique's hardest
+    deployment target (P2 round = this step at 671B); worst useful-FLOPs
+    ratio in the baseline table.
+
+    H1 (anchor): HLO inspection showed attention scores materialized
+    with the FULL global batch per chip (dot f32[256,8,4096,4096]) —
+    SPMD preferred replicating activations over gathering FSDP weights.
+    anchor_batch pins the score tensors; predicted: per-chip score dots
+    shrink 16× to [16,8,4096,4096] (verified via HLO), collective
+    pattern changes shape.
+    H2 (layout): at 671B params FSDP×TP is mandatory — verify fsdp_only
+    REGRESSES (param all-gather of 1.3TB/step) — a refutation probe.
+    H3 (microbatch): 4-way accumulation cuts activation peak on the
+    256-chip pod.
+    """
+    arch = "deepseek-v3-671b"
+    return arch, "train_4k", [
+        ("baseline fsdp_tp", dict(layout="fsdp_tp", n_micro=1)),
+        ("H1 + batch anchors",
+         dict(layout="fsdp_tp", n_micro=1,
+              cfg_override=_patched(arch, shard_activations=True))),
+        ("H2 fsdp_only (expect REGRESSION)", dict(layout="fsdp_only",
+                                                  n_micro=1)),
+        ("H3 anchors + 4 microbatches",
+         dict(layout="fsdp_tp", n_micro=4,
+              cfg_override=_patched(arch, shard_activations=True))),
+    ]
+
+
+def _variants_mamba2_prefill():
+    """mamba2-1.3b × prefill_32k — near-collective-bound SSM (attention-
+    free: proves the pathology is TP itself, not attention).
+
+    H1 (layout): d_inner=4096 split 16-way makes every in/out projection
+    all-reduce (32,32768,2048) activations; fsdp_only removes them.
+    Predicted: collective bytes drop >>, bottleneck flips to memory.
+    """
+    return "mamba2-1.3b", "prefill_32k", [
+        ("baseline fsdp_tp", dict(layout="fsdp_tp")),
+        ("H1 fsdp_only (no TP)", dict(layout="fsdp_only")),
+    ]
+
+
+PAIRS = {
+    "qwen2_train": _variants_qwen2_train,
+    "dsv3_train": _variants_dsv3_train,
+    "mamba2_prefill": _variants_mamba2_prefill,
+}
+
+
+def run_pair_ladder(name: str) -> dict:
+    from repro.launch.dryrun import run_pair
+
+    arch, shape, ladder = PAIRS[name]()
+    print(f"\n### {arch} × {shape}\n", flush=True)
+    rows = []
+    for label, kw in ladder:
+        t0 = time.time()
+        r = run_pair(arch, shape, verbose=False, save=False, **kw)
+        dt = time.time() - t0
+        if not r.get("ok"):
+            print(f"| {label} | FAIL {r.get('error', '')[:80]} |", flush=True)
+            rows.append({"label": label, **r})
+            continue
+        row = {
+            "label": label,
+            "t_compute_s": r["t_compute_s"], "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "bottleneck": r["bottleneck"],
+            "dominant_s": max(r["t_compute_s"], r["t_memory_s"],
+                              r["t_collective_s"]),
+            "peak_bytes_per_device": (r.get("bytes_per_device") or {}).get(
+                "peak_bytes"),
+            "collective_bytes": r["collective_bytes_per_chip"],
+        }
+        rows.append(row)
+        print(f"| {label} | comp {row['t_compute_s']:.3g}s | "
+              f"mem {row['t_memory_s']:.3g}s | "
+              f"coll {row['t_collective_s']:.3g}s | -> {row['bottleneck']} "
+              f"(compile {dt:.0f}s)", flush=True)
+    out = {"arch": arch, "shape": shape, "rows": rows}
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"perf_{name}.json").write_text(
+        json.dumps(out, indent=1, default=str))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pair", default=None, choices=list(PAIRS))
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args(argv)
+    names = list(PAIRS) if args.all or not args.pair else [args.pair]
+    for n in names:
+        run_pair_ladder(n)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

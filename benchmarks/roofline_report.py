@@ -1,0 +1,81 @@
+"""§Roofline report — aggregate the dry-run artifacts into the
+per-(arch × shape × mesh) three-term roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+emits a markdown table with:
+  compute / memory / collective terms (seconds), dominant bottleneck,
+  MODEL_FLOPS = 6·N(_active)·D, useful-FLOPs ratio.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(mesh: str):
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") == mesh:
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 99))
+    return rows
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def to_markdown(rows) -> str:
+    head = ("| arch | shape | t_compute | t_memory | t_collective | "
+            "bottleneck | useful_flops | status |")
+    sep = "|" + "---|" * 8
+    lines = [head, sep]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | "
+                         f"FAIL: {r.get('error', '?')[:60]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['t_compute_s'])} | "
+            f"{_fmt_s(r['t_memory_s'])} | {_fmt_s(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | ok |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    rows = load_rows(args.mesh)
+    if not rows:
+        print(f"[roofline] no dry-run artifacts for mesh {args.mesh} — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return 1
+    print(to_markdown(rows))
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    by_bneck = {}
+    for r in rows:
+        if r.get("ok"):
+            by_bneck[r["bottleneck"]] = by_bneck.get(r["bottleneck"], 0) + 1
+    print(f"\n[roofline] {n_ok}/{len(rows)} pairs ok on {args.mesh}; "
+          f"bottlenecks: {by_bneck}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

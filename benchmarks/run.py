@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run                # quick preset
+    PYTHONPATH=src python -m benchmarks.run --scale full
+    PYTHONPATH=src python -m benchmarks.run --only table1,table4
+
+Each sub-benchmark writes experiments/results/<name>_<scale>.json; the
+roofline report additionally requires dry-run artifacts
+(repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    fig5_switch_point, fig7_landscape, roofline_report,
+    table1_accuracy, table2_compat, table3_convergence, table4_comm,
+)
+
+BENCHES = {
+    "table1": lambda scale: table1_accuracy.main(["--scale", scale,
+                                                  "--betas", "0.1,0.5"]),
+    "table2": lambda scale: table2_compat.main(["--scale", scale]),
+    "table3": lambda scale: table3_convergence.main(["--scale", scale]),
+    "table4": lambda scale: table4_comm.main(["--scale", scale]),
+    "fig5": lambda scale: fig5_switch_point.main(["--scale", scale]),
+    "fig7": lambda scale: fig7_landscape.main(["--scale", scale]),
+    "roofline": lambda scale: roofline_report.main([]),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=("quick", "full"))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    rc = 0
+    for name in names:
+        if name not in BENCHES:
+            print(f"[run] unknown benchmark {name!r}", file=sys.stderr)
+            return 2
+        print(f"\n===== {name} (scale={args.scale}) =====", flush=True)
+        t0 = time.time()
+        try:
+            r = BENCHES[name](args.scale)
+            rc = rc or (r or 0)
+        except Exception as e:  # noqa: BLE001 — keep the sweep alive
+            print(f"[run] {name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            rc = 1
+        print(f"[run] {name} done in {time.time() - t0:.0f}s", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

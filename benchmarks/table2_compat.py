@@ -1,0 +1,51 @@
+"""Table II — Cyclic+Y compatibility: accuracy improvement of adding
+cyclic pre-training to each of the four FL algorithms (paper: CIFAR-10
+β=0.5; here cifar10-like β=0.5).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import common as C
+
+ALGOS = ("fedavg", "fedprox", "moon", "scaffold")
+
+
+def run(scale: C.Scale, beta: float = 0.5, seed: int = 0):
+    task, data = C.make_vision_setup(scale, beta, seed=seed)
+    rows = []
+    for algo in ALGOS:
+        cell = {"algorithm": algo}
+        for cyclic in (False, True):
+            t0 = time.time()
+            res = C.run_method(task, data, scale, algorithm=algo,
+                               cyclic=cyclic, seed=seed)
+            s = C.summarize(res)
+            key = "with_cyclic" if cyclic else "without_cyclic"
+            cell[key] = s["best_acc"]
+            print(f"[table2] {algo:9s} cyclic={cyclic} best={s['best_acc']:.4f}"
+                  f" ({time.time() - t0:.0f}s)", flush=True)
+        cell["delta"] = round(cell["with_cyclic"] - cell["without_cyclic"], 4)
+        rows.append(cell)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=list(C.SCALES))
+    ap.add_argument("--beta", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    scale = C.SCALES[args.scale]
+    rows = run(scale, beta=args.beta, seed=args.seed)
+    print(C.fmt_table(rows, ["algorithm", "without_cyclic", "with_cyclic",
+                             "delta"]))
+    C.save_result(f"table2_{args.scale}", {"rows": rows, "beta": args.beta})
+    improved = sum(1 for r in rows if r["delta"] > 0)
+    print(f"[table2] cyclic improves {improved}/{len(rows)} algorithms")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,72 @@
+"""Table IV — communication overhead: measured ledger vs closed forms.
+
+The paper derives per-algorithm communication totals:
+    FedAvg/FedProx/Moon  w/o cyclic : 2·K_P2·T_tot·X
+    SCAFFOLD             w/o cyclic : 4·K_P2·T_tot·X
+    FedAvg/FedProx/Moon  w/ cyclic  : 2·[K_P1·T_cyc + K_P2·T_res]·X
+    SCAFFOLD             w/ cyclic  : 2·[K_P1·T_cyc + 2·K_P2·T_res]·X
+
+We run a short pipeline per (algorithm × cyclic) under a byte ledger and
+assert the measured totals equal the closed forms EXACTLY (this is an
+accounting identity, not a statistical claim — a tiny scale suffices).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common as C
+from repro.core import comm_accounting as acc
+
+
+def run(scale: C.Scale, seed: int = 0):
+    # the identity is exact at any scale — use a micro run regardless of
+    # preset so Table IV costs seconds, not a full training sweep
+    scale = C.Scale("micro", n_clients=12, n_train=480, n_test=120,
+                    p1_rounds=2, p2_rounds=3, p1_local_steps=2,
+                    p2_local_steps=2, eval_every=10)
+    task, data = C.make_vision_setup(scale, beta=0.5, seed=seed)
+    rows = []
+    k_p1 = C.cyclic_cfg(scale).n_selected(data.n_clients)
+    k_p2 = C.fl_cfg(scale, "fedavg").n_selected(data.n_clients)
+    t_cyc, t_res = scale.p1_rounds, scale.p2_rounds
+    t_tot = t_cyc + t_res
+    for algo in ("fedavg", "fedprox", "moon", "scaffold"):
+        for cyclic in (False, True):
+            res = C.run_method(task, data, scale, algorithm=algo,
+                               cyclic=cyclic, seed=seed)
+            led = res.ledger.summary()
+            x = led["model_bytes"]
+            if cyclic:
+                closed = acc.overhead_with_cyclic(algo, k_p1, t_cyc, k_p2,
+                                                  t_res, x)
+            else:
+                closed = acc.overhead_without_cyclic(algo, k_p2, t_tot, x)
+            rows.append({
+                "algorithm": algo, "cyclic": cyclic,
+                "measured_bytes": led["total_bytes"],
+                "closed_form_bytes": closed,
+                "match": led["total_bytes"] == closed,
+            })
+            print(f"[table4] {algo:9s} cyclic={cyclic} "
+                  f"measured={led['total_bytes']:.3e} closed={closed:.3e} "
+                  f"match={rows[-1]['match']}", flush=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=list(C.SCALES))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    scale = C.SCALES[args.scale]
+    rows = run(scale, seed=args.seed)
+    print(C.fmt_table(rows, ["algorithm", "cyclic", "measured_bytes",
+                             "closed_form_bytes", "match"]))
+    C.save_result(f"table4_{args.scale}", {"rows": rows})
+    n_match = sum(1 for r in rows if r["match"])
+    print(f"[table4] ledger == closed form: {n_match}/{len(rows)}")
+    return 0 if n_match == len(rows) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,78 @@
+"""End-to-end driver: CyclicFL federated next-token training of a ~100M
+transformer through the POD driver (the production code path: sharded
+round programs, P1 relay then P2 FedAvg).
+
+The model is a width/depth-reduced TinyLlama-family config scaled to
+~100M parameters; data is the synthetic federated token stream
+(Dirichlet topic mixture over clients → natural non-IID).
+
+    PYTHONPATH=src python examples/federated_llm.py            # ~100M, slow on CPU
+    PYTHONPATH=src python examples/federated_llm.py --tiny     # seconds-scale
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.data.synthetic import make_synthetic_tokenlm
+from repro.launch.train import PodFLSpec, run_pod_training
+from repro.models.transformer import lm_loss
+from repro.configs.common import param_count
+
+
+def model_100m():
+    """~100M-param llama-family config (tinyllama reduced in depth/width)."""
+    base = get_config("tinyllama-1.1b")
+    return dataclasses.replace(
+        base, name="tinyllama-100m", n_layers=6, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        dtype=jnp.float32, param_dtype=jnp.float32, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CI-friendly)")
+    ap.add_argument("--cyclic-rounds", type=int, default=2)
+    ap.add_argument("--fl-rounds", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced("tinyllama-1.1b") if args.tiny else model_100m()
+    n_params = param_count(cfg)
+    print(f"[llm] {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    data = make_synthetic_tokenlm(
+        n_clients=16, seq_len=args.seq, n_seq_per_client=32,
+        vocab=cfg.vocab_size, beta=0.5, seed=args.seed)
+
+    # eval: mean next-token loss on a held-out batch
+    ex = jnp.asarray(data.test_x[:16])
+    ey = jnp.asarray(data.test_y[:16])
+
+    @jax.jit
+    def eval_loss(params):
+        loss, _ = lm_loss(params, cfg, {"tokens": ex, "labels": ey})
+        return loss
+
+    spec = PodFLSpec(local_steps=args.local_steps, lr=0.03)
+    t0 = time.time()
+    res = run_pod_training(
+        cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.fl_rounds,
+        clients_per_round=4, spec=spec, seed=args.seed,
+        eval_fn=lambda p: float(eval_loss(p)), verbose=True)
+    print(f"[llm] eval loss trajectory: "
+          f"{[round(h['eval'], 4) for h in res.history]}")
+    first, last = res.history[0]["eval"], res.history[-1]["eval"]
+    print(f"[llm] eval loss {first:.4f} -> {last:.4f} "
+          f"({time.time() - t0:.0f}s)  improved={last < first}")
+
+
+if __name__ == "__main__":
+    main()

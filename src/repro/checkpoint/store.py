@@ -1,0 +1,134 @@
+"""Flat-npz pytree checkpointing with structure manifest.
+
+Good enough for single-host simulation and CPU validation; the on-disk
+format is a ``.npz`` of flattened leaves keyed by path plus a JSON
+manifest describing the treedef, so restore round-trips arbitrary nested
+dict/list/tuple/NamedTuple-free pytrees (FL server state is plain dicts
+by convention in this codebase).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = _SEP.join(_path_part(p) for p in path)
+        leaves.append((key, np.asarray(leaf)))
+    return leaves, flat[1]
+
+
+def _path_part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(path: str, tree: Pytree, metadata: Optional[Dict] = None) -> None:
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"leaf{_SEP}{k}": v for k, v in leaves}
+    struct = jax.tree_util.tree_map(lambda _: 0, tree)
+    manifest = {
+        "structure": _encode_structure(struct),
+        "keys": [k for k, _ in leaves],
+        "metadata": metadata or {},
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __manifest__=np.frombuffer(
+            json.dumps(manifest).encode(), dtype=np.uint8), **arrays)
+        shutil.move(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for cand in (tmp, tmp + ".npz"):
+            if os.path.exists(cand):
+                os.remove(cand)
+
+
+def _encode_structure(struct: Pytree):
+    if isinstance(struct, dict):
+        return {"__kind__": "dict", "items": {k: _encode_structure(v) for k, v in struct.items()}}
+    if isinstance(struct, (list, tuple)):
+        kind = "list" if isinstance(struct, list) else "tuple"
+        return {"__kind__": kind, "items": [_encode_structure(v) for v in struct]}
+    return {"__kind__": "leaf"}
+
+
+def _decode_structure(enc, leaves_iter):
+    kind = enc["__kind__"]
+    if kind == "dict":
+        return {k: _decode_structure(v, leaves_iter) for k, v in enc["items"].items()}
+    if kind in ("list", "tuple"):
+        seq = [_decode_structure(v, leaves_iter) for v in enc["items"]]
+        return seq if kind == "list" else tuple(seq)
+    return next(leaves_iter)
+
+
+def load_pytree(path: str) -> Pytree:
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(bytes(z["__manifest__"]).decode())
+        leaves = [z[f"leaf{_SEP}{k}"] for k in manifest["keys"]]
+    return _decode_structure(manifest["structure"], iter(leaves))
+
+
+def load_metadata(path: str) -> Dict:
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(bytes(z["__manifest__"]).decode())["metadata"]
+
+
+class CheckpointManager:
+    """Rolling round-numbered checkpoints: ``<dir>/ckpt_<round>.npz``."""
+
+    PATTERN = re.compile(r"ckpt_(\d+)\.npz$")
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, round_: int, tree: Pytree, metadata: Optional[Dict] = None) -> str:
+        path = os.path.join(self.directory, f"ckpt_{round_}.npz")
+        meta = dict(metadata or {})
+        meta["round"] = round_
+        save_pytree(path, tree, meta)
+        self._gc()
+        return path
+
+    def latest(self) -> Optional[str]:
+        rounds = self._rounds()
+        if not rounds:
+            return None
+        return os.path.join(self.directory, f"ckpt_{rounds[-1]}.npz")
+
+    def restore(self) -> Optional[Pytree]:
+        path = self.latest()
+        return None if path is None else load_pytree(path)
+
+    def _rounds(self) -> List[int]:
+        out = []
+        for f in os.listdir(self.directory):
+            m = self.PATTERN.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _gc(self) -> None:
+        rounds = self._rounds()
+        for r in rounds[:-self.keep]:
+            os.remove(os.path.join(self.directory, f"ckpt_{r}.npz"))

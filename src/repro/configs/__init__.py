@@ -1,0 +1,52 @@
+"""Assigned-architecture configs (public-literature pool).
+
+10 assigned archs + 1 beyond-assignment SWA variant; each module carries
+the exact assigned hyperparameters and its source citation, plus a
+``reduced()`` smoke variant (≤2 layers, d_model≤512, ≤4 experts) that
+runs a forward/train step on CPU.
+
+``long_500k`` eligibility (sub-quadratic decode, DESIGN.md §4):
+mamba2-1.3b, hymba-1.5b, tinyllama-1.1b-swa.
+"""
+from repro.configs.common import (
+    ARCHS,
+    SHAPES,
+    ShapeSpec,
+    batch_specs,
+    params_specs,
+    param_count,
+    active_param_count,
+    get_config,
+    get_reduced,
+    list_archs,
+)
+
+# import for registration side effects
+from repro.configs import (  # noqa: F401
+    qwen3_32b,
+    qwen15_05b,
+    qwen2_15b,
+    tinyllama_11b,
+    deepseek_v2_lite,
+    deepseek_v3,
+    internvl2_1b,
+    hymba_15b,
+    mamba2_13b,
+    musicgen_medium,
+)
+
+ASSIGNED = (
+    "qwen3-32b", "qwen1.5-0.5b", "deepseek-v2-lite-16b", "internvl2-1b",
+    "qwen2-1.5b", "hymba-1.5b", "deepseek-v3-671b", "mamba2-1.3b",
+    "musicgen-medium", "tinyllama-1.1b",
+)
+
+# archs that may run the long_500k decode shape (sub-quadratic decode)
+LONG_CONTEXT_OK = ("mamba2-1.3b", "hymba-1.5b", "tinyllama-1.1b-swa")
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    """True if (arch, shape) is a runnable pair per DESIGN.md §4."""
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True

@@ -1,0 +1,151 @@
+"""Shared config machinery: assigned input shapes, ShapeDtypeStruct
+input specs per (architecture × shape), and the arch registry.
+
+The four assigned input shapes (public pool):
+
+  train_4k     seq_len=  4,096  global_batch=256   training
+  prefill_32k  seq_len= 32,768  global_batch= 32   inference prefill
+  decode_32k   seq_len= 32,768  global_batch=128   inference decode (1 token)
+  long_500k    seq_len=524,288  global_batch=  1   long-context decode
+
+``input_specs`` produces weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, zero allocation — which is what the
+multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig, init_decode_cache
+from repro.utils.registry import Registry
+
+Pytree = Any
+
+ARCHS: Registry = Registry("architecture")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def register_arch(name: str):
+    """Register an arch module's (config, reduced) pair."""
+
+    def deco(fns):
+        ARCHS.register(name)(fns)
+        return fns
+
+    return deco
+
+
+def get_config(name: str) -> TransformerConfig:
+    return ARCHS.get(name)[0]()
+
+
+def get_reduced(name: str) -> TransformerConfig:
+    return ARCHS.get(name)[1]()
+
+
+def list_archs():
+    return ARCHS.names()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: TransformerConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the model-input batch of one step.
+
+    train   : full-sequence tokens + labels
+    prefill : full-sequence tokens (KV cache built inside the step)
+    decode  : ONE new token + the KV/SSM cache at seq_len + cache_len
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+
+    def text_batch(with_labels: bool):
+        b = {"tokens": _sds((B, S), tok)}
+        if with_labels:
+            b["labels"] = _sds((B, S), tok)
+        return b
+
+    def vlm_batch(with_labels: bool):
+        P = cfg.n_prefix_tokens
+        b = {
+            "patch_embeds": _sds((B, P, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S - P), tok),
+        }
+        if with_labels:
+            b["labels"] = _sds((B, S - P), tok)
+        return b
+
+    def audio_batch(with_labels: bool):
+        b = {"frame_embeds": _sds((B, S, cfg.d_model), cfg.dtype)}
+        if with_labels:
+            shape_l = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+            b["labels"] = _sds(shape_l, tok)
+        return b
+
+    builders = {"tokens": text_batch, "vlm": vlm_batch, "embeddings": audio_batch}
+    build = builders[cfg.input_mode]
+
+    if shape.kind == "train":
+        return build(True)
+    if shape.kind == "prefill":
+        return build(False)
+    # decode: one token against a cache of size seq_len
+    cache = jax.eval_shape(
+        functools.partial(init_decode_cache, cfg, B, S))
+    if cfg.input_mode == "embeddings":
+        token = _sds((B, 1, cfg.d_model), cfg.dtype)
+    else:
+        token = _sds((B, 1), tok)
+    return {"token": token, "cache": cache, "cache_len": _sds((), tok)}
+
+
+def params_specs(cfg: TransformerConfig) -> Pytree:
+    """Abstract parameter tree (no allocation) via eval_shape."""
+    from repro.models.transformer import init_lm
+    return jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    import math
+    tree = params_specs(cfg)
+    return sum(int(math.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def active_param_count(cfg: TransformerConfig) -> int:
+    """Per-token active parameters — MoE counts top_k (+shared) experts
+    only; used for MODEL_FLOPS = 6·N_active·D in the roofline."""
+    import math
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    tree = params_specs(cfg)
+    expert_leaves = 0
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if "experts" in keys:
+            expert_leaves += int(math.prod(leaf.shape))
+    inactive_frac = 1.0 - cfg.top_k / cfg.n_experts
+    return int(total - expert_leaves * inactive_frac)

@@ -1,0 +1,23 @@
+"""CyclicFL — the paper's primary contribution.
+
+P1 cyclic pre-training (Algorithm 1), P1→P2 switch policies, Table-IV
+communication accounting, loss-landscape diagnostics, and the Cyclic+Y
+pipeline that composes with every FL algorithm in repro.fl.
+"""
+from repro.core.cyclic import CyclicConfig, CyclicResult, cyclic_pretrain
+from repro.core.switch import FixedRounds, AccuracyPlateau, BudgetFraction
+from repro.core.comm_accounting import (
+    CommLedger,
+    model_bytes,
+    overhead_with_cyclic,
+    overhead_without_cyclic,
+    rounds_budget_equivalent,
+)
+from repro.core.diagnostics import (
+    sharpness_probe,
+    hessian_top_eig,
+    landscape_slice,
+    client_similarity,
+    make_batch_loss,
+)
+from repro.core.pipeline import PipelineResult, run_cyclic_then_federated

@@ -1,0 +1,88 @@
+"""Communication accounting — Table IV, as executable closed forms plus a
+runtime ledger the simulator feeds; tests assert ledger == closed form.
+
+Notation (paper §IV): X = model capacity (bytes), T_cyc / T_res = rounds
+in P1 / P2, K_P1 / K_P2 = clients per round in P1 / P2.
+
+Closed forms (Table IV):
+    FedAvg/FedProx/Moon  w/o cyclic : 2·K_P2·T_tot·X
+    SCAFFOLD             w/o cyclic : 4·K_P2·T_tot·X
+    FedAvg/FedProx/Moon  w/ cyclic  : 2·[K_P1·T_cyc + K_P2·T_res]·X
+    SCAFFOLD             w/ cyclic  : 2·[K_P1·T_cyc + 2·K_P2·T_res]·X
+
+P1 is a relay: each participating client downloads the model and uploads
+it once ⇒ 2·K_P1·X per round, same per-round cost shape as FedAvg but
+with K_P1 clients.  SCAFFOLD doubles P2 payload (control variates ride
+along both directions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+_PER_ROUND_FACTOR = {"fedavg": 2, "fedprox": 2, "moon": 2, "scaffold": 4}
+
+
+def model_bytes(params: Pytree) -> int:
+    """X — the model capacity in bytes."""
+    return tm.size_bytes(params)
+
+
+def overhead_without_cyclic(algorithm: str, k_p2: int, t_tot: int, x_bytes: int) -> int:
+    return _PER_ROUND_FACTOR[algorithm] * k_p2 * t_tot * x_bytes
+
+
+def overhead_with_cyclic(algorithm: str, k_p1: int, t_cyc: int,
+                         k_p2: int, t_res: int, x_bytes: int) -> int:
+    p2_factor = _PER_ROUND_FACTOR[algorithm]
+    return 2 * k_p1 * t_cyc * x_bytes + p2_factor * k_p2 * t_res * x_bytes
+
+
+def rounds_budget_equivalent(algorithm: str, k_p1: int, t_cyc: int,
+                             k_p2: int, x_bytes: int) -> float:
+    """How many P2 rounds the P1 phase costs — converts the paper's
+    convergence-speedup (rounds-to-accuracy) into a comm-fair comparison."""
+    p1 = 2 * k_p1 * t_cyc * x_bytes
+    per_p2_round = _PER_ROUND_FACTOR[algorithm] * k_p2 * x_bytes
+    return p1 / per_p2_round
+
+
+@dataclasses.dataclass
+class CommLedger:
+    """Runtime byte counter incremented by the P1/P2 drivers."""
+    p1_bytes: int = 0
+    p2_bytes: int = 0
+    p1_rounds: int = 0
+    p2_rounds: int = 0
+    _x_bytes: Optional[int] = None
+
+    @property
+    def total_bytes(self) -> int:
+        return self.p1_bytes + self.p2_bytes
+
+    def record_cyclic_round(self, k_p1: int, params: Pytree) -> None:
+        x = self._capacity(params)
+        self.p1_bytes += 2 * k_p1 * x       # download + upload per client
+        self.p1_rounds += 1
+
+    def record_round(self, algorithm: str, k_p2: int, params: Pytree) -> None:
+        x = self._capacity(params)
+        self.p2_bytes += _PER_ROUND_FACTOR[algorithm] * k_p2 * x
+        self.p2_rounds += 1
+
+    def _capacity(self, params: Pytree) -> int:
+        if self._x_bytes is None:
+            self._x_bytes = model_bytes(params)
+        return self._x_bytes
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "p1_rounds": self.p1_rounds, "p2_rounds": self.p2_rounds,
+            "p1_bytes": self.p1_bytes, "p2_bytes": self.p2_bytes,
+            "total_bytes": self.total_bytes,
+            "model_bytes": self._x_bytes or 0,
+        }

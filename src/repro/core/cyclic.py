@@ -1,0 +1,133 @@
+"""CyclicFL — Algorithm 1: cyclic model pre-training (phase P1).
+
+The server relays ONE model through a randomly-sampled group of clients
+*sequentially* each round:
+
+    w ← random init
+    for t in 1..T_cyc:
+        S_t ← RandomSample(clients, K_P1)
+        for i in S_t (in order):          # strict sequential relay
+            w ← LocalSGD(w, D_i, t_i steps)
+    return w                              # well-initialized global model
+
+Unlike FedAvg there is NO aggregation — the sequential pass approximates
+centralized SGD over the union of client data (Corollary 1: SGD over a
+task sequence approaches OGD — hence centralized training — as client
+data distributions overlap), landing the model in a flat loss basin
+(Lemma 2) that stabilizes the downstream FL phase.
+
+Implementation: one round = one XLA program.  The selected clients'
+shards are stacked (K, n, ...) and the relay is a ``lax.scan`` over the
+client axis carrying the model; each scan step runs the client's
+``t_i``-step local SGD (itself a nested scan).  On a pod this scan is the
+sequential schedule whose per-step body is fully model-parallel — see
+repro/launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedDataset
+from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.simulation import make_eval_fn
+from repro.fl.task import Task
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CyclicConfig:
+    rounds: int = 100               # T_cyc
+    participation: float = 0.25     # K_P1 / |S|  (paper default: 25%)
+    local_steps: int = 20           # t_i — max local update steps (paper: 20)
+    batch_size: int = 32
+    lr: float = 0.01
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    lr_decay: float = 0.998
+    grad_clip: Optional[float] = None
+    eval_every: int = 10
+    eval_batch: int = 256
+    seed: int = 0
+
+    def n_selected(self, n_clients: int) -> int:
+        return max(1, int(round(self.participation * n_clients)))
+
+    def local_spec(self) -> LocalSpec:
+        return LocalSpec(
+            n_steps=self.local_steps, batch_size=self.batch_size, lr=self.lr,
+            momentum=self.momentum, weight_decay=self.weight_decay,
+            variant="plain", grad_clip=self.grad_clip)
+
+
+def make_cyclic_round_fn(task: Task, cfg: CyclicConfig) -> Callable:
+    """One P1 round: sequential relay over the K selected clients."""
+    local = make_local_fn(task, cfg.local_spec())
+
+    @jax.jit
+    def round_fn(key, params, x_all, y_all, ids, lr_scale):
+        cx = x_all[ids]                       # (K, n, ...)
+        cy = y_all[ids]
+        keys = jax.random.split(key, ids.shape[0])
+
+        def relay(w, inp):
+            k, cxi, cyi = inp
+            w_next, aux = local(k, w, {}, cxi, cyi, lr_scale)
+            return w_next, aux["loss"]
+
+        params, losses = jax.lax.scan(relay, params, (keys, cx, cy))
+        return params, {"local_loss": jnp.mean(losses)}
+
+    return round_fn
+
+
+@dataclasses.dataclass
+class CyclicResult:
+    params: Pytree
+    history: List[Dict[str, float]]
+
+
+def cyclic_pretrain(task: Task, data: FederatedDataset, cfg: CyclicConfig,
+                    init_params: Optional[Pytree] = None,
+                    ledger=None, verbose: bool = False,
+                    eval_fn: Optional[Callable] = None,
+                    switch_policy=None) -> CyclicResult:
+    """Run P1 and return the well-initialized global model w_wg.
+
+    ``switch_policy`` (core.switch) may terminate P1 early based on the
+    evaluation history — the RQ3 trade-off knob.
+    """
+    rng = np.random.default_rng(cfg.seed + 31)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params if init_params is not None else task.init(key)
+
+    round_fn = make_cyclic_round_fn(task, cfg)
+    evaluate = eval_fn or make_eval_fn(task, cfg.eval_batch)
+    x_all, y_all, _ = data.device_arrays()
+    K = cfg.n_selected(data.n_clients)
+
+    history: List[Dict[str, float]] = []
+    for rnd in range(cfg.rounds):
+        ids = jnp.asarray(rng.choice(data.n_clients, size=K, replace=False))
+        lr_scale = jnp.asarray(cfg.lr_decay ** rnd, jnp.float32)
+        key, rk = jax.random.split(key)
+        params, metrics = round_fn(rk, params, x_all, y_all, ids, lr_scale)
+        if ledger is not None:
+            ledger.record_cyclic_round(K, params)
+        row = {"round": rnd, "local_loss": float(metrics["local_loss"]),
+               "phase": "P1"}
+        if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
+            row["acc"] = evaluate(params, data.test_x, data.test_y)
+            if verbose:
+                print(f"[cyclic] round {rnd + 1}/{cfg.rounds} "
+                      f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
+                      flush=True)
+        history.append(row)
+        if switch_policy is not None and switch_policy.should_switch(rnd, history):
+            break
+    return CyclicResult(params=params, history=history)

@@ -1,0 +1,122 @@
+"""Loss-landscape and data-consistency diagnostics.
+
+RQ4 / Fig 7: the paper visualizes loss landscapes (Li et al. NeurIPS'18
+filter-normalized directions) and argues cyclic pre-training lands in
+flatter basins.  On this container we quantify flatness instead of
+plotting:
+
+  sharpness_probe      — E[ L(w + α·d) − L(w) ] over random
+                         filter-normalized directions d (Fig-7 proxy:
+                         smaller = flatter).
+  hessian_top_eig      — top Hessian eigenvalue via HVP power iteration
+                         (sharpness in the strict sense).
+
+Corollary 1 diagnostics: the SGD↔OGD gap shrinks with task (client)
+similarity, so we expose
+
+  client_similarity    — mean pairwise cosine of client label
+                         distributions and mean TV from global; the
+                         knob β moves these, and the theory predicts
+                         CyclicFL's advantage tracks them.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+
+def sharpness_probe(loss_fn: Callable[[Pytree], jnp.ndarray], params: Pytree,
+                    key: jax.Array, n_dirs: int = 8,
+                    alphas: Tuple[float, ...] = (0.1, 0.5, 1.0)) -> Dict[str, float]:
+    """Mean loss increase along random filter-normalized directions.
+
+    loss_fn: params -> scalar (bind the eval batch before calling).
+    Returns {'base_loss', 'sharpness@<alpha>' ...}; each entry is
+    E_d[ L(w + α d) − L(w) ] with d filter-normalized to ||w_leaf||.
+    """
+    base = float(loss_fn(params))
+    out = {"base_loss": base}
+    keys = jax.random.split(key, n_dirs)
+    deltas = {a: [] for a in alphas}
+    for k in keys:
+        d = tm.random_like(k, params)
+        d = tm.filter_normalize(d, params)
+        for a in alphas:
+            perturbed = tm.add_scaled(params, d, a)
+            deltas[a].append(float(loss_fn(perturbed)) - base)
+    for a in alphas:
+        out[f"sharpness@{a}"] = float(np.mean(deltas[a]))
+    return out
+
+
+def hessian_top_eig(loss_fn: Callable[[Pytree], jnp.ndarray], params: Pytree,
+                    key: jax.Array, n_iter: int = 12) -> float:
+    """Top Hessian eigenvalue by power iteration on the HVP."""
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def hvp(v):
+        return jax.jvp(grad_fn, (params,), (v,))[1]
+
+    v = tm.random_like(key, params)
+    v = tm.scale(v, 1.0 / (tm.norm(v) + 1e-12))
+    eig = 0.0
+    for _ in range(n_iter):
+        hv = hvp(v)
+        eig = float(tm.dot(v, hv))
+        n = tm.norm(hv)
+        v = tm.scale(hv, 1.0 / (n + 1e-12))
+    return eig
+
+
+def landscape_slice(loss_fn: Callable[[Pytree], jnp.ndarray], params: Pytree,
+                    key: jax.Array, n_points: int = 11,
+                    radius: float = 1.0) -> Dict[str, np.ndarray]:
+    """1-D filter-normalized loss slice (the numeric form of Fig 7's
+    surface): L(w + α d) for α ∈ [−radius, radius]."""
+    d = tm.filter_normalize(tm.random_like(key, params), params)
+    alphas = np.linspace(-radius, radius, n_points)
+    losses = np.array([float(loss_fn(tm.add_scaled(params, d, float(a))))
+                       for a in alphas])
+    return {"alpha": alphas, "loss": losses}
+
+
+def client_similarity(labels_per_client: np.ndarray, n_classes: int) -> Dict[str, float]:
+    """Label-distribution overlap diagnostics (Corollary 1's knob).
+
+    labels_per_client: (n_clients, n_samples) int array.
+    """
+    dists = []
+    for ly in labels_per_client:
+        h = np.bincount(np.asarray(ly).ravel() % n_classes, minlength=n_classes)
+        dists.append(h / max(h.sum(), 1))
+    D = np.stack(dists)                            # (C, n_classes)
+    g = D.mean(axis=0)
+    # pairwise cosine
+    norms = np.linalg.norm(D, axis=1, keepdims=True) + 1e-12
+    cos = (D @ D.T) / (norms * norms.T)
+    iu = np.triu_indices(len(D), k=1)
+    tv = 0.5 * np.abs(D - g).sum(axis=1)
+    return {
+        "mean_pairwise_cos": float(cos[iu].mean()) if len(iu[0]) else 1.0,
+        "mean_tv_from_global": float(tv.mean()),
+        "min_pairwise_cos": float(cos[iu].min()) if len(iu[0]) else 1.0,
+    }
+
+
+def make_batch_loss(task, x: np.ndarray, y: np.ndarray) -> Callable[[Pytree], jnp.ndarray]:
+    """Bind a fixed eval batch into a pure params->loss closure (jit'd)."""
+    bx, by = jnp.asarray(x), jnp.asarray(y)
+
+    @jax.jit
+    def loss(params):
+        return task.loss_fn(params, bx, by, None)
+
+    return loss

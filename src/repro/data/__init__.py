@@ -1,0 +1,8 @@
+from repro.data.partition import dirichlet_partition, partition_stats
+from repro.data.federated import FederatedDataset, ClientBatchIterator
+from repro.data.synthetic import (
+    make_synthetic_vision,
+    make_synthetic_charlm,
+    make_synthetic_tokenlm,
+    DATASETS,
+)

@@ -1,0 +1,12 @@
+from repro.fl.task import Task, vision_task, charlm_task, lm_task
+from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.simulation import (
+    ALGORITHMS,
+    FLConfig,
+    FLResult,
+    ServerState,
+    run_federated,
+    make_round_fn,
+    make_eval_fn,
+    init_server_state,
+)

@@ -1,0 +1,114 @@
+"""Client local training — the inner loop shared by P1 (cyclic) and P2 (FL).
+
+One jit-friendly function runs ``n_steps`` of SGD on one client's shard,
+with the algorithm-specific loss/gradient shaping injected through
+``variant``:
+
+  plain    : vanilla local SGD (FedAvg, and CyclicFL's P1)
+  fedprox  : + (mu/2)·||w − w_global||²          [Li et al., MLSys'20]
+  scaffold : g ← g − c_i + c  gradient correction [Karimireddy, ICML'20]
+  moon     : + mu·contrastive(z, z_glob, z_prev)  [Li et al., CVPR'21]
+
+The whole local run is a ``lax.scan`` over steps so a round compiles to
+a single XLA program; batches are sampled inside the scan from the
+client's fixed-size shard (uniform with replacement — the stochastic
+approximation of the paper's epoch shuffling that keeps shapes static).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.task import Task
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpec:
+    """Static description of one client's local-training run."""
+    n_steps: int
+    batch_size: int
+    lr: float
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    variant: str = "plain"          # plain | fedprox | scaffold | moon
+    mu: float = 0.0                 # prox / moon coefficient
+    temperature: float = 0.5        # moon
+    grad_clip: Optional[float] = None
+
+
+def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
+                      temperature: float) -> jnp.ndarray:
+    """Model-contrastive loss: pull local representation toward the global
+    model's, push away from the previous local model's."""
+
+    def cos(a, b):
+        a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-12)
+        b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-12)
+        return jnp.sum(a * b, axis=-1)
+
+    sim_g = cos(z, z_glob) / temperature
+    sim_p = cos(z, z_prev) / temperature
+    return jnp.mean(-sim_g + jax.nn.logsumexp(jnp.stack([sim_g, sim_p]), axis=0))
+
+
+def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
+    """Build ``local(key, w_start, extras, cx, cy, lr_scale) -> (w_end, aux)``.
+
+    extras (algorithm context, zero-size pytrees when unused):
+      w_global : anchor for fedprox / moon
+      c_diff   : (c − c_i) correction for scaffold
+      w_prev   : previous local model for moon
+    aux: {'loss': mean local loss}
+    """
+
+    def loss_for_variant(params, extras, bx, by, rng):
+        base = task.loss_fn(params, bx, by, rng)
+        if spec.variant == "fedprox":
+            prox = 0.5 * spec.mu * tm.squared_norm(tm.sub(params, extras["w_global"]))
+            return base + prox
+        if spec.variant == "moon":
+            z = task.repr_fn(params, bx)
+            z_glob = jax.lax.stop_gradient(task.repr_fn(extras["w_global"], bx))
+            z_prev = jax.lax.stop_gradient(task.repr_fn(extras["w_prev"], bx))
+            return base + spec.mu * _moon_contrastive(z, z_glob, z_prev,
+                                                      spec.temperature)
+        return base
+
+    grad_fn = jax.value_and_grad(loss_for_variant)
+
+    def local(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
+              cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
+        n_data = cx.shape[0]
+        mom0 = tm.zeros_like(w_start) if spec.momentum else ()
+
+        def step(carry, step_key):
+            params, mom = carry
+            bidx = jax.random.randint(step_key, (spec.batch_size,), 0, n_data)
+            loss, grads = grad_fn(params, extras, cx[bidx], cy[bidx], step_key)
+            if spec.weight_decay:
+                grads = tm.add_scaled(grads, params, spec.weight_decay)
+            if spec.variant == "scaffold":
+                grads = tm.add(grads, extras["c_diff"])
+            if spec.grad_clip:
+                grads = tm.global_clip(grads, spec.grad_clip)
+            if spec.momentum:
+                mom = tm.add_scaled(grads, mom, spec.momentum)
+                eff = mom
+            else:
+                eff = grads
+            params = jax.tree_util.tree_map(
+                lambda p, g: (p - spec.lr * lr_scale * g).astype(p.dtype),
+                params, eff)
+            return (params, mom), loss
+
+        keys = jax.random.split(key, spec.n_steps)
+        (w_end, _), losses = jax.lax.scan(step, (w_start, mom0), keys)
+        return w_end, {"loss": jnp.mean(losses)}
+
+    return local

@@ -1,0 +1,117 @@
+"""Task abstraction: binds a model family to loss / representation /
+prediction functions so the FL machinery is model-agnostic.
+
+CyclicFL constrains the *training schedule*, not the model, so the same
+client-update and aggregation code must drive the paper's CNNs/LSTM and
+the assigned LLM-class architectures.  A ``Task`` is the adapter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import paper_models as pm
+from repro.models.transformer import TransformerConfig, init_lm, lm_loss, lm_forward
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A learnable task: everything FL algorithms need about the model.
+
+    loss_fn(params, bx, by, rng) -> scalar loss            (local SGD)
+    repr_fn(params, bx)          -> (B, d) representation  (Moon contrast)
+    predict_fn(params, bx)       -> predicted int labels   (test accuracy)
+    """
+
+    name: str
+    kind: str                      # vision | charlm | tokenlm
+    init: Callable[[jax.Array], Pytree]
+    loss_fn: Callable[..., jnp.ndarray]
+    repr_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray]
+    predict_fn: Callable[[Pytree, jnp.ndarray], jnp.ndarray]
+
+    def accuracy(self, params: Pytree, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        pred = self.predict_fn(params, x)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def _softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def vision_task(model: str = "lenet5", n_classes: int = 10, in_ch: int = 3,
+                seed_kwargs: Optional[dict] = None) -> Task:
+    """Paper vision models (LeNet-5, ResNet-8, CNN-FEMNIST, CNN-Fashion)."""
+    init_fn, apply_fn, kind = pm.PAPER_MODELS.get(model)
+    kw = seed_kwargs or {}
+
+    def init(key):
+        return init_fn(key, n_classes=n_classes, in_ch=in_ch, **kw)
+
+    def loss_fn(params, bx, by, rng=None):
+        logits = apply_fn(params, bx, train=True, rng=rng)
+        return _softmax_xent(logits, by)
+
+    def repr_fn(params, bx):
+        # logits-as-representation: the paper's Moon uses a projection head;
+        # on these small CNNs the pre-softmax layer is the standard proxy.
+        return apply_fn(params, bx, train=False)
+
+    def predict_fn(params, bx):
+        return jnp.argmax(apply_fn(params, bx, train=False), axis=-1)
+
+    return Task(name=model, kind="vision", init=init, loss_fn=loss_fn,
+                repr_fn=repr_fn, predict_fn=predict_fn)
+
+
+def charlm_task(vocab: int = 64, d_embed: int = 8, d_hidden: int = 256) -> Task:
+    """CharLSTM-256 next-char prediction (Shakespeare stand-in)."""
+
+    def init(key):
+        return pm.charlstm_init(key, vocab=vocab, d_embed=d_embed, d_hidden=d_hidden)
+
+    def loss_fn(params, bx, by, rng=None):
+        logits = pm.charlstm_apply(params, bx)
+        return _softmax_xent(logits, by)
+
+    def repr_fn(params, bx):
+        return pm.charlstm_apply(params, bx)[:, -1]  # last-position logits
+
+    def predict_fn(params, bx):
+        return jnp.argmax(pm.charlstm_apply(params, bx), axis=-1)
+
+    return Task(name="charlstm", kind="charlm", init=init, loss_fn=loss_fn,
+                repr_fn=repr_fn, predict_fn=predict_fn)
+
+
+def lm_task(cfg: TransformerConfig) -> Task:
+    """Federated next-token training over an assigned architecture.
+
+    bx = tokens (B, S) int32, by = labels (B, S) int32 (-1 = ignore).
+    """
+
+    def init(key):
+        return init_lm(key, cfg)
+
+    def loss_fn(params, bx, by, rng=None):
+        loss, _ = lm_loss(params, cfg, {"tokens": bx, "labels": by})
+        return loss
+
+    def repr_fn(params, bx):
+        _, _, hidden = lm_forward(params, cfg, {"tokens": bx})
+        return jnp.mean(hidden.astype(jnp.float32), axis=1)
+
+    def predict_fn(params, bx):
+        logits, _, _ = lm_forward(params, cfg, {"tokens": bx})
+        return jnp.argmax(logits, axis=-1)
+
+    return Task(name=cfg.name, kind="tokenlm", init=init, loss_fn=loss_fn,
+                repr_fn=repr_fn, predict_fn=predict_fn)

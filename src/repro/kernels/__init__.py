@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the assigned architectures' compute hot spots.
+
+flash_attention — causal GQA attention w/ online softmax + sliding window
+ssd_scan        — Mamba2 SSD chunked scan with carried VMEM state
+
+``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles the tests
+sweep against (interpret mode — this container has no TPU).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan

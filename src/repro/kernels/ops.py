@@ -1,0 +1,48 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``repro.models`` routes through these when a config selects
+``attn_impl='pallas'`` / ``ssd_impl='pallas'`` (or the ``*_interpret``
+variants used for CPU validation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    window: Optional[jnp.ndarray] = None,
+                    q_offset=0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    if window is None:
+        window = jnp.int32(2 ** 30)
+    if q_offset is None:
+        q_offset = 0
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+        B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+        interpret: bool = False) -> jnp.ndarray:
+    y, _ = _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_with_state(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+                   interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the kernel tests sweep against
+(``assert_allclose`` over shapes/dtypes, kernels in interpret mode).
+They are deliberately naive-but-exact; repro.models uses its own fused
+XLA paths in production mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Dense attention oracle.
+
+    q: (B, S, H, hd); k/v: (B, T, KH, hd) with H % KH == 0 (GQA).
+    window w keeps keys with qpos - w < kpos <= qpos.
+    """
+    B, S, H, hd = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, hd).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    logits *= hd ** -0.5
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray,
+            initial_state: Optional[jnp.ndarray] = None):
+    """Naive sequential SSD recurrence (exact oracle).
+
+    x: (b, s, h, p); dt: (b, s, h) positive; A: (h,) negative;
+    B/C: (b, s, g, n).  Returns (y (b,s,h,p), final_state (b,h,p,n)).
+
+    state_t = state_{t-1} * exp(dt_t A_h) + dt_t * x_t B_t^T
+    y_t     = C_t · state_t
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    Bh = jnp.repeat(B, hpg, axis=2) if g != h else B
+    Ch = jnp.repeat(C, hpg, axis=2) if g != h else C
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A[None, :])
+        state = state * decay[:, :, None, None] + \
+            dtt[:, :, None, None] * xt[:, :, :, None] * Bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(Ch, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,129 @@
+"""Mamba2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §5): the GPU reference implements the
+inter-chunk recurrence with warp-level primitives; TPUs have no warp
+shuffles, so the chunked form IS the TPU-native algorithm — every
+chunk-local term is a (chunk × chunk) or (chunk × d_state) matmul that
+lands on the MXU, and the only sequential dependency is the tiny
+(head_dim × d_state) state tile carried in VMEM scratch across the
+innermost grid axis.
+
+Grid: (batch, head, chunk) — chunk innermost, so for a fixed (b, h) the
+chunks execute in order and the scratch state is the running recurrence.
+Per step the kernel computes, entirely in VMEM:
+
+  intra  :  y_j += Σ_{i≤j}  (C_j·B_i) · exp(cum_j − cum_i) · dt_i · x_i
+  inter  :  y_j += exp(cum_j) · C_j · state_inᵀ
+  state' :  exp(cum_L) · state_in  +  Σ_i dt_i exp(cum_L − cum_i) x_i B_iᵀ
+
+which matches the exact recurrence state_t = state_{t−1}·exp(dt_t A_h)
++ dt_t·x_t B_tᵀ; y_t = C_t·state_t (see ref.ssd_ref).
+
+The per-head decay A rides in scalar-prefetch SMEM; grouped B/C (g < h)
+are mapped per-head in the index map (h // heads_per_group) so the
+group tensors are never materialized per head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, fs_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+    h = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (L, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (L,)
+    A = a_ref[h]                                       # scalar (negative)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (L, n)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (L, n)
+
+    dA = dt * A
+    cum = jnp.cumsum(dA)                               # inclusive
+    # ---- intra-chunk quadratic term (MXU matmuls) ----
+    seg = cum[:, None] - cum[None, :]                  # (L, L): cum_j - cum_i
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    M = CB * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (L, p)
+    # ---- inter-chunk: contribution of the entering state ----
+    state_in = state_ref[...]                          # (p, n)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (L, p)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # ---- state update ----
+    total = cum[-1]
+    w = (dt * jnp.exp(total - cum))[:, None] * x       # (L, p)
+    state_ref[...] = state_in * jnp.exp(total) + jax.lax.dot_general(
+        w, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _emit_final():
+        fs_ref[0, 0, :, :] = state_ref[...]
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h) positive; A: (h,); B/C: (b, s, g, n).
+
+    Returns (y (b, s, h, p), final_state (b, h, p, n) f32).
+    s is padded to a chunk multiple with dt=0 (exp(0)=1, contribution 0),
+    so padding does not perturb the state.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    grid = (b, h, sp // chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, final = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci, a: (bi, ci, hi, 0)),
+                pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci, a: (bi, ci, hi)),
+                pl.BlockSpec((1, chunk, 1, n),
+                             lambda bi, hi, ci, a: (bi, ci, hi // hpg, 0)),
+                pl.BlockSpec((1, chunk, 1, n),
+                             lambda bi, hi, ci, a: (bi, ci, hi // hpg, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci, a: (bi, ci, hi, 0)),
+                pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci, a: (bi, hi, 0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sp, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt, B, C)
+    return y[:, :s], final

@@ -1,0 +1,54 @@
+"""Production meshes.
+
+Target hardware: TPU v5e-class pods — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI per chip.  Single pod = 16×16 = 256 chips
+(data × model); multi-pod = 2×16×16 = 512 chips with a leading ``pod``
+axis (DCN-connected in real deployments; the dry-run treats it as a
+mesh axis so the pod-level collective schedule is visible in the HLO).
+
+``make_production_mesh`` is a function (not a module constant) so that
+importing this module never touches jax device state — the dry-run must
+set XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+# hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    name: str
+    shape: tuple
+    axes: tuple
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshSpec("pod", (16, 16), ("data", "model"))
+MULTI_POD = MeshSpec("multipod", (2, 16, 16), ("pod", "data", "model"))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    spec = MULTI_POD if multi_pod else SINGLE_POD
+    return jax.make_mesh(
+        spec.shape, spec.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes))
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU tests (same axis names)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

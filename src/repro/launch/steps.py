@@ -1,0 +1,122 @@
+"""Jit-able production step functions: train / prefill / serve(decode).
+
+These are the programs the multi-pod dry-run lowers and the roofline
+analyses — one per assigned input-shape kind:
+
+  train_step   : one SGD(+momentum) step on a global batch, with
+                 microbatch gradient accumulation streamed directly into
+                 the momentum buffer (no separate f32 accumulator — the
+                 update  m ← β·m + Σᵢ gᵢ/n  starts the scan carry at β·m,
+                 saving a full parameter-sized buffer; matters at 671B).
+  prefill_step : full-sequence forward building the decode cache.
+  serve_step   : ONE new token against a seq_len-sized KV/SSM cache.
+
+SGD+momentum is the paper's optimizer family (CyclicFL trains with SGD);
+AdamW is available in repro.optim for ablations but quadruples optimizer
+memory at 671B scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    TransformerConfig, init_decode_cache, decode_step, lm_loss, prefill,
+)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    lr: float = 1e-3
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    n_micro: int = 1              # microbatch accumulation factor
+
+
+def _split_micro(batch: Pytree, n_micro: int) -> Pytree:
+    """(B, ...) -> (n_micro, B/n_micro, ...) taking strided rows so each
+    data shard contributes equally to every microbatch (no resharding)."""
+
+    def split(x):
+        B = x.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        return x.reshape((B // n_micro, n_micro) + x.shape[1:]).swapaxes(0, 1)
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(cfg: TransformerConfig, spec: TrainSpec) -> Callable:
+    """(params, mom, batch) -> (params, mom, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = lm_loss(params, cfg, mb)
+        return loss, metrics
+
+    def train_step(params, mom, batch):
+        if spec.n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            new_mom = jax.tree_util.tree_map(
+                lambda m, g: spec.momentum * m + g.astype(m.dtype), mom, grads)
+        else:
+            micro = _split_micro(batch, spec.n_micro)
+
+            def acc(carry, mb):
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                carry = jax.tree_util.tree_map(
+                    lambda c, g: c + g.astype(c.dtype) / spec.n_micro,
+                    carry, grads)
+                return carry, loss
+
+            mom0 = jax.tree_util.tree_map(lambda m: spec.momentum * m, mom)
+            new_mom, losses = jax.lax.scan(acc, mom0, micro)
+            loss = jnp.mean(losses)
+            metrics = {"loss": loss}
+        if spec.weight_decay:
+            new_mom = jax.tree_util.tree_map(
+                lambda m, p: m + spec.weight_decay * p.astype(m.dtype),
+                new_mom, params)
+        params = jax.tree_util.tree_map(
+            lambda p, m: (p - spec.lr * m).astype(p.dtype), params, new_mom)
+        return params, new_mom, {"loss": metrics["loss"]}
+
+    return train_step
+
+
+def make_prefill_step(cfg: TransformerConfig, max_len: int) -> Callable:
+    """(params, batch) -> (last-token logits, decode cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache, _ = prefill(params, cfg, batch, max_len=max_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: TransformerConfig) -> Callable:
+    """(params, token, cache, cache_len) -> (logits, cache) — ONE token."""
+
+    def serve_step(params, token, cache, cache_len):
+        return decode_step(params, cfg, token, cache, cache_len)
+
+    return serve_step
+
+
+def init_momentum(params: Pytree, dtype=jnp.float32) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype) if jnp.issubdtype(p.dtype, jnp.floating)
+        else jnp.zeros_like(p), params)
+
+
+def momentum_specs(params_spec: Pytree, dtype=jnp.float32) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(
+            p.shape, dtype if jnp.issubdtype(p.dtype, jnp.floating) else p.dtype),
+        params_spec)

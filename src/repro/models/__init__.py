@@ -1,0 +1,17 @@
+from repro.models.transformer import (
+    TransformerConfig,
+    init_lm,
+    lm_loss,
+    lm_forward,
+    prefill,
+    decode_step,
+    init_decode_cache,
+)
+from repro.models.paper_models import (
+    lenet5_init, lenet5_apply,
+    resnet8_init, resnet8_apply,
+    cnn_femnist_init, cnn_femnist_apply,
+    cnn_fashion_init, cnn_fashion_apply,
+    charlstm_init, charlstm_apply,
+    PAPER_MODELS,
+)

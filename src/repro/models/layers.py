@@ -1,0 +1,439 @@
+"""Core neural-net layers in pure JAX (pytree params, init/apply pairs).
+
+Conventions:
+- params are nested dicts of jnp arrays;
+- ``init_*`` takes a PRNG key + shape info and returns params;
+- ``*_apply`` is pure; dtype policy = params stay in ``param_dtype``,
+  activations/compute run in ``dtype`` (usually bf16 on TPU, f32 on CPU).
+- all matmul dims that land on the MXU should be multiples of 128 for the
+  full-size configs; reduced smoke configs may be smaller.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding anchor (§Perf)
+#
+# Under FSDP weights the SPMD partitioner may choose to REPLICATE the
+# activation batch dim rather than all-gather a weight (observed on MLA:
+# attention scores materialized with the full global batch per chip —
+# 16× redundant compute).  The transformer entry points install the
+# model's batch axes here when cfg.shard_activations is set; attention
+# score/output tensors are then anchored batch-first and propagation
+# keeps the rest sharded.
+# ---------------------------------------------------------------------------
+
+_ACT_BATCH_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_activation_batch_axes(axes: Optional[Tuple[str, ...]]) -> None:
+    global _ACT_BATCH_AXES
+    _ACT_BATCH_AXES = tuple(axes) if axes else None
+
+
+def anchor_batch(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin dim 0 (batch) of ``x`` to the installed mesh axes (no-op when
+    no axes are installed)."""
+    if _ACT_BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ax = _ACT_BATCH_AXES if len(_ACT_BATCH_AXES) > 1 else _ACT_BATCH_AXES[0]
+    return jax.lax.with_sharding_constraint(
+        x, P(ax, *([None] * (x.ndim - 1))))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_normal(key, shape, dtype=jnp.float32, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    std = math.sqrt(2.0 / max(fan, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def xavier_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-lim, maxval=lim).astype(dtype)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / norm
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32, std: Optional[float] = None) -> Pytree:
+    wkey, _ = jax.random.split(key)
+    w = normal_init(wkey, (d_in, d_out), std=std if std is not None else d_in ** -0.5,
+                    dtype=dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Pytree, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    dtype = dtype or x.dtype
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Pytree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Pytree, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Pytree:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Pytree, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, S, H, hd) or (B, S, hd); positions: (S,)."""
+    assert positions.ndim == 1, positions.shape
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[:, None].astype(jnp.float32) * freqs  # (S, hd/2)
+    if x.ndim == 4:  # insert head axis
+        angles = angles[:, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / qkv-bias / sliding window)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding window; None = full causal
+    attn_impl: str = "xla"  # xla | pallas | pallas_interpret
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 5)
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": init_linear(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, KH * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, KH * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], H * hd, d, bias=False, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int], q_offset,
+          impl: str = "xla") -> jnp.ndarray:
+    """q: (B, S, H, hd); k/v: (B, T, KH, hd); GQA broadcast inside.
+
+    q_offset: scalar position offset of q[0] relative to k[0] (decode).
+    """
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset,
+                                    interpret=(impl == "pallas_interpret"))
+    B, S, H, hd = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, hd)
+    scale = hd ** -0.5
+    logits = anchor_batch(
+        jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale)
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention(p: Pytree, x: jnp.ndarray, cfg: AttnConfig, positions: jnp.ndarray,
+              kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              cache_len=None) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Full-sequence (train/prefill) or incremental (decode) attention.
+
+    kv_cache: (k_cache, v_cache) of shape (B, T_max, KH, hd).  When given,
+    new k/v are inserted at ``cache_len`` and attention runs over the cache.
+    Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    k = linear(p["wk"], x).reshape(B, S, KH, hd)
+    v = linear(p["wv"], x).reshape(B, S, KH, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        out = _sdpa(q, k, v, causal=True, window=cfg.window, q_offset=0,
+                    impl=cfg.attn_impl)
+        new_cache = (k, v)
+    else:
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, cache_len, 0, 0))
+        out = _sdpa(q, kc, vc, causal=True, window=cfg.window, q_offset=cache_len,
+                    impl=cfg.attn_impl)
+        new_cache = (kc, vc)
+    out = out.reshape(B, S, H * hd)
+    return linear(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek V2/V3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int          # 512
+    q_lora_rank: Optional[int]  # None (v2-lite) or 1536 (v3)
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = init_linear(ks[0], d, cfg.q_lora_rank, dtype=dtype)
+        p["q_a_norm"] = init_rmsnorm(cfg.q_lora_rank, dtype)
+        p["wq_b"] = init_linear(ks[1], cfg.q_lora_rank, H * qk_dim, dtype=dtype)
+    else:
+        p["wq"] = init_linear(ks[0], d, H * qk_dim, dtype=dtype)
+    # joint KV compression + decoupled rope key
+    p["wkv_a"] = init_linear(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype=dtype)
+    p["kv_a_norm"] = init_rmsnorm(cfg.kv_lora_rank, dtype)
+    p["wkv_b"] = init_linear(ks[3], cfg.kv_lora_rank,
+                             H * (cfg.qk_nope_dim + cfg.v_head_dim), dtype=dtype)
+    p["wo"] = init_linear(ks[4], H * cfg.v_head_dim, d, dtype=dtype)
+    return p
+
+
+def mla_attention(p: Pytree, x: jnp.ndarray, cfg: MLAConfig, positions: jnp.ndarray,
+                  kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                  cache_len=None) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """MLA with latent-space cache: cache stores (c_kv, k_rope) only —
+    (B, T, kv_lora_rank) + (B, T, qk_rope_dim) — the paper's memory win.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    if cfg.q_lora_rank:
+        q = linear(p["wq_b"], rmsnorm(p["q_a_norm"], linear(p["wq_a"], x)))
+    else:
+        q = linear(p["wq"], x)
+    q = q.reshape(B, S, H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = linear(p["wkv_a"], x)
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_a_norm"], c_kv)                 # (B, S, r)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B, S, rope_dim), shared across heads
+
+    if kv_cache is not None:
+        cc, kr = kv_cache
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, cache_len, 0))
+        kr = jax.lax.dynamic_update_slice(kr, k_rope.astype(kr.dtype), (0, cache_len, 0))
+        c_kv, k_rope = cc, kr
+        q_offset = cache_len
+        new_cache = (cc, kr)
+    else:
+        q_offset = 0
+        new_cache = (c_kv, k_rope)
+
+    T = c_kv.shape[1]
+    # expand latent -> per-head K_nope, V
+    kv = linear(p["wkv_b"], c_kv).reshape(B, T, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+
+    scale = qk_dim ** -0.5
+    logits = anchor_batch(
+        (jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
+                    k_nope.astype(jnp.float32)) +
+         jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                    k_rope.astype(jnp.float32))) * scale)
+    qpos = q_offset + jnp.arange(S)
+    mask = jnp.arange(T)[None, :] <= qpos[:, None]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, S, H * cfg.v_head_dim).astype(x.dtype)
+    return linear(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs and MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+        "w_up": init_linear(ks[1], d_model, d_ff, dtype=dtype),
+        "w_down": init_linear(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p: Pytree, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP (all assigned archs use gated MLPs)."""
+    return linear(p["w_down"], jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_scoring: str = "softmax"  # softmax (v2) | sigmoid (v3)
+    aux_loss_coef: float = 0.001
+    routed_scaling: float = 1.0
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    std = d ** -0.5
+    p = {
+        "router": {"w": normal_init(ks[0], (d, E), std=std, dtype=jnp.float32)},
+        "experts": {
+            "w_gate": normal_init(ks[1], (E, d, f), std=std, dtype=dtype),
+            "w_up": normal_init(jax.random.fold_in(ks[1], 1), (E, d, f), std=std, dtype=dtype),
+            "w_down": normal_init(jax.random.fold_in(ks[1], 2), (E, f, d), std=f ** -0.5, dtype=dtype),
+        },
+    }
+    if cfg.n_shared:
+        p["shared"] = init_mlp(ks[2], d, cfg.d_ff_shared or cfg.d_ff_expert * cfg.n_shared,
+                               dtype=dtype)
+    return p
+
+
+def moe(p: Pytree, x: jnp.ndarray, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k MoE with gather dispatch / scatter-add combine.
+
+    Returns (out, aux_loss).  Expert weight arrays carry a leading E axis
+    that shards over the mesh ``model`` axis (expert parallelism); XLA
+    SPMD inserts the dispatch collectives.
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, K = cfg.n_experts, cfg.top_k
+
+    router_logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"]["w"])
+    if cfg.router_scoring == "sigmoid":
+        scores = jax.nn.sigmoid(router_logits)
+    else:
+        scores = jax.nn.softmax(router_logits, axis=-1)
+    topk_scores, topk_idx = jax.lax.top_k(scores, K)  # (T, K)
+    # normalize selected weights (deepseek convention)
+    topk_w = topk_scores / (jnp.sum(topk_scores, axis=-1, keepdims=True) + 1e-20)
+    topk_w = topk_w * cfg.routed_scaling
+
+    # ---- load-balance aux loss (Switch-style) ----
+    probs_mean = jnp.mean(jax.nn.softmax(router_logits, axis=-1), axis=0)     # (E,)
+    onehot = jax.nn.one_hot(topk_idx[:, 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(onehot, axis=0)
+    aux = cfg.aux_loss_coef * E * jnp.sum(frac_tokens * probs_mean)
+
+    # ---- capacity dispatch ----
+    C = max(int(math.ceil(K * T / E * cfg.capacity_factor)), 1)
+    flat_expert = topk_idx.reshape(-1)                       # (T*K,)
+    flat_w = topk_w.reshape(-1)
+    # position of each (token, k) within its expert queue
+    eo = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)     # (T*K, E)
+    pos_in_expert = (jnp.cumsum(eo, axis=0) - eo)            # exclusive cumsum
+    slot = jnp.sum(pos_in_expert * eo, axis=-1)              # (T*K,)
+    keep = slot < C
+    # scatter token vectors into (E, C, d)
+    token_idx = jnp.repeat(jnp.arange(T), K)
+    dst_e = jnp.where(keep, flat_expert, 0)
+    dst_c = jnp.where(keep, slot, 0)
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    contrib = jnp.where(keep[:, None], xt[token_idx], 0)
+    buf = buf.at[dst_e, dst_c].add(contrib)
+
+    # ---- expert computation: grouped SwiGLU GEMMs ----
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w["w_gate"].astype(xt.dtype))) * \
+        jnp.einsum("ecd,edf->ecf", buf, w["w_up"].astype(xt.dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, w["w_down"].astype(xt.dtype))
+
+    # ---- combine: gather back + weight ----
+    gathered = y[dst_e, dst_c]                               # (T*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0) * flat_w[:, None].astype(xt.dtype)
+    out = jnp.zeros((T, d), xt.dtype).at[token_idx].add(gathered)
+
+    if cfg.n_shared:
+        out = out + mlp(p["shared"], xt)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,279 @@
+"""Mamba2 (SSD — state-space duality) layer, TPU-adapted.
+
+Follows Dao & Gu (arXiv:2405.21060): scalar-identity A per head, chunked
+computation so the sequence dim becomes matmuls (MXU-friendly) with a
+short sequential recurrence over chunk states.  The GPU formulation's
+warp-level scan does not transfer to TPU; the chunked form is the
+TPU-native equivalent (see DESIGN.md §3/§5).
+
+Layer I/O follows mamba_ssm.Mamba2: fused input projection producing
+(z, x, B, C, dt), short depthwise conv on (x, B, C), SSD core, gated
+RMSNorm, output projection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear, init_rmsnorm, rmsnorm, normal_init
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    ssd_impl: str = "xla"  # xla | pallas | pallas_interpret
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_ssm(key, cfg: SSMConfig, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    p = {
+        "in_proj": init_linear(ks[0], cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": normal_init(ks[1], (cfg.d_conv, cfg.conv_dim), std=cfg.d_conv ** -0.5,
+                              dtype=dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(jnp.float32),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (cfg.n_heads,),
+                                       minval=math.log(cfg.dt_min),
+                                       maxval=math.log(cfg.dt_max))))).astype(jnp.float32),
+        "out_norm": init_rmsnorm(cfg.d_inner, dtype),
+        "out_proj": init_linear(ks[3], cfg.d_inner, cfg.d_model, dtype=dtype),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked, jnp reference path — the Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None,
+                return_final_state: bool = False):
+    """SSD over full sequence.
+
+    x:  (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      positive step sizes (already softplus'd + biased)
+    A:  (h,)           negative per-head decay
+    B:  (b, s, g, n)   input projections (n = d_state), g groups
+    C:  (b, s, g, n)
+    returns y: (b, s, h, p) and optionally final state (b, h, p, n)
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // chunk
+    # reshape into chunks
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    hpg = h // g  # heads per group
+
+    dA = dtc * A[None, None, None, :]            # (b, nc, l, h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)              # within-chunk cumulative log-decay
+
+    # ---- intra-chunk (quadratic attention-like) term ----
+    # L[i,j] = exp(dA_cum[i] - dA_cum[j]) for i >= j
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (b,nc,l,l,h)
+    li = jnp.arange(chunk)
+    causal = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    # scores: C_i . B_j  (group-shared across heads in group)
+    CB = jnp.einsum("bclgn,bcmgn->bclmg", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    CB = jnp.repeat(CB, hpg, axis=-1)            # (b,nc,l,l,h)
+    M = CB * L * dtc[:, :, None, :, :]           # weight by dt_j
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    # state contribution of chunk c: sum_j exp(dA_cum[last] - dA_cum[j]) dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)       # (b,nc,l,h)
+    # (grouped B broadcast over heads-in-group)
+    Bh = jnp.repeat(Bc, hpg, axis=3) if g != h else Bc           # (b,nc,l,h,n)
+    weighted_x = xc.astype(jnp.float32) * (dtc * decay_to_end)[..., None]
+    states = jnp.einsum("bclhn,bclhp->bchpn", Bh.astype(jnp.float32), weighted_x)
+
+    # ---- inter-chunk recurrence over nc chunk states ----
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                   # (b, nc, h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                            # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* this chunk
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final_state, entering = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)                      # (b,nc,h,p,n)
+
+    # ---- inter-chunk output: y_j += C_j . (decay_from_start * state_in) ----
+    decay_from_start = jnp.exp(dA_cum)                           # (b,nc,l,h)
+    Ch = jnp.repeat(Cc, hpg, axis=3) if g != h else Cc           # (b,nc,l,h,n)
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Ch.astype(jnp.float32), entering)
+    y_inter = y_inter * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    if return_final_state:
+        return y.astype(x.dtype), final_state
+    return y.astype(x.dtype)
+
+
+def ssd_reference(x, dt, A, B, C, initial_state=None):
+    """Naive O(s·n) recurrence — oracle for tests (slow, exact)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    Bh = jnp.repeat(B, hpg, axis=2) if g != h else B
+    Ch = jnp.repeat(C, hpg, axis=2) if g != h else C
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * A[None, :])                        # (b,h)
+        state = state * decay[:, :, None, None] + \
+            dtt[:, :, None, None] * xt[:, :, :, None] * Bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(Ch, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# layer apply: full-sequence and single-step decode
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: SSMConfig, zxbcdt: jnp.ndarray):
+    di, g, n, nh = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def ssm_forward(p: Pytree, x: jnp.ndarray, cfg: SSMConfig,
+                return_final_state: bool = False):
+    """Full-sequence forward.  x: (B, S, d_model)."""
+    Bsz, S, _ = x.shape
+    z, xBC, dt = _split_proj(cfg, linear(p["in_proj"], x))
+    # depthwise causal conv over sequence
+    w = p["conv_w"].astype(xBC.dtype)                            # (k, conv_dim)
+    pad = jnp.pad(xBC, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * w[i] for i in range(cfg.d_conv))
+    xBC = jax.nn.silu(conv + p["conv_b"].astype(xBC.dtype))
+    xs, Bmat, Cmat = jnp.split(xBC, [cfg.d_inner, cfg.d_inner + cfg.n_groups * cfg.d_state],
+                               axis=-1)
+    xs = xs.reshape(Bsz, S, cfg.n_heads, cfg.head_dim)
+    Bmat = Bmat.reshape(Bsz, S, cfg.n_groups, cfg.d_state)
+    Cmat = Cmat.reshape(Bsz, S, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])
+
+    if cfg.ssd_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        interp = cfg.ssd_impl == "pallas_interpret"
+        if return_final_state:
+            y, final = kops.ssd_with_state(xs, dt, A, Bmat, Cmat,
+                                           chunk=cfg.chunk, interpret=interp)
+        else:
+            y = kops.ssd(xs, dt, A, Bmat, Cmat, chunk=cfg.chunk,
+                         interpret=interp)
+            final = None
+    else:
+        out = ssd_chunked(xs, dt, A, Bmat, Cmat, cfg.chunk,
+                          return_final_state=return_final_state)
+        y, final = out if return_final_state else (out, None)
+
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    if return_final_state:
+        # decode conv state = last (d_conv-1) *pre-activation* xBC inputs
+        return out, (final, _tail_conv_inputs(p, x, cfg))
+    return out
+
+
+def _tail_conv_inputs(p: Pytree, x: jnp.ndarray, cfg: SSMConfig) -> jnp.ndarray:
+    """Last (d_conv-1) raw xBC inputs — the decode conv state."""
+    _, xBC, _ = _split_proj(cfg, linear(p["in_proj"], x[:, -(cfg.d_conv - 1):]))
+    return xBC
+
+
+def init_ssm_state(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    """Decode-time carried state: (ssm_state, conv_state)."""
+    return (
+        jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+    )
+
+
+def ssm_decode_step(p: Pytree, x: jnp.ndarray, state, cfg: SSMConfig):
+    """Single-token decode.  x: (B, 1, d_model); state from init_ssm_state."""
+    ssm_state, conv_state = state
+    Bsz = x.shape[0]
+    z, xBC, dt = _split_proj(cfg, linear(p["in_proj"], x))
+    xBC = xBC[:, 0]                                              # (B, conv_dim)
+    # roll conv state
+    hist = jnp.concatenate([conv_state, xBC[:, None]], axis=1)   # (B, k, conv_dim)
+    w = p["conv_w"].astype(xBC.dtype)
+    conv = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(xBC.dtype)
+    act = jax.nn.silu(conv)
+    xs, Bmat, Cmat = jnp.split(act, [cfg.d_inner, cfg.d_inner + cfg.n_groups * cfg.d_state],
+                               axis=-1)
+    xs = xs.reshape(Bsz, cfg.n_heads, cfg.head_dim)
+    Bmat = Bmat.reshape(Bsz, cfg.n_groups, cfg.d_state)
+    Cmat = Cmat.reshape(Bsz, cfg.n_groups, cfg.d_state)
+    hpg = cfg.n_heads // cfg.n_groups
+    Bh = jnp.repeat(Bmat, hpg, axis=1)
+    Ch = jnp.repeat(Cmat, hpg, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A[None, :])
+    new_state = ssm_state * decay[:, :, None, None] + \
+        dtv[:, :, None, None] * xs.astype(jnp.float32)[:, :, :, None] * \
+        Bh.astype(jnp.float32)[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32)).astype(x.dtype)
+    y = y + xs * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, 1, cfg.d_inner)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    return out, (new_state, hist[:, 1:])

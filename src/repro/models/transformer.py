@@ -1,0 +1,543 @@
+"""Unified decoder-LM assembly covering all assigned architecture families.
+
+One ``TransformerConfig`` describes dense (GQA), MoE (incl. MLA), SSM
+(Mamba2), hybrid (parallel attn+SSM heads), VLM-backbone and
+audio-backbone models.  Layers with identical structure are stacked and
+driven by ``lax.scan`` (small HLO, fast SPMD partitioning); heterogeneous
+prefixes (dense layers before MoE) are unrolled.
+
+Entry points:
+    init_lm(key, cfg)                        -> params
+    lm_forward(params, cfg, batch)           -> logits (full sequence)
+    lm_loss(params, cfg, batch)              -> (loss, metrics)
+    prefill(params, cfg, batch, max_len)     -> (logits_last, cache)
+    init_decode_cache(cfg, batch, max_len)   -> cache
+    decode_step(params, cfg, token, cache, cache_len) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import (
+    AttnConfig, MLAConfig, MoEConfig,
+    init_attention, attention, init_mla, mla_attention,
+    init_mlp, mlp, init_moe, moe,
+    init_rmsnorm, rmsnorm, init_linear, linear, normal_init,
+)
+from repro.models.ssm import (
+    SSMConfig, init_ssm, ssm_forward, ssm_decode_step, init_ssm_state,
+)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    arch_type: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # attention variant ------------------------------------------------
+    attention: str = "gqa"               # gqa | mla | none
+    window: Optional[int] = None         # sliding-window size (SWA layers)
+    global_attn_layers: Tuple[int, ...] = ()  # full-attn layer ids when window set
+    # MLA ----------------------------------------------------------------
+    kv_lora_rank: int = 0
+    q_lora_rank: Optional[int] = None
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    d_ff_shared: int = 0
+    n_dense_layers: int = 0              # leading dense-FFN layers (deepseek)
+    router_scoring: str = "softmax"
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.001
+    # SSM ----------------------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 128
+    # multi-token prediction (deepseek-v3) --------------------------------
+    mtp: bool = False
+    mtp_loss_weight: float = 0.3
+    # input handling -------------------------------------------------------
+    input_mode: str = "tokens"           # tokens | vlm | embeddings
+    n_prefix_tokens: int = 0             # vlm patch count
+    n_codebooks: int = 1                 # musicgen output heads
+    # numerics / impl ------------------------------------------------------
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    attn_impl: str = "xla"
+    ssd_impl: str = "xla"
+    scan_unroll: Any = 1      # lax.scan unroll for the layer stack; True =
+                              # fully unrolled (dry-run cost correction uses
+                              # this — XLA cost_analysis counts a while body
+                              # ONCE, so scanned stacks undercount by ~L)
+    shard_activations: bool = False   # insert with_sharding_constraint on
+                                      # the residual stream (batch over
+                                      # ``batch_axes``) — §Perf fix for
+                                      # SPMD dropping batch sharding
+                                      # through attention (requires a mesh
+                                      # context with these axis names)
+    batch_axes: Tuple[str, ...] = ("data",)
+    remat: bool = False
+    norm_eps: float = 1e-6
+    logit_dtype: Any = jnp.float32
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+            head_dim=self.resolved_head_dim, qkv_bias=self.qkv_bias,
+            qk_norm=self.qk_norm, rope_theta=self.rope_theta,
+            window=self.window, attn_impl=self.attn_impl)
+
+    def mla_cfg(self) -> MLAConfig:
+        return MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            kv_lora_rank=self.kv_lora_rank, q_lora_rank=self.q_lora_rank,
+            qk_nope_dim=self.qk_nope_dim, qk_rope_dim=self.qk_rope_dim,
+            v_head_dim=self.v_head_dim, rope_theta=self.rope_theta)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            d_model=self.d_model, n_experts=self.n_experts, top_k=self.top_k,
+            d_ff_expert=self.d_ff_expert, n_shared=self.n_shared_experts,
+            d_ff_shared=self.d_ff_shared, capacity_factor=self.capacity_factor,
+            router_scoring=self.router_scoring, aux_loss_coef=self.aux_loss_coef)
+
+    def ssm_cfg(self) -> SSMConfig:
+        return SSMConfig(
+            d_model=self.d_model, d_state=self.ssm_state,
+            head_dim=self.ssm_head_dim, expand=self.ssm_expand,
+            n_groups=self.ssm_n_groups, chunk=self.ssm_chunk,
+            ssd_impl=self.ssd_impl)
+
+    @property
+    def has_attn(self) -> bool:
+        return self.arch_type != "ssm"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.arch_type in ("ssm", "hybrid")
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.d_ff > 0 or self.is_moe
+
+    def validate(self) -> None:
+        assert self.arch_type in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"), self.arch_type
+        if self.has_attn and self.attention == "gqa":
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA head mismatch"
+        if self.is_moe:
+            assert 0 < self.top_k <= self.n_experts
+        if self.arch_type == "ssm":
+            assert self.ssm_state > 0
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: TransformerConfig, moe_layer: bool) -> Pytree:
+    ks = jax.random.split(key, 8)
+    pd = cfg.param_dtype
+    p: Dict[str, Pytree] = {}
+    if cfg.has_attn:
+        p["attn_norm"] = init_rmsnorm(cfg.d_model, pd)
+        if cfg.attention == "mla":
+            p["attn"] = init_mla(ks[0], cfg.mla_cfg(), pd)
+        else:
+            p["attn"] = init_attention(ks[0], cfg.attn_cfg(), pd)
+    if cfg.has_ssm:
+        if cfg.arch_type == "ssm":
+            p["ssm_norm"] = init_rmsnorm(cfg.d_model, pd)
+        p["ssm"] = init_ssm(ks[1], cfg.ssm_cfg(), pd)
+    if cfg.has_ffn:
+        p["ffn_norm"] = init_rmsnorm(cfg.d_model, pd)
+        if moe_layer:
+            p["moe"] = init_moe(ks[2], cfg.moe_cfg(), pd)
+        elif cfg.d_ff > 0:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, pd)
+    return p
+
+
+def _block_apply(p: Pytree, x: jnp.ndarray, cfg: TransformerConfig,
+                 positions: jnp.ndarray, moe_layer: bool,
+                 is_global: Optional[jnp.ndarray] = None,
+                 cache: Optional[Pytree] = None, cache_len=None):
+    """One decoder block.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Pytree] = {}
+
+    if cfg.arch_type == "hybrid":
+        # Hymba: attention heads and mamba heads consume the same normed
+        # input in parallel; outputs are averaged (arXiv:2411.13676 eq. 3).
+        xn = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+        attn_out, kv = _run_attention(p, xn, cfg, positions, is_global,
+                                      cache.get("kv") if cache else None, cache_len)
+        if cache is not None:
+            ssm_out, ssm_state = _run_ssm_cached(p["ssm"], xn, cache["ssm"], cfg)
+            new_cache["ssm"] = ssm_state
+        else:
+            ssm_out = ssm_forward(p["ssm"], xn, cfg.ssm_cfg())
+        new_cache["kv"] = kv
+        x = x + 0.5 * (attn_out + ssm_out)
+    elif cfg.arch_type == "ssm":
+        xn = rmsnorm(p["ssm_norm"], x, cfg.norm_eps)
+        if cache is not None:
+            out, ssm_state = _run_ssm_cached(p["ssm"], xn, cache["ssm"], cfg)
+            new_cache["ssm"] = ssm_state
+        else:
+            out = ssm_forward(p["ssm"], xn, cfg.ssm_cfg())
+        x = x + out
+    else:
+        xn = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+        attn_out, kv = _run_attention(p, xn, cfg, positions, is_global,
+                                      cache.get("kv") if cache else None, cache_len)
+        new_cache["kv"] = kv
+        x = x + attn_out
+
+    if cfg.has_ffn:
+        xn = rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+        if moe_layer:
+            out, aux = moe(p["moe"], xn, cfg.moe_cfg())
+        else:
+            out = mlp(p["mlp"], xn)
+        x = x + out
+    return x, new_cache, aux
+
+
+def _run_ssm_cached(ssm_params, xn, ssm_state, cfg: TransformerConfig):
+    """Cached SSM: single-token decode updates the recurrent state; a
+    multi-token call (prefill) runs the chunked scan and emits the final
+    state for subsequent decode steps."""
+    if xn.shape[1] == 1:
+        return ssm_decode_step(ssm_params, xn, ssm_state, cfg.ssm_cfg())
+    out, (final, conv_tail) = ssm_forward(ssm_params, xn, cfg.ssm_cfg(),
+                                          return_final_state=True)
+    return out, (final, conv_tail.astype(ssm_state[1].dtype))
+
+
+def _run_attention(p, xn, cfg: TransformerConfig, positions, is_global,
+                   kv_cache, cache_len):
+    if cfg.attention == "mla":
+        return mla_attention(p["attn"], xn, cfg.mla_cfg(), positions,
+                             kv_cache=kv_cache, cache_len=cache_len)
+    acfg = cfg.attn_cfg()
+    if cfg.window is not None and is_global is not None:
+        # per-layer SWA/global choice carried as a traced flag: a "window"
+        # larger than any sequence is equivalent to full attention.
+        eff_window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(cfg.window))
+        acfg = dataclasses.replace(acfg, window=eff_window)
+    return attention(p["attn"], xn, acfg, positions,
+                     kv_cache=kv_cache, cache_len=cache_len)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: TransformerConfig) -> Pytree:
+    cfg.validate()
+    ks = jax.random.split(key, 8)
+    pd = cfg.param_dtype
+    params: Dict[str, Pytree] = {}
+    if cfg.input_mode in ("tokens", "vlm"):
+        params["embed"] = normal_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                      std=0.02, dtype=pd)
+    # scanned identical blocks
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    block_keys = jax.random.split(ks[1], n_scan)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_block(k, cfg, moe_layer=cfg.is_moe))(block_keys)
+    # unrolled dense prefix (deepseek v2/v3 first layers are dense-FFN)
+    if cfg.n_dense_layers:
+        dk = jax.random.split(ks[2], cfg.n_dense_layers)
+        params["dense_blocks"] = [
+            _init_block(dk[i], cfg, moe_layer=False) for i in range(cfg.n_dense_layers)]
+    params["final_norm"] = init_rmsnorm(cfg.d_model, pd)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(
+            ks[3], (cfg.d_model, cfg.vocab_size * cfg.n_codebooks),
+            std=cfg.d_model ** -0.5, dtype=pd)
+    if cfg.mtp:
+        params["mtp"] = {
+            "block": _init_block(ks[4], cfg, moe_layer=cfg.is_moe),
+            "proj": init_linear(ks[5], 2 * cfg.d_model, cfg.d_model, dtype=pd),
+            "norm_prev": init_rmsnorm(cfg.d_model, pd),
+            "norm_emb": init_rmsnorm(cfg.d_model, pd),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_shard(x: jnp.ndarray, cfg: TransformerConfig) -> jnp.ndarray:
+    """Pin the residual stream's batch dim to ``cfg.batch_axes``.
+
+    SPMD sharding propagation can DROP batch sharding through the
+    attention einsums (observed: deepseek-v3 train_4k ran attention with
+    the full global batch replicated per chip — 16× wasted compute).
+    Anchors at block boundaries AND inside attention (layers.anchor_batch
+    on the score tensors, installed by ``_install_act_sharding``)."""
+    if not cfg.shard_activations:
+        return x
+    return L.anchor_batch(x)
+
+
+def _install_act_sharding(cfg: TransformerConfig) -> None:
+    """Trace-time switch for the in-attention batch anchors."""
+    L.set_activation_batch_axes(cfg.batch_axes if cfg.shard_activations
+                                else None)
+
+
+def _embed_inputs(params, cfg: TransformerConfig, batch: Dict[str, jnp.ndarray]):
+    """Returns (x, positions, text_offset)."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        return x, positions, 0
+    if cfg.input_mode == "vlm":
+        # stub frontend: precomputed patch embeddings + token embeddings
+        pe = batch["patch_embeds"].astype(cfg.dtype)       # (B, P, d)
+        te = params["embed"][batch["tokens"]].astype(cfg.dtype)
+        x = jnp.concatenate([pe, te], axis=1)
+        positions = jnp.arange(x.shape[1])
+        return x, positions, pe.shape[1]
+    if cfg.input_mode == "embeddings":
+        # audio stub: precomputed EnCodec frame embeddings
+        x = batch["frame_embeds"].astype(cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        return x, positions, 0
+    raise ValueError(cfg.input_mode)
+
+
+def _global_flags(cfg: TransformerConfig) -> Optional[jnp.ndarray]:
+    if cfg.window is None:
+        return None
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    flags = jnp.zeros((n_scan,), bool)
+    for idx in cfg.global_attn_layers:
+        if 0 <= idx - cfg.n_dense_layers < n_scan:
+            flags = flags.at[idx - cfg.n_dense_layers].set(True)
+    return flags
+
+
+def _run_blocks(params, cfg: TransformerConfig, x, positions,
+                caches=None, cache_len=None):
+    """Dense-prefix blocks (unrolled) then scanned stack.
+
+    caches: None for full-sequence, else dict with 'dense' (list) and
+    'scan' (stacked, leading L axis) entries.
+    Returns (x, new_caches, total_aux).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_dense = []
+    for i in range(cfg.n_dense_layers):
+        c = caches["dense"][i] if caches is not None else None
+        x, nc, aux = _block_apply(params["dense_blocks"][i], x, cfg, positions,
+                                  moe_layer=False, is_global=None,
+                                  cache=c, cache_len=cache_len)
+        new_dense.append(nc)
+        aux_total += aux
+
+    flags = _global_flags(cfg)
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        if caches is not None:
+            bp, flag, cache_l = xs
+        else:
+            bp, flag = xs
+            cache_l = None
+        h, nc, aux = _block_apply(bp, h, cfg, positions,
+                                  moe_layer=cfg.is_moe, is_global=flag,
+                                  cache=cache_l, cache_len=cache_len)
+        h = _maybe_shard(h, cfg)
+        return (h, aux_acc + aux), nc
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and caches is None) else body
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    flag_xs = flags if flags is not None else jnp.zeros((n_scan,), bool)
+    if caches is not None:
+        xs = (params["blocks"], flag_xs, caches["scan"])
+    else:
+        xs = (params["blocks"], flag_xs)
+    (x, aux_total2), scan_caches = jax.lax.scan(body_fn, (x, aux_total), xs,
+                                                unroll=cfg.scan_unroll)
+    new_caches = {"dense": new_dense, "scan": scan_caches} if caches is not None else None
+    return x, new_caches, aux_total2
+
+
+def _logits(params, cfg: TransformerConfig, x: jnp.ndarray) -> jnp.ndarray:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if cfg.n_codebooks > 1:
+        B, S, _ = logits.shape
+        logits = logits.reshape(B, S, cfg.n_codebooks, cfg.vocab_size)
+    return logits.astype(cfg.logit_dtype)
+
+
+def lm_forward(params, cfg: TransformerConfig, batch: Dict[str, jnp.ndarray]):
+    """Full-sequence forward -> (logits, aux_loss, hidden)."""
+    _install_act_sharding(cfg)
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = _maybe_shard(x, cfg)
+    x, _, aux = _run_blocks(params, cfg, x, positions)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), aux, x
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray, ignore: int = -1):
+    """Cross-entropy with ignore-label masking; logits (..., V)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0), mask
+
+
+def lm_loss(params, cfg: TransformerConfig, batch: Dict[str, jnp.ndarray]):
+    """Next-token loss.  batch['labels']:
+       tokens/embeddings mode: (B, S) — or (B, S, n_codebooks) for audio;
+       vlm mode: (B, S_text) — prefix positions are excluded automatically.
+    """
+    logits, aux, hidden = lm_forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.input_mode == "vlm":
+        # drop image-prefix positions; predict text tokens only
+        P = batch["patch_embeds"].shape[1]
+        logits = logits[:, P:]
+    loss, mask = _xent(logits, labels)
+    metrics = {"xent": loss, "aux": aux}
+    total = loss + aux
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(params, cfg, batch, hidden)
+        metrics["mtp"] = mtp_loss
+        total = total + cfg.mtp_loss_weight * mtp_loss
+    metrics["loss"] = total
+    return total, metrics
+
+
+def _mtp_loss(params, cfg: TransformerConfig, batch, hidden):
+    """DeepSeek-V3 multi-token prediction (depth 1): combine the main
+    trunk's hidden state at position i with the embedding of token i+1 to
+    predict token i+2 through one extra block."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    mp = params["mtp"]
+    h_prev = rmsnorm(mp["norm_prev"], hidden[:, : S - 1])
+    emb_next = rmsnorm(mp["norm_emb"],
+                       params["embed"][tokens[:, 1:]].astype(cfg.dtype))
+    h = linear(mp["proj"], jnp.concatenate([h_prev, emb_next], axis=-1))
+    positions = jnp.arange(S - 1)
+    h, _, _ = _block_apply(mp["block"], h, cfg, positions, moe_layer=cfg.is_moe)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(params, cfg, h)
+    labels = batch["labels"][:, 1:]  # labels[i] = token i+1 => shift one more
+    loss, _ = _xent(logits, labels)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def _layer_cache_struct(cfg: TransformerConfig, batch: int, max_len: int):
+    """Cache pytree for ONE block (used stacked for the scan stack)."""
+    c: Dict[str, Any] = {}
+    if cfg.has_attn:
+        if cfg.attention == "mla":
+            c["kv"] = (
+                jnp.zeros((batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+                jnp.zeros((batch, max_len, cfg.qk_rope_dim), cfg.dtype),
+            )
+        else:
+            hd, KH = cfg.resolved_head_dim, cfg.n_kv_heads
+            c["kv"] = (
+                jnp.zeros((batch, max_len, KH, hd), cfg.dtype),
+                jnp.zeros((batch, max_len, KH, hd), cfg.dtype),
+            )
+    if cfg.has_ssm:
+        c["ssm"] = init_ssm_state(cfg.ssm_cfg(), batch, cfg.dtype)
+    return c
+
+
+def init_decode_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    one = _layer_cache_struct(cfg, batch, max_len)
+    scan_cache = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_scan,) + x.shape), one)
+    dense = [
+        _layer_cache_struct(cfg, batch, max_len) for _ in range(cfg.n_dense_layers)]
+    return {"dense": dense, "scan": scan_cache}
+
+
+def prefill(params, cfg: TransformerConfig, batch: Dict[str, jnp.ndarray],
+            max_len: int):
+    """Process the prompt, build the decode cache.  Returns
+    (last-position logits, cache, prompt_len)."""
+    _install_act_sharding(cfg)
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = _maybe_shard(x, cfg)
+    S = x.shape[1]
+    caches = init_decode_cache(cfg, x.shape[0], max_len)
+    # full-sequence pass but inserting k/v into the preallocated cache
+    x, new_caches, _ = _run_blocks(params, cfg, x, positions,
+                                   caches=caches, cache_len=0)
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _logits(params, cfg, x), new_caches, S
+
+
+def decode_step(params, cfg: TransformerConfig, token: jnp.ndarray,
+                caches, cache_len):
+    """One decode step.  token: (B, 1) int32 (or (B,1,d) embeddings for
+    the audio stub); cache_len: scalar count of valid cache positions.
+    Returns (logits (B,1,V[,C]), new_caches).
+    """
+    _install_act_sharding(cfg)
+    if cfg.input_mode == "embeddings":
+        x = token.astype(cfg.dtype)
+    else:
+        x = params["embed"][token].astype(cfg.dtype)
+    positions = cache_len + jnp.arange(1)
+    x, new_caches, _ = _run_blocks(params, cfg, x, positions,
+                                   caches=caches, cache_len=cache_len)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), new_caches

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    sgd,
+    adamw,
+    apply_updates,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    exponential_decay,
+    cosine_decay,
+    warmup_cosine,
+)

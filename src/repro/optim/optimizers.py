@@ -1,0 +1,114 @@
+"""Minimal optax-style optimizers in pure JAX.
+
+The paper's experiments use SGD with momentum + weight decay + per-round
+exponential lr decay; AdamW is provided for the LLM-class assigned
+architectures.  An Optimizer is an (init, update) pair over pytrees; state
+is itself a pytree so it shards/checkpoints like parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_math as tm
+
+Pytree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], OptState]
+    update: Callable[[Pytree, OptState, Pytree], tuple]  # (grads, state, params) -> (updates, state)
+
+    def apply(self, grads: Pytree, state: OptState, params: Pytree):
+        updates, new_state = self.update(grads, state, params)
+        return apply_updates(params, updates), new_state
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD + heavyball momentum + decoupled weight decay (paper default)."""
+    sched = _as_schedule(lr)
+    use_momentum = momentum != 0.0
+
+    def init(params):
+        inner = tm.zeros_like(params) if use_momentum else ()
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state, params):
+        step_lr = sched(state.step)
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if use_momentum:
+            buf = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(m.dtype), state.inner, grads)
+            if nesterov:
+                eff = jax.tree_util.tree_map(lambda g, m: g + momentum * m, grads, buf)
+            else:
+                eff = buf
+            inner = buf
+        else:
+            eff = grads
+            inner = ()
+        updates = jax.tree_util.tree_map(lambda g: -step_lr * g, eff)
+        return updates, OptState(step=state.step + 1, inner=inner)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamWState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner=AdamWState(mu=tm.zeros_like(params), nu=tm.zeros_like(params)),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        step_lr = sched(state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.inner.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.inner.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(u.dtype)
+            return -step_lr * u
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, OptState(step=step, inner=AdamWState(mu=mu, nu=nu))
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,38 @@
+"""Learning-rate schedules.  The paper decays lr to 99.8% per round."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr: float, decay_rate: float = 0.998, steps_per_round: int = 1):
+    """Paper schedule: lr *= decay_rate once per FL round."""
+
+    def sched(step):
+        rounds = jnp.floor_divide(step, steps_per_round).astype(jnp.float32)
+        return jnp.asarray(lr, jnp.float32) * decay_rate ** rounds
+
+    return sched
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return sched
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def sched(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched

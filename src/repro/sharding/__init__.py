@@ -1,0 +1,6 @@
+from repro.sharding.rules import (
+    DATA, MODEL, POD,
+    param_pspecs, param_shardings,
+    batch_pspecs, batch_shardings,
+    replicated,
+)

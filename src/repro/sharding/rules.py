@@ -1,0 +1,242 @@
+"""Parameter/batch partition rules: FSDP (data) × tensor/expert (model).
+
+Layout policy (MaxText-style logical rules, expressed as path-pattern →
+PartitionSpec):
+
+  embeddings / lm_head  : vocab on ``model``, d_model on ``data``
+  attention / MLP in-proj: d_in on ``data`` (FSDP), d_out heads/ffn on
+                           ``model`` (TP)
+  out-proj / down-proj   : transposed — contraction dim on ``model``
+  MoE experts            : expert axis on ``model`` (expert parallelism),
+                           d_model on ``data``
+  SSM                    : in/out projections like MLP; conv + per-head
+                           scalars on ``model``'s head shards
+  norms / small vectors  : replicated
+
+Every rule degrades gracefully: if a dim is not divisible by the mesh
+axis it falls back to replication on that axis, so the same rules drive
+the 16×16 pod, the 2×16×16 multi-pod and single-device CPU tests.
+Stacked scan layers (leading L axis) are handled by left-padding specs
+with None to the leaf rank.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+DATA, MODEL, POD = "data", "model", "pod"
+
+# (path regex, spec for the leaf's LOGICAL (unstacked) trailing dims)
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(^|/)embed$",                          (MODEL, DATA)),
+    (r"(^|/)lm_head$",                        (DATA, MODEL)),
+    # fused in-projections: (d_in, d_out) with d_out sharded over model
+    (r"(wq|wk|wv|wq_a|wq_b|wkv_a|wkv_b|w_gate|w_up|in_proj|proj)/w$", (DATA, MODEL)),
+    # out-projections: contraction dim over model
+    (r"(wo|w_down|out_proj)/w$",              (MODEL, DATA)),
+    # MoE expert banks: expert-parallel over model
+    (r"experts/w_gate$",                      (MODEL, DATA, None)),
+    (r"experts/w_up$",                        (MODEL, DATA, None)),
+    (r"experts/w_down$",                      (MODEL, None, DATA)),
+    (r"router/w$",                            (None, None)),
+    # ssm conv + per-head params follow the d_inner/model sharding
+    (r"conv_w$",                              (None, MODEL)),
+    (r"conv_b$",                              (MODEL,)),
+    (r"(A_log|D|dt_bias)$",                   (None,)),
+    # in-proj biases live on the model-sharded output dim
+    (r"(wq|wk|wv|w_gate|w_up|in_proj)/b$",    (MODEL,)),
+    (r"/b$",                                  (None,)),
+    (r"(scale|bias)$",                        (None,)),
+)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis_size(ax, axis_sizes: dict) -> int:
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= axis_sizes.get(a, 1)
+        return n
+    return axis_sizes.get(ax, 1)
+
+
+def _fit_axes(spec: Sequence, shape: Tuple[int, ...], axis_sizes: dict) -> P:
+    """Left-pad to rank; drop axes that don't divide the dim evenly.
+    Entries may be axis names or tuples of axis names (combined axes)."""
+    spec = list(spec)
+    pad = len(shape) - len(spec)
+    if pad < 0:                       # leaf smaller than rule (degenerate)
+        spec = spec[-len(shape):] if shape else []
+        pad = 0
+    full = [None] * pad + spec
+    out = []
+    for dim, ax in zip(shape, full):
+        n = _axis_size(ax, axis_sizes)
+        if ax is not None and n > 1 and dim % n == 0:
+            out.append(tuple(ax) if isinstance(ax, (tuple, list)) else ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# Layouts (beyond-paper perf knob — EXPERIMENTS.md §Perf):
+#   fsdp_tp   : the default above — FSDP over ``data``, tensor/expert
+#               parallel over ``model``.  Right for big models; for small
+#               ones the per-layer TP activation all-reduce dominates.
+#   fsdp_only : NO tensor parallelism — every ``model``-axis rule entry
+#               becomes the combined (data, model) FSDP axis, so params
+#               are sharded 256-way and the only collectives are the
+#               per-step param all-gather + grad reduce-scatter.
+#   replicated: params fully replicated (inference layout for models
+#               that fit HBM — removes the per-use FSDP all-gather
+#               entirely; batch still shards over all axes).
+LAYOUTS = ("fsdp_tp", "fsdp_only", "replicated")
+
+
+def _apply_layout(rule: Sequence, layout: str, mesh: Mesh) -> Sequence:
+    if layout == "fsdp_tp" or layout not in LAYOUTS:
+        return rule
+    if layout == "replicated":
+        return [None] * len(rule)
+    combined = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    out = []
+    used = False
+    for ax in rule:
+        if ax in (DATA, MODEL) and not used:
+            out.append(combined)      # first shardable dim gets full FSDP
+            used = True
+        else:
+            out.append(None)
+    return out
+
+
+def param_pspecs(params_tree: Pytree, mesh: Mesh,
+                 layout: str = "fsdp_tp") -> Pytree:
+    """PartitionSpec tree matching ``params_tree`` (abstract or concrete)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        for pattern, rule in _PARAM_RULES:
+            if re.search(pattern, ps):
+                specs.append(_fit_axes(_apply_layout(rule, layout, mesh),
+                                       shape, axis_sizes))
+                break
+        else:
+            specs.append(P())         # unmatched: replicate
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_tree: Pytree, mesh: Mesh,
+                    layout: str = "fsdp_tp") -> Pytree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_pspecs(params_tree, mesh, layout))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache sharding
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh, layout: str = "fsdp_tp") -> Tuple[str, ...]:
+    if layout in ("fsdp_only", "replicated"):
+        return tuple(a for a in (POD, DATA, MODEL) if a in mesh.axis_names)
+    return tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+
+
+def batch_pspecs(batch_tree: Pytree, mesh: Mesh,
+                 layout: str = "fsdp_tp") -> Pytree:
+    """Shard every batch/cache leaf's leading batch dim over (pod, data)
+    — or over ALL axes for the fsdp_only layout; when the batch dim is
+    too small (long_500k B=1), fall back to sharding the sequence dim
+    over ``data`` so giant KV caches still distribute."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = _batch_axes(mesh, layout)
+    b_total = 1
+    for a in baxes:
+        b_total *= axis_sizes[a]
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        if shape[0] % b_total == 0 and shape[0] >= b_total:
+            return P(baxes if len(baxes) > 1 else baxes[0],
+                     *([None] * (len(shape) - 1)))
+        # sequence-dim fallback (dim 1 = time for caches / long decode)
+        if len(shape) >= 2 and shape[1] % axis_sizes.get(DATA, 1) == 0 \
+                and shape[1] >= axis_sizes.get(DATA, 1) and axis_sizes.get(DATA, 1) > 1:
+            return P(None, DATA, *([None] * (len(shape) - 2)))
+        return P()
+
+    return jax.tree_util.tree_map(leaf_spec, batch_tree)
+
+
+def batch_shardings(batch_tree: Pytree, mesh: Mesh,
+                    layout: str = "fsdp_tp") -> Pytree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  batch_pspecs(batch_tree, mesh, layout))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# decode-cache sharding
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache_tree: Pytree, mesh: Mesh, batch_size: int) -> Pytree:
+    """Generic KV/SSM-cache layout.
+
+    Leaves are either per-layer ``(B, ...)`` or scan-stacked ``(L, B, ...)``.
+    Policy: shard the batch dim over (pod, data); then shard ONE more dim
+    over ``model`` — the largest trailing dim divisible by the axis (KV
+    heads, MLA latent rank, SSM head dim, or the time axis when batch is
+    too small to shard, e.g. long_500k's B=1 giant cache).
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = _batch_axes(mesh)
+    b_total = 1
+    for a in baxes:
+        b_total *= axis_sizes[a]
+    m = axis_sizes.get(MODEL, 1)
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        # locate the batch dim: 0 for per-layer leaves, 1 for scan-stacked
+        bdim = None
+        if shape[0] == batch_size:
+            bdim = 0
+        elif len(shape) > 1 and shape[1] == batch_size:
+            bdim = 1
+        spec: list = [None] * len(shape)
+        if bdim is not None and batch_size % b_total == 0 and batch_size >= b_total:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        # one model-sharded dim: the largest eligible dim after the batch dim
+        if m > 1:
+            start = (bdim + 1) if bdim is not None else 1
+            cands = [(shape[d], d) for d in range(start, len(shape))
+                     if shape[d] % m == 0 and shape[d] >= m]
+            if cands:
+                spec[max(cands)[1]] = MODEL
+        return P(*spec)
+
+    return jax.tree_util.tree_map(leaf_spec, cache_tree)
+
+
+def cache_shardings(cache_tree: Pytree, mesh: Mesh, batch_size: int) -> Pytree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  cache_pspecs(cache_tree, mesh, batch_size))

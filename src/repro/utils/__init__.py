@@ -1,0 +1,2 @@
+from repro.utils import tree_math
+from repro.utils.registry import Registry

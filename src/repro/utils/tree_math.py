@@ -1,0 +1,139 @@
+"""Pytree arithmetic used throughout the FL stack.
+
+Federated algorithms are pytree algebra: weighted averages of client
+models (FedAvg), model deltas (server momentum / SCAFFOLD control
+variates), prox terms (FedProx), and parameter-space distances (Moon's
+representation anchors, sharpness probes).  Everything here is pure and
+jit-friendly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_map(fn: Callable, *trees: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def add(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(jnp.add, a, b)
+
+
+def sub(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(jnp.subtract, a, b)
+
+
+def scale(a: Pytree, s) -> Pytree:
+    return tree_map(lambda x: x * s, a)
+
+
+def add_scaled(a: Pytree, b: Pytree, s) -> Pytree:
+    """a + s * b, fused per-leaf."""
+    return tree_map(lambda x, y: x + s * y, a, b)
+
+
+def zeros_like(a: Pytree) -> Pytree:
+    return tree_map(jnp.zeros_like, a)
+
+
+def ones_like(a: Pytree) -> Pytree:
+    return tree_map(jnp.ones_like, a)
+
+
+def weighted_mean(trees: Sequence[Pytree], weights: Sequence[float] | jnp.ndarray) -> Pytree:
+    """FedAvg aggregation: sum_i w_i * tree_i / sum_i w_i."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    total = jnp.sum(w)
+    norm = w / total
+
+    def combine(*leaves):
+        acc = leaves[0] * norm[0]
+        for i in range(1, len(leaves)):
+            acc = acc + leaves[i] * norm[i]
+        return acc
+
+    return tree_map(combine, *trees)
+
+
+def stacked_weighted_mean(stacked: Pytree, weights: jnp.ndarray) -> Pytree:
+    """Aggregation over a leading client axis (vmapped client training).
+
+    ``stacked`` leaves have shape (n_clients, ...); returns the weighted
+    mean over axis 0.  This is the jit-friendly form used inside the
+    simulation loop and maps directly onto a psum on hardware.
+    """
+    w = weights / jnp.sum(weights)
+
+    def combine(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * wb, axis=0)
+
+    return tree_map(combine, stacked)
+
+
+def dot(a: Pytree, b: Pytree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree_map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def squared_norm(a: Pytree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree_map(lambda x: jnp.vdot(x, x), a))
+    return sum(leaves)
+
+
+def norm(a: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(squared_norm(a))
+
+
+def distance(a: Pytree, b: Pytree) -> jnp.ndarray:
+    return norm(sub(a, b))
+
+
+def cosine_similarity(a: Pytree, b: Pytree, eps: float = 1e-12) -> jnp.ndarray:
+    return dot(a, b) / (norm(a) * norm(b) + eps)
+
+
+def count_params(a: Pytree) -> int:
+    return sum(int(math.prod(x.shape)) for x in jax.tree_util.tree_leaves(a))
+
+
+def size_bytes(a: Pytree) -> int:
+    return sum(int(math.prod(x.shape)) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))
+
+
+def cast(a: Pytree, dtype) -> Pytree:
+    return tree_map(lambda x: x.astype(dtype), a)
+
+
+def random_like(key: jax.Array, a: Pytree, scale_: float = 1.0) -> Pytree:
+    """Gaussian tree with the same structure — used by sharpness probes."""
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    noise = [jax.random.normal(k, l.shape, l.dtype if jnp.issubdtype(l.dtype, jnp.floating) else jnp.float32) * scale_
+             for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noise)
+
+
+def filter_normalize(direction: Pytree, reference: Pytree, eps: float = 1e-10) -> Pytree:
+    """Filter-wise normalization from Li et al. (NeurIPS'18) loss-landscape
+    visualization: scale each direction leaf to the norm of the reference
+    leaf.  Used by the Fig-7 flatness probe."""
+
+    def _norm_leaf(d, r):
+        dn = jnp.linalg.norm(d.reshape(-1))
+        rn = jnp.linalg.norm(r.reshape(-1))
+        return d * (rn / (dn + eps))
+
+    return tree_map(_norm_leaf, direction, reference)
+
+
+def global_clip(a: Pytree, max_norm: float) -> Pytree:
+    n = norm(a)
+    factor = jnp.minimum(1.0, max_norm / (n + 1e-12))
+    return scale(a, factor)

@@ -1,0 +1,34 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests must see the
+single real CPU device (the 512-device override belongs ONLY to
+repro.launch.dryrun)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_text_batch(cfg, B=2, S=32, key=None):
+    """Random token batch (with labels) for a reduced config."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.input_mode == "vlm":
+        P = cfg.n_prefix_tokens
+        toks = jax.random.randint(k1, (B, S - P), 0, cfg.vocab_size)
+        return {
+            "patch_embeds": jax.random.normal(k2, (B, P, cfg.d_model), cfg.dtype),
+            "tokens": toks,
+            "labels": jnp.roll(toks, -1, axis=1),
+        }
+    # embeddings (audio)
+    lbl_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    return {
+        "frame_embeds": jax.random.normal(k2, (B, S, cfg.d_model), cfg.dtype),
+        "labels": jax.random.randint(k1, lbl_shape, 0, cfg.vocab_size),
+    }

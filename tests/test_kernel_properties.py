@@ -1,0 +1,78 @@
+"""Hypothesis shape/dtype sweeps for the Pallas kernels (interpret mode)
+against the pure-jnp oracles — beyond the fixed grids in
+test_kernels.py, these explore the padding/blocking edge space.
+
+Examples are bounded small (interpret mode executes the kernel body in
+Python) and deadlines disabled.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@given(
+    B=st.integers(1, 2),
+    S=st.sampled_from([64, 96, 128, 160]),       # incl. non-block multiples
+    KH=st.sampled_from([1, 2, 4]),
+    G=st.integers(1, 3),                          # heads per kv head
+    hd=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_shape_sweep(B, S, KH, G, hd, seed):
+    # the kernel is causal-only by design (decoder-only archs)
+    H = KH * G
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@given(
+    S=st.sampled_from([32, 48, 64, 96]),          # padding path at 48/96
+    H=st.sampled_from([1, 2, 4]),
+    P=st.sampled_from([16, 32]),
+    N=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=12, deadline=None)
+def test_ssd_scan_shape_sweep(S, H, P, N, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B = 1
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, 1, N), jnp.float32)
+    C = jax.random.normal(ks[4], (B, S, 1, N), jnp.float32)
+    y, final = ssd_scan(x, dt, A, Bm, C, chunk=chunk, interpret=True)
+    y_ref, final_ref = ref.ssd_ref(x, dt, A, Bm, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=3e-3, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(final_ref),
+                               atol=3e-3, rtol=3e-3)
+
+
+@given(seed=st.integers(0, 2**30), q_offset=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_decode_offset_sweep(seed, q_offset):
+    """Single-query decode against a 128-cache at arbitrary offsets."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=jnp.int32(q_offset),
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)

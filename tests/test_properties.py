@@ -1,0 +1,281 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Targets the algebra the FL stack rests on — if any of these break, every
+higher-level result is silently wrong:
+
+  - Table IV closed forms == a step-by-step ledger simulation, for ALL
+    (algorithm, K, T, X) — the accounting identity.
+  - Dirichlet partitioning is a disjoint cover with min-size guarantee.
+  - tree_math aggregation identities (FedAvg = convex combination).
+  - optimizer algebra (SGD/AdamW step identities, clipping bound).
+  - checkpoint save/load round-trips arbitrary nested pytrees.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm_accounting as acc
+from repro.core.comm_accounting import CommLedger
+from repro.data.partition import dirichlet_partition, partition_stats
+from repro.optim.optimizers import adamw, sgd
+from repro.utils import tree_math as tm
+
+# ---------------------------------------------------------------------------
+# Table IV accounting identity
+# ---------------------------------------------------------------------------
+
+ALGOS = ("fedavg", "fedprox", "moon", "scaffold")
+
+
+class _FakeParams:
+    """Stands in for a params pytree of a given byte size."""
+
+    def __init__(self, n_bytes):
+        self.arr = np.zeros(n_bytes, dtype=np.uint8)
+
+    def tree(self):
+        return {"w": self.arr}
+
+
+@given(algo=st.sampled_from(ALGOS),
+       k_p1=st.integers(1, 64), t_cyc=st.integers(0, 40),
+       k_p2=st.integers(1, 64), t_res=st.integers(0, 40),
+       n_bytes=st.integers(1, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_ledger_equals_closed_form(algo, k_p1, t_cyc, k_p2, t_res, n_bytes):
+    params = _FakeParams(n_bytes).tree()
+    led = CommLedger()
+    for _ in range(t_cyc):
+        led.record_cyclic_round(k_p1, params)
+    for _ in range(t_res):
+        led.record_round(algo, k_p2, params)
+    want = acc.overhead_with_cyclic(algo, k_p1, t_cyc, k_p2, t_res, n_bytes)
+    assert led.total_bytes == want
+    # w/o-cyclic closed form as the t_cyc=0 special case
+    assert acc.overhead_with_cyclic(algo, k_p1, 0, k_p2, t_res, n_bytes) == \
+        acc.overhead_without_cyclic(algo, k_p2, t_res, n_bytes)
+
+
+@given(algo=st.sampled_from(ALGOS), k_p1=st.integers(1, 32),
+       t_cyc=st.integers(1, 32), k_p2=st.integers(1, 32),
+       x=st.integers(1, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_rounds_budget_equivalent_consistency(algo, k_p1, t_cyc, k_p2, x):
+    """P1's cost expressed in P2 rounds must satisfy
+    cost(P1) == equivalent_rounds * per-P2-round cost."""
+    eq = acc.rounds_budget_equivalent(algo, k_p1, t_cyc, k_p2, x)
+    per_round = acc.overhead_without_cyclic(algo, k_p2, 1, x)
+    assert math.isclose(eq * per_round, 2 * k_p1 * t_cyc * x, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet partitioning
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(60, 400), n_clients=st.integers(2, 12),
+       n_classes=st.integers(2, 10),
+       beta=st.floats(0.05, 5.0, allow_nan=False),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_dirichlet_partition_is_disjoint_cover(n, n_clients, n_classes, beta,
+                                               seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, size=n)
+    parts = dirichlet_partition(labels, n_clients, beta, rng,
+                                min_per_client=2)
+    assert len(parts) == n_clients
+    allidx = np.concatenate(parts)
+    # disjoint cover (up to the documented top-up fallback which may
+    # duplicate a few indices): every original index is assigned
+    assert set(allidx.tolist()) == set(range(n)) or len(allidx) >= n
+    assert min(len(p) for p in parts) >= 2
+    stats = partition_stats(labels, parts)
+    assert stats["coverage"] == 1.0
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_dirichlet_beta_monotone_heterogeneity(seed):
+    """Smaller beta ⇒ more heterogeneous label distributions (on average)
+    — the knob the paper's three non-IID scenarios turn."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=2000)
+    tvs = []
+    for beta in (0.1, 5.0):
+        parts = dirichlet_partition(labels, 10, beta,
+                                    np.random.default_rng(seed + 1))
+        tvs.append(partition_stats(labels, parts)["mean_tv_from_global"])
+    assert tvs[0] > tvs[1]
+
+
+# ---------------------------------------------------------------------------
+# tree_math aggregation algebra
+# ---------------------------------------------------------------------------
+
+def _tree_strategy(draw):
+    shape = draw(st.sampled_from([(3,), (2, 4), (5, 1)]))
+    n = draw(st.integers(2, 5))
+    vals = draw(st.lists(
+        st.floats(-10, 10, allow_nan=False, width=32),
+        min_size=int(np.prod(shape)) * n,
+        max_size=int(np.prod(shape)) * n))
+    arrs = np.array(vals, np.float32).reshape((n,) + shape)
+    return arrs
+
+
+@given(data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_weighted_mean_is_convex_combination(data):
+    arrs = _tree_strategy(data.draw)
+    n = arrs.shape[0]
+    w = np.array(data.draw(st.lists(st.floats(0.1, 10, allow_nan=False),
+                                    min_size=n, max_size=n)), np.float32)
+    trees = [{"a": jnp.asarray(arrs[i])} for i in range(n)]
+    out = tm.weighted_mean(trees, w)
+    # must lie inside the convex hull elementwise
+    stack = arrs
+    assert np.all(np.asarray(out["a"]) <= stack.max(0) + 1e-4)
+    assert np.all(np.asarray(out["a"]) >= stack.min(0) - 1e-4)
+    # equal weights == plain mean
+    eq = tm.weighted_mean(trees, np.ones(n, np.float32))
+    np.testing.assert_allclose(np.asarray(eq["a"]), stack.mean(0), atol=1e-5)
+
+
+@given(data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_stacked_weighted_mean_matches_listwise(data):
+    arrs = _tree_strategy(data.draw)
+    n = arrs.shape[0]
+    w = np.array(data.draw(st.lists(st.floats(0.1, 10, allow_nan=False),
+                                    min_size=n, max_size=n)), np.float32)
+    stacked = {"a": jnp.asarray(arrs)}
+    listwise = tm.weighted_mean([{"a": jnp.asarray(arrs[i])} for i in range(n)],
+                                w)
+    out = tm.stacked_weighted_mean(stacked, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(listwise["a"]), atol=1e-4)
+
+
+@given(scale=st.floats(0.01, 100, allow_nan=False),
+       max_norm=st.floats(0.1, 10, allow_nan=False))
+@settings(max_examples=30, deadline=None)
+def test_global_clip_bounds_norm(scale, max_norm):
+    tree = {"a": jnp.full((4, 4), scale), "b": jnp.full((3,), -scale)}
+    clipped = tm.global_clip(tree, max_norm)
+    assert float(tm.norm(clipped)) <= max_norm * (1 + 1e-5)
+    # no-op when already within bound
+    if float(tm.norm(tree)) <= max_norm:
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(tree["a"]))
+
+
+def test_filter_normalize_matches_reference_norms():
+    key = jax.random.PRNGKey(0)
+    ref = {"w": jax.random.normal(key, (8, 8)), "b": jnp.ones((8,)) * 3}
+    d = tm.random_like(jax.random.PRNGKey(1), ref)
+    out = tm.filter_normalize(d, ref)
+    for k in ref:
+        np.testing.assert_allclose(
+            float(jnp.linalg.norm(out[k].reshape(-1))),
+            float(jnp.linalg.norm(ref[k].reshape(-1))), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@given(lr=st.floats(1e-4, 0.5, allow_nan=False),
+       mom=st.sampled_from([0.0, 0.5, 0.9]),
+       wd=st.sampled_from([0.0, 0.01]))
+@settings(max_examples=20, deadline=None)
+def test_sgd_first_step_identity(lr, mom, wd):
+    """First SGD step: w1 = w0 − lr·(g + wd·w0) regardless of momentum
+    (buffer starts at 0 and heavyball uses m=β·0+g)."""
+    opt = sgd(lr, momentum=mom, weight_decay=wd)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5, -1.0])}
+    state = opt.init(params)
+    new, _ = opt.apply(grads, state, params)
+    want = params["w"] - lr * (grads["w"] + wd * params["w"])
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_sgd_converges_on_quadratic():
+    opt = sgd(0.1, momentum=0.9)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": params["w"]}        # ∇(0.5||w||²)
+        params, state = opt.apply(grads, state, params)
+    assert float(tm.norm(params)) < 1e-3
+
+
+def test_adamw_converges_on_quadratic():
+    opt = adamw(0.05)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        grads = {"w": params["w"]}
+        params, state = opt.apply(grads, state, params)
+    assert float(tm.norm(params)) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+_leaf = st.sampled_from([
+    np.zeros((2, 3), np.float32), np.arange(5, dtype=np.int32),
+    np.ones((1,), np.float64), np.array(7, np.int64),
+])
+
+
+@st.composite
+def _pytrees(draw, depth=2):
+    if depth == 0:
+        return draw(_leaf)
+    kind = draw(st.sampled_from(["leaf", "dict", "list", "tuple"]))
+    if kind == "leaf":
+        return draw(_leaf)
+    n = draw(st.integers(1, 3))
+    if kind == "dict":
+        keys = draw(st.lists(st.sampled_from("abcdef"), min_size=n, max_size=n,
+                             unique=True))
+        return {k: draw(_pytrees(depth=depth - 1)) for k in keys}
+    seq = [draw(_pytrees(depth=depth - 1)) for _ in range(n)]
+    return seq if kind == "list" else tuple(seq)
+
+
+@given(tree=_pytrees())
+@settings(max_examples=25, deadline=None)
+def test_checkpoint_roundtrip(tree):
+    import tempfile
+    from repro.checkpoint.store import load_pytree, save_pytree
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/ckpt.npz"
+        save_pytree(path, tree, metadata={"round": 3})
+        back = load_pytree(path)
+    a_leaves, a_def = jax.tree_util.tree_flatten(tree)
+    b_leaves, b_def = jax.tree_util.tree_flatten(back)
+    assert a_def == b_def
+    for a, b in zip(a_leaves, b_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_checkpoint_manager_gc_and_latest():
+    import tempfile
+    from repro.checkpoint.store import CheckpointManager
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for r in (1, 2, 3, 4):
+            mgr.save(r, {"w": np.full((2,), r, np.float32)})
+        assert mgr.latest().endswith("ckpt_4.npz")
+        restored = mgr.restore()
+        np.testing.assert_array_equal(restored["w"], np.full((2,), 4))
+        assert len(mgr._rounds()) == 2  # gc keeps only 2

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned architecture instantiates its REDUCED variant (≤2 layers,
+d_model ≤ 512, ≤4 experts) and runs one forward + one train step on CPU,
+asserting output shapes and the absence of NaNs.  Full configs are only
+exercised by the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_text_batch
+from repro.configs import ASSIGNED, get_config, get_reduced, param_count
+from repro.launch.steps import TrainSpec, init_momentum, make_train_step
+from repro.models.transformer import init_lm, lm_forward, lm_loss
+
+B, S = 2, 64
+
+
+@pytest.fixture(scope="module", params=ASSIGNED)
+def arch(request):
+    return request.param
+
+
+def _reduced_and_batch(arch_name):
+    cfg = get_reduced(arch_name)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    batch = make_text_batch(cfg, B=B, S=S)
+    return cfg, params, batch
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg, params, batch = _reduced_and_batch(arch)
+    logits, aux, hidden = lm_forward(params, cfg, batch)
+    n_pos = S if cfg.input_mode != "vlm" else S
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (B, n_pos, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, n_pos, cfg.vocab_size)
+    assert hidden.shape == (B, n_pos, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+def test_one_train_step_decreases_or_finite(arch):
+    cfg, params, batch = _reduced_and_batch(arch)
+    step = make_train_step(cfg, TrainSpec(lr=1e-2))
+    mom = init_momentum(params)
+    loss0, _ = lm_loss(params, cfg, batch)
+    params2, mom2, metrics = jax.jit(step)(params, mom, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # a second step on the SAME batch must not explode, and repeated steps
+    # on one batch should reduce its loss (overfit sanity)
+    for _ in range(5):
+        params2, mom2, metrics = jax.jit(step)(params2, mom2, batch)
+    loss5 = metrics["loss"]
+    assert bool(jnp.isfinite(loss5))
+    assert float(loss5) < float(loss0), (arch, float(loss0), float(loss5))
+
+
+def test_microbatch_accumulation_matches_single(arch):
+    """n_micro=2 must equal n_micro=1 up to numerics (same effective
+    gradient: mean over microbatches)."""
+    cfg, params, batch = _reduced_and_batch(arch)
+    mom = init_momentum(params)
+    p1, m1, _ = jax.jit(make_train_step(cfg, TrainSpec(lr=1e-2, n_micro=1)))(
+        params, mom, batch)
+    p2, m2, _ = jax.jit(make_train_step(cfg, TrainSpec(lr=1e-2, n_micro=2)))(
+        params, mom, batch)
+    # MoE routing / aux losses are batch-composition dependent: tolerance
+    tol = 5e-2 if (cfg.is_moe or cfg.arch_type == "hybrid") else 2e-2
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        diff = jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))
+        scale = jnp.max(jnp.abs(a.astype(jnp.float32))) + 1e-6
+        assert float(diff / scale) < tol
+
+
+def test_full_config_matches_assignment(arch):
+    """The FULL config (never allocated) carries the exact assigned dims."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+        "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    }[arch]
+    L, d, H, KH, ff, V = expected
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab_size == V
+    if H is not None:
+        assert cfg.n_heads == H
+    if KH is not None:
+        assert cfg.n_kv_heads == KH
+    if ff not in (None,):
+        assert cfg.d_ff == ff or cfg.d_ff_expert == ff
+
+
+@pytest.mark.parametrize("arch_name,lo,hi", [
+    ("tinyllama-1.1b", 0.9e9, 1.3e9),
+    ("qwen1.5-0.5b", 0.4e9, 0.7e9),
+    ("qwen2-1.5b", 1.2e9, 1.8e9),
+    ("qwen3-32b", 29e9, 36e9),
+    ("mamba2-1.3b", 1.0e9, 1.6e9),
+    ("deepseek-v3-671b", 630e9, 700e9),
+    ("deepseek-v2-lite-16b", 13e9, 18e9),
+])
+def test_param_count_magnitude(arch_name, lo, hi):
+    """Full-config parameter counts land near the literature value
+    (abstract eval_shape — no allocation)."""
+    n = param_count(get_config(arch_name))
+    assert lo <= n <= hi, (arch_name, n)

@@ -1,0 +1,277 @@
+"""End-to-end behaviour tests for the CyclicFL system.
+
+These assert the paper's QUALITATIVE claims at test scale (seconds, not
+benchmark-grade):
+  - the pipeline runs P1→P2 and improves over random init (RQ1/RQ2),
+  - all four FL algorithms compose with cyclic pre-training,
+  - the communication ledger matches Table IV closed forms exactly,
+  - the pod-scale (sharded) driver agrees with the host simulator's
+    semantics and reduces training loss,
+  - switch policies terminate P1 when they should.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm_accounting as acc
+from repro.core.cyclic import CyclicConfig, cyclic_pretrain
+from repro.core.pipeline import run_cyclic_then_federated
+from repro.core.switch import AccuracyPlateau, BudgetFraction, FixedRounds
+from repro.data.synthetic import DATASETS, make_synthetic_tokenlm
+from repro.fl.simulation import FLConfig, run_federated
+from repro.fl.task import charlm_task, vision_task
+
+SEED = 0
+
+
+@pytest.fixture(scope="module")
+def vision_setup():
+    data = DATASETS.get("cifar10-like")(n_clients=8, beta=0.5, seed=SEED,
+                                        n_train=512, n_test=256)
+    task = vision_task("lenet5", n_classes=10, in_ch=3)
+    return task, data
+
+
+def _tiny_cyc(rounds=2, steps=4):
+    return CyclicConfig(rounds=rounds, participation=0.25, local_steps=steps,
+                        eval_every=1, seed=SEED)
+
+
+def _tiny_fl(algorithm="fedavg", rounds=3, steps=4):
+    return FLConfig(algorithm=algorithm, rounds=rounds, participation=0.25,
+                    local_steps=steps, eval_every=1, seed=SEED)
+
+
+def test_cyclic_pretrain_reduces_loss(vision_setup):
+    task, data = vision_setup
+    res = cyclic_pretrain(task, data, _tiny_cyc(rounds=3, steps=8))
+    losses = [h["local_loss"] for h in res.history]
+    assert losses[-1] < losses[0]
+    assert len(res.history) == 3
+
+
+def test_pipeline_beats_random_init_same_budget(vision_setup):
+    """RQ1/RQ2 at test scale: with a fixed total budget, Cyclic+FedAvg
+    reaches at-least-as-good accuracy as FedAvg from random init."""
+    task, data = vision_setup
+    cyc = run_cyclic_then_federated(task, data, _tiny_cyc(rounds=3, steps=8),
+                                    _tiny_fl(rounds=5, steps=8))
+    base = run_cyclic_then_federated(task, data, None,
+                                     _tiny_fl(rounds=8, steps=8))
+    a = cyc.best_acc().get("acc", 0.0)
+    b = base.best_acc().get("acc", 0.0)
+    # generous slack: tiny scale is noisy, but cyclic must not be WORSE
+    # by a wide margin, and usually wins
+    assert a >= b - 0.05, (a, b)
+
+
+@pytest.mark.parametrize("algorithm", ["fedavg", "fedprox", "scaffold", "moon"])
+def test_all_algorithms_run_and_learn(vision_setup, algorithm):
+    task, data = vision_setup
+    res = run_federated(task, data, _tiny_fl(algorithm, rounds=3))
+    assert len(res.history) == 3
+    accs = [h["acc"] for h in res.history if "acc" in h]
+    assert accs and all(np.isfinite(a) for a in accs)
+    assert accs[-1] > 1.0 / data.n_classes * 0.8  # above-chance-ish
+
+
+@pytest.mark.parametrize("algorithm", ["fedavg", "scaffold"])
+def test_ledger_matches_closed_form(vision_setup, algorithm):
+    task, data = vision_setup
+    res = run_cyclic_then_federated(task, data, _tiny_cyc(rounds=2),
+                                    _tiny_fl(algorithm, rounds=3))
+    led = res.ledger.summary()
+    k_p1 = _tiny_cyc().n_selected(data.n_clients)
+    k_p2 = _tiny_fl(algorithm).n_selected(data.n_clients)
+    want = acc.overhead_with_cyclic(algorithm, k_p1, 2, k_p2, 3,
+                                    led["model_bytes"])
+    assert led["total_bytes"] == want
+
+
+def test_cyclic_is_strictly_sequential(vision_setup):
+    """Algorithm-1 semantics: the relay visits clients IN ORDER — running
+    one round over clients [a, b] must equal local(local(w, a), b)."""
+    from repro.core.cyclic import make_cyclic_round_fn
+    from repro.fl.local import make_local_fn
+
+    task, data = vision_setup
+    ccfg = _tiny_cyc(rounds=1, steps=3)
+    round_fn = make_cyclic_round_fn(task, ccfg)
+    x_all, y_all, _ = data.device_arrays()
+    params = task.init(jax.random.PRNGKey(SEED))
+    key = jax.random.PRNGKey(42)
+    ids = jnp.asarray([2, 5])
+
+    got, _ = round_fn(key, params, x_all, y_all, ids, jnp.float32(1.0))
+
+    local = make_local_fn(task, ccfg.local_spec())
+    keys = jax.random.split(key, 2)
+    w1, _ = local(keys[0], params, {}, x_all[2], y_all[2], jnp.float32(1.0))
+    w2, _ = local(keys[1], w1, {}, x_all[5], y_all[5], jnp.float32(1.0))
+
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(w2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_switch_policies():
+    hist_flat = [{"round": i, "acc": 0.5} for i in range(10)]
+    hist_rising = [{"round": i, "acc": 0.1 * i} for i in range(10)]
+    assert FixedRounds(t_cyc=3).should_switch(2, hist_flat[:3])
+    assert not FixedRounds(t_cyc=3).should_switch(1, hist_flat[:2])
+    p = AccuracyPlateau(patience=2, min_delta=0.01, min_rounds=2)
+    assert p.should_switch(9, hist_flat)
+    assert not p.should_switch(9, hist_rising)
+    b = BudgetFraction(total_rounds=20, fraction=0.25)
+    assert b.should_switch(4, hist_flat) and not b.should_switch(3, hist_flat)
+
+
+def test_charlm_task_runs():
+    data = DATASETS.get("shakespeare-like")(n_clients=8, seed=SEED,
+                                            n_seq_per_client=16, n_test=64)
+    task = charlm_task(vocab=64)
+    res = run_federated(task, data, _tiny_fl(rounds=2, steps=4))
+    assert np.isfinite(res.history[-1]["local_loss"])
+
+
+# ---------------------------------------------------------------------------
+# pod-scale (sharded) driver
+# ---------------------------------------------------------------------------
+
+def test_pod_driver_trains_and_matches_budget():
+    from repro.configs import get_reduced
+    from repro.launch.train import PodFLSpec, run_pod_training
+
+    cfg = get_reduced("qwen1.5-0.5b")
+    data = make_synthetic_tokenlm(n_clients=8, seq_len=32,
+                                  n_seq_per_client=16,
+                                  vocab=cfg.vocab_size, beta=0.5, seed=SEED)
+    spec = PodFLSpec(local_steps=3, lr=0.05)
+    res = run_pod_training(cfg, data, cyclic_rounds=2, fl_rounds=2,
+                           clients_per_round=3, spec=spec, seed=SEED)
+    assert len(res.history) == 4
+    assert res.history[0]["phase"] == "P1" and res.history[-1]["phase"] == "P2"
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+
+
+def test_pod_cyclic_round_is_relay():
+    """Pod P1 semantics: scan(K clients) == sequential local SGD chain."""
+    from repro.configs import get_reduced
+    from repro.launch.train import (PodFLSpec, _local_sgd,
+                                    make_pod_cyclic_round)
+    from repro.models.transformer import init_lm
+
+    cfg = get_reduced("tinyllama-1.1b")
+    spec = PodFLSpec(local_steps=2, lr=0.05)
+    params = init_lm(jax.random.PRNGKey(SEED), cfg)
+    key = jax.random.PRNGKey(7)
+    K, B, S = 2, 4, 16
+    toks = jax.random.randint(key, (K, spec.local_steps, B, S), 0,
+                              cfg.vocab_size)
+    batches = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+
+    round_fn = make_pod_cyclic_round(cfg, spec)
+    got, _ = round_fn(params, batches, jnp.float32(1.0))
+
+    local = _local_sgd(cfg, spec)
+    w = params
+    for i in range(K):
+        w, _ = local(w, jax.tree_util.tree_map(lambda x: x[i], batches),
+                     jnp.float32(1.0), None)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(w)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_pod_fl_round_equals_weighted_mean():
+    """Pod P2 semantics: delta aggregation == weighted mean of client
+    results (the FedAvg identity)."""
+    from repro.configs import get_reduced
+    from repro.launch.train import PodFLSpec, _local_sgd, make_pod_fl_round
+    from repro.models.transformer import init_lm
+
+    cfg = get_reduced("tinyllama-1.1b")
+    spec = PodFLSpec(local_steps=2, lr=0.05)
+    params = init_lm(jax.random.PRNGKey(SEED), cfg)
+    key = jax.random.PRNGKey(11)
+    K, B, S = 3, 4, 16
+    toks = jax.random.randint(key, (K, spec.local_steps, B, S), 0,
+                              cfg.vocab_size)
+    batches = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+    weights = jnp.asarray([1.0, 2.0, 3.0])
+
+    round_fn = make_pod_fl_round(cfg, spec)
+    got, _ = round_fn(params, batches, weights, jnp.float32(1.0))
+
+    local = _local_sgd(cfg, spec)
+    locals_ = [local(params, jax.tree_util.tree_map(lambda x: x[i], batches),
+                     jnp.float32(1.0), None)[0] for i in range(K)]
+    p32 = jax.tree_util.tree_map(lambda x: np.asarray(x, np.float32), params)
+    ws32 = [jax.tree_util.tree_map(lambda x: np.asarray(x, np.float32), w)
+            for w in locals_]
+    wsum = float(weights.sum())
+    want = jax.tree_util.tree_map(
+        lambda p, *ws: p + sum(float(weights[i]) / wsum * (ws[i] - p)
+                               for i in range(K)),
+        p32, *ws32)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), b,
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_server_optimizer_none_equals_plain_fedavg(vision_setup):
+    """server_opt='none' must reproduce vanilla FedAvg bit-for-bit, and
+    server_opt='momentum' with server_lr=1, momentum=0 likewise (the
+    pseudo-gradient step degenerates to w ← w_avg)."""
+    import dataclasses as dc
+    task, data = vision_setup
+    base = _tiny_fl(rounds=2, steps=4)
+    r_plain = run_federated(task, data, base)
+    r_mom0 = run_federated(task, data, dc.replace(
+        base, server_opt="momentum", server_lr=1.0, server_momentum=0.0))
+    for a, b in zip(jax.tree_util.tree_leaves(r_plain.params),
+                    jax.tree_util.tree_leaves(r_mom0.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("server_opt", ["momentum", "adam"])
+def test_server_optimizer_runs_and_learns(vision_setup, server_opt):
+    """Beyond-paper server optimizers (FedAvgM / FedAdam) train sanely
+    and compose with cyclic pre-training."""
+    import dataclasses as dc
+    task, data = vision_setup
+    # adam normalizes the pseudo-gradient, so server_lr IS the parameter
+    # step size — keep it small (FedAdam convention)
+    cfg = dc.replace(_tiny_fl(rounds=3, steps=6), server_opt=server_opt,
+                     server_lr=1.0 if server_opt == "momentum" else 0.03)
+    res = run_cyclic_then_federated(task, data, _tiny_cyc(rounds=2), cfg)
+    accs = [h["acc"] for h in res.history if "acc" in h]
+    assert accs and np.isfinite(accs[-1])
+    assert accs[-1] > 1.0 / data.n_classes * 0.8
+
+
+def test_serve_engine_greedy_decode_matches_forward():
+    """Engine.generate greedy path == argmax over the parallel forward."""
+    from repro.configs import get_reduced
+    from repro.launch.serve import Engine
+    from repro.models.transformer import lm_forward
+
+    cfg = get_reduced("qwen2-1.5b")
+    eng = Engine(cfg, seed=SEED)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0,
+                              cfg.vocab_size)
+    out, _ = eng.generate({"tokens": toks}, new_tokens=3)
+    # replay: greedy continuation via repeated full forwards
+    seq = toks
+    for _ in range(3):
+        logits, _, _ = lm_forward(eng.params, cfg, {"tokens": seq})
+        seq = jnp.concatenate([seq, jnp.argmax(logits[:, -1], -1)[:, None]],
+                              axis=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(seq[:, 12:]))
