@@ -1,0 +1,17 @@
+# One-command entry points for the tier-1 verify recipe and quick benches.
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-quick bench-engine
+
+test:            ## tier-1 suite (ROADMAP verify command)
+	$(PY) -m pytest -x -q
+
+test-fast:       ## tier-1 minus tests marked slow
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-quick:     ## minutes-scale sanity benchmark (Table II subset)
+	$(PY) -m benchmarks.run --only table2 --scale quick
+
+bench-engine:    ## round-engine dispatch benchmark (chunk 1/4/16)
+	$(PY) -m benchmarks.perf_round_engine

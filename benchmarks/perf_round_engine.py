@@ -1,0 +1,114 @@
+"""Round-engine dispatch benchmark: rounds/sec vs chunk size.
+
+The seed drivers dispatched ONE XLA program per round, so at simulation
+scale the host round-trip (argument flattening, dispatch, result fetch,
+Python bookkeeping) bounds throughput.  The engine scans ``chunk_size``
+rounds per dispatch with donated carries; this benchmark measures the
+resulting rounds/sec for both strategies at chunk ∈ {1, 4, 16} — chunk=1
+IS the seed per-round dispatch path, so the speedup column reads as
+"engine vs seed".
+
+    PYTHONPATH=src python -m benchmarks.perf_round_engine
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+from benchmarks.common import save_result
+from repro.core.cyclic import CyclicConfig, cyclic_pretrain
+from repro.data.synthetic import DATASETS
+from repro.fl.simulation import FLConfig, run_federated
+from repro.fl.task import vision_task
+
+CHUNKS = (1, 4, 16)
+
+
+def _setup(n_clients: int, n_train: int, seed: int):
+    # dispatch-bound scale on purpose: the benchmark isolates host
+    # round-trip overhead, so per-round device compute is kept tiny
+    # (matmul-only MLP — conv cost would mask the dispatch effect)
+    data = DATASETS.get("fashion-like")(n_clients=n_clients, beta=0.5,
+                                        seed=seed, n_train=n_train,
+                                        n_test=128)
+    task = vision_task("mlp", n_classes=10, in_ch=data.x.shape[-1])
+    return task, data
+
+
+def _time_run(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_strategy(task, data, *, kind: str, rounds: int, local_steps: int,
+                   seed: int, repeats: int) -> List[Dict]:
+    rows = []
+    for chunk in CHUNKS:
+        if kind == "relay":
+            cfg = CyclicConfig(rounds=rounds, participation=0.25,
+                               local_steps=local_steps, batch_size=8,
+                               eval_every=0, seed=seed, chunk_size=chunk)
+            run = lambda: cyclic_pretrain(task, data, cfg)        # noqa: E731
+        else:
+            cfg = FLConfig(algorithm=kind, rounds=rounds, participation=0.25,
+                           local_steps=local_steps, batch_size=8,
+                           eval_every=0, seed=seed, chunk_size=chunk)
+            run = lambda: run_federated(task, data, cfg)          # noqa: E731
+        run()                                   # compile + warm caches
+        secs = _time_run(run, repeats)
+        rows.append({"strategy": kind, "chunk": chunk,
+                     "rounds": rounds, "secs": round(secs, 4),
+                     "rounds_per_sec": round(rounds / secs, 2)})
+        print(f"  {kind:8s} chunk={chunk:<3d} {rounds / secs:8.2f} rounds/s "
+              f"({secs:.3f}s / {rounds} rounds)", flush=True)
+    base = rows[0]["rounds_per_sec"]
+    for r in rows:
+        r["speedup_vs_chunk1"] = round(r["rounds_per_sec"] / base, 2)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=48)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", default=None, help="accepted for run.py "
+                    "compatibility; presets do not change this benchmark")
+    args = ap.parse_args(argv)
+    if args.rounds < 1 or args.repeats < 1:
+        ap.error("--rounds and --repeats must be >= 1")
+
+    task, data = _setup(args.clients, args.n_train, args.seed)
+    print(f"[perf_round_engine] {args.rounds} rounds × {args.clients} clients,"
+          f" local_steps={args.local_steps}", flush=True)
+    rows = []
+    for kind in ("relay", "fedavg"):
+        rows += bench_strategy(task, data, kind=kind, rounds=args.rounds,
+                               local_steps=args.local_steps, seed=args.seed,
+                               repeats=args.repeats)
+    save_result("perf_round_engine", {
+        "config": vars(args), "rows": rows})
+
+    ok = True
+    for kind in ("relay", "fedavg"):
+        sub = {r["chunk"]: r["rounds_per_sec"] for r in rows
+               if r["strategy"] == kind}
+        if not sub[16] > sub[1]:
+            print(f"[perf_round_engine] REGRESSION: {kind} chunk=16 "
+                  f"({sub[16]}) not faster than chunk=1 ({sub[1]})",
+                  file=sys.stderr)
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

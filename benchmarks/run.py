@@ -15,11 +15,12 @@ import sys
 import time
 
 from benchmarks import (
-    fig5_switch_point, fig7_landscape, roofline_report,
+    fig5_switch_point, fig7_landscape, perf_round_engine, roofline_report,
     table1_accuracy, table2_compat, table3_convergence, table4_comm,
 )
 
 BENCHES = {
+    "perf_engine": lambda scale: perf_round_engine.main(["--scale", scale]),
     "table1": lambda scale: table1_accuracy.main(["--scale", scale,
                                                   "--betas", "0.1,0.5"]),
     "table2": lambda scale: table2_compat.main(["--scale", scale]),

@@ -1,0 +1,68 @@
+"""Declarative phase schedules — beyond the paper's fixed P1→P2 split.
+
+With the shared round engine a training run is just a list of phases,
+so schedules the seed drivers could not express become one-liners.  This
+example compares the paper's two-phase pipeline against a multi-cycle
+P1↔P2 alternation (re-entering the relay mid-training re-centers the
+model on the union data distribution — the cyclic-aggregation idea of
+Lee et al. 2022) under the SAME total round budget and one ledger.
+
+    PYTHONPATH=src python examples/phase_schedules.py
+"""
+import argparse
+
+from repro.core.cyclic import CyclicConfig
+from repro.core.pipeline import Phase, run_phase_schedule
+from repro.core.switch import AccuracyPlateau
+from repro.data.synthetic import DATASETS
+from repro.fl.simulation import FLConfig
+from repro.fl.task import vision_task
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--beta", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    data = DATASETS.get("cifar10-like")(n_clients=args.clients, beta=args.beta,
+                                        seed=args.seed, n_train=2048,
+                                        n_test=512)
+    task = vision_task("lenet5", n_classes=10, in_ch=3)
+
+    def p1(rounds):
+        return CyclicConfig(rounds=rounds, participation=0.25, local_steps=10,
+                            eval_every=2, seed=args.seed)
+
+    def p2(rounds):
+        return FLConfig(algorithm="fedavg", rounds=rounds, participation=0.25,
+                        local_steps=10, eval_every=2, seed=args.seed)
+
+    schedules = {
+        # the paper's protocol: one pre-training phase, one FL phase
+        "paper (P1×4 → P2×12)": [
+            Phase("P1", p1(4)), Phase("P2", p2(12))],
+        # multi-cycle alternation, same 16-round budget
+        "alternating (×2)": [
+            Phase("P1", p1(2)), Phase("P2", p2(6)),
+            Phase("P1'", p1(2)), Phase("P2'", p2(6))],
+        # adaptive: plateau policy ends each relay early, remainder to FL
+        "adaptive relay": [
+            Phase("P1", p1(6), switch_policy=AccuracyPlateau(
+                patience=2, min_delta=0.005, min_rounds=2)),
+            Phase("P2", p2(12))],
+    }
+
+    print(f"{'schedule':24s} {'best acc':>9s} {'rounds':>7s} {'GiB':>7s}")
+    for name, phases in schedules.items():
+        res = run_phase_schedule(task, data, phases)
+        led = res.ledger.summary()
+        rounds = led["p1_rounds"] + led["p2_rounds"]
+        print(f"{name:24s} {res.best_acc().get('acc', 0.0):9.4f} "
+              f"{rounds:7d} {led['total_bytes'] / 2**30:7.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

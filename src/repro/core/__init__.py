@@ -20,4 +20,11 @@ from repro.core.diagnostics import (
     client_similarity,
     make_batch_loss,
 )
-from repro.core.pipeline import PipelineResult, run_cyclic_then_federated
+from repro.core.pipeline import (
+    Phase,
+    PhaseResult,
+    PipelineResult,
+    ScheduleResult,
+    run_cyclic_then_federated,
+    run_phase_schedule,
+)

@@ -16,12 +16,12 @@ task sequence approaches OGD — hence centralized training — as client
 data distributions overlap), landing the model in a flat loss basin
 (Lemma 2) that stabilizes the downstream FL phase.
 
-Implementation: one round = one XLA program.  The selected clients'
-shards are stacked (K, n, ...) and the relay is a ``lax.scan`` over the
-client axis carrying the model; each scan step runs the client's
-``t_i``-step local SGD (itself a nested scan).  On a pod this scan is the
-sequential schedule whose per-step body is fully model-parallel — see
-repro/launch/train.py.
+Implementation: this module is a thin configuration shim over the shared
+round engine (repro.fl.engine).  One P1 round = one ``lax.scan`` step
+over the selected-client axis carrying the model (RelayStrategy); the
+engine dispatches ``chunk_size`` rounds per XLA program and samples
+clients on device by default (``sampling="host"`` reproduces the
+original host-RNG stream).
 """
 from __future__ import annotations
 
@@ -29,15 +29,17 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.data.federated import FederatedDataset
-from repro.fl.local import LocalSpec, make_local_fn
-from repro.fl.simulation import make_eval_fn
+from repro.fl.engine import RelayStrategy, RoundSchedule, run_rounds
+from repro.fl.local import LocalSpec
 from repro.fl.task import Task
 
 Pytree = Any
+
+# the seed driver drew P1 client ids from np.random.default_rng(seed + 31);
+# sampling="host" keeps that stream for backward-compatible runs
+HOST_RNG_OFFSET_P1 = 31
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +56,8 @@ class CyclicConfig:
     eval_every: int = 10
     eval_batch: int = 256
     seed: int = 0
+    chunk_size: int = 8             # rounds per XLA dispatch (engine)
+    sampling: str = "device"        # device | host (seed-compatible)
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -64,24 +68,31 @@ class CyclicConfig:
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant="plain", grad_clip=self.grad_clip)
 
+    def strategy(self) -> RelayStrategy:
+        return RelayStrategy(spec=self.local_spec(),
+                             participation=self.participation)
+
+    def schedule(self) -> RoundSchedule:
+        return RoundSchedule(
+            rounds=self.rounds, lr_decay=self.lr_decay,
+            eval_every=self.eval_every, eval_batch=self.eval_batch,
+            seed=self.seed, chunk_size=self.chunk_size,
+            sampling=self.sampling, host_rng_offset=HOST_RNG_OFFSET_P1)
+
 
 def make_cyclic_round_fn(task: Task, cfg: CyclicConfig) -> Callable:
-    """One P1 round: sequential relay over the K selected clients."""
-    local = make_local_fn(task, cfg.local_spec())
+    """One P1 round: sequential relay over the K selected clients.
+
+    Kept for diagnostics/tests that drive a single round directly; the
+    training loop itself lives in repro.fl.engine.
+    """
+    body = cfg.strategy().build_round(task)
 
     @jax.jit
     def round_fn(key, params, x_all, y_all, ids, lr_scale):
-        cx = x_all[ids]                       # (K, n, ...)
-        cy = y_all[ids]
-        keys = jax.random.split(key, ids.shape[0])
-
-        def relay(w, inp):
-            k, cxi, cyi = inp
-            w_next, aux = local(k, w, {}, cxi, cyi, lr_scale)
-            return w_next, aux["loss"]
-
-        params, losses = jax.lax.scan(relay, params, (keys, cx, cy))
-        return params, {"local_loss": jnp.mean(losses)}
+        params, _, loss = body(key, params, x_all, y_all, ids,
+                               None, lr_scale, {})
+        return params, {"local_loss": loss}
 
     return round_fn
 
@@ -96,38 +107,14 @@ def cyclic_pretrain(task: Task, data: FederatedDataset, cfg: CyclicConfig,
                     init_params: Optional[Pytree] = None,
                     ledger=None, verbose: bool = False,
                     eval_fn: Optional[Callable] = None,
-                    switch_policy=None) -> CyclicResult:
+                    switch_policy=None, phase: str = "P1") -> CyclicResult:
     """Run P1 and return the well-initialized global model w_wg.
 
     ``switch_policy`` (core.switch) may terminate P1 early based on the
     evaluation history — the RQ3 trade-off knob.
     """
-    rng = np.random.default_rng(cfg.seed + 31)
-    key = jax.random.PRNGKey(cfg.seed)
-    params = init_params if init_params is not None else task.init(key)
-
-    round_fn = make_cyclic_round_fn(task, cfg)
-    evaluate = eval_fn or make_eval_fn(task, cfg.eval_batch)
-    x_all, y_all, _ = data.device_arrays()
-    K = cfg.n_selected(data.n_clients)
-
-    history: List[Dict[str, float]] = []
-    for rnd in range(cfg.rounds):
-        ids = jnp.asarray(rng.choice(data.n_clients, size=K, replace=False))
-        lr_scale = jnp.asarray(cfg.lr_decay ** rnd, jnp.float32)
-        key, rk = jax.random.split(key)
-        params, metrics = round_fn(rk, params, x_all, y_all, ids, lr_scale)
-        if ledger is not None:
-            ledger.record_cyclic_round(K, params)
-        row = {"round": rnd, "local_loss": float(metrics["local_loss"]),
-               "phase": "P1"}
-        if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            row["acc"] = evaluate(params, data.test_x, data.test_y)
-            if verbose:
-                print(f"[cyclic] round {rnd + 1}/{cfg.rounds} "
-                      f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
-                      flush=True)
-        history.append(row)
-        if switch_policy is not None and switch_policy.should_switch(rnd, history):
-            break
-    return CyclicResult(params=params, history=history)
+    res = run_rounds(task, data, cfg.strategy(), cfg.schedule(),
+                     init_params=init_params, ledger=ledger, verbose=verbose,
+                     eval_fn=eval_fn, switch_policy=switch_policy,
+                     phase=phase, label="cyclic")
+    return CyclicResult(params=res.params, history=res.history)

@@ -1,14 +1,20 @@
-"""Cyclic+Y — the end-to-end CyclicFL pipeline (P1 then P2).
+"""Cyclic+Y — the end-to-end CyclicFL pipeline as a declarative phase
+schedule.
 
-This is the paper's headline configuration: run cyclic pre-training for
-T_cyc rounds, hand the well-initialized model to any FL algorithm Y ∈
-{FedAvg, FedProx, SCAFFOLD, Moon}, and keep a communication ledger so
-the Table-IV accounting is measured, not asserted.
+The paper's headline configuration is two phases — P1 cyclic
+pre-training, then any FL algorithm Y ∈ {FedAvg, FedProx, SCAFFOLD,
+Moon} — but with the shared round engine (repro.fl.engine) a phase is
+just (strategy config, optional switch policy), so arbitrary schedules
+compose: multi-cycle P1↔P2 alternation, relay warm restarts between
+algorithms, adaptive-initialization sweeps.  ``run_phase_schedule``
+threads the model and one CommLedger through every phase so the
+Table-IV accounting is measured, not asserted; switch policies
+(core.switch) apply at ANY phase boundary, not just P1→P2.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.comm_accounting import CommLedger
 from repro.core.cyclic import CyclicConfig, CyclicResult, cyclic_pretrain
@@ -16,6 +22,94 @@ from repro.data.federated import FederatedDataset
 from repro.fl.simulation import FLConfig, FLResult, run_federated
 from repro.fl.task import Task
 
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One schedule entry.  ``cfg`` decides the strategy: a CyclicConfig
+    runs the P1 relay, an FLConfig runs aggregation rounds.  The phase
+    ``name`` tags the history rows; ``switch_policy`` may end the phase
+    early (the engine then advances to the next phase)."""
+    name: str
+    cfg: Union[CyclicConfig, FLConfig]
+    switch_policy: Optional[object] = None
+
+    @property
+    def kind(self) -> str:
+        return "relay" if isinstance(self.cfg, CyclicConfig) else "aggregate"
+
+
+@dataclasses.dataclass
+class PhaseResult:
+    phase: Phase
+    result: Union[CyclicResult, FLResult]
+
+    @property
+    def history(self) -> List[Dict[str, float]]:
+        return self.result.history
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    phases: List[PhaseResult]
+    ledger: CommLedger
+
+    @property
+    def params(self):
+        return self.phases[-1].result.params
+
+    @property
+    def history(self) -> List[Dict[str, float]]:
+        """All phases' rows with a schedule-global round index."""
+        hist: List[Dict[str, float]] = []
+        for pr in self.phases:
+            offset = len(hist)
+            for h in pr.history:
+                row = dict(h)
+                row["round"] = offset + h["round"]
+                hist.append(row)
+        return hist
+
+    def best_acc(self) -> Dict[str, float]:
+        rows = [h for h in self.history if "acc" in h]
+        return max(rows, key=lambda h: h["acc"]) if rows else {}
+
+    def rounds_to_acc(self, target: float) -> Optional[int]:
+        """First (global) round reaching ``target`` accuracy — the paper's
+        convergence metric (Table III)."""
+        for h in self.history:
+            if h.get("acc", -1.0) >= target:
+                return h["round"]
+        return None
+
+
+def run_phase_schedule(task: Task, data: FederatedDataset,
+                       phases: Sequence[Phase],
+                       verbose: bool = False,
+                       ledger: Optional[CommLedger] = None) -> ScheduleResult:
+    """Run ``phases`` in order, each starting from the previous phase's
+    final params, under one communication ledger."""
+    ledger = ledger if ledger is not None else CommLedger()
+    params = None
+    results: List[PhaseResult] = []
+    for ph in phases:
+        if ph.kind == "relay":
+            res = cyclic_pretrain(task, data, ph.cfg, init_params=params,
+                                  ledger=ledger, verbose=verbose,
+                                  switch_policy=ph.switch_policy,
+                                  phase=ph.name)
+        else:
+            res = run_federated(task, data, ph.cfg, init_params=params,
+                                ledger=ledger, verbose=verbose,
+                                switch_policy=ph.switch_policy,
+                                phase=ph.name)
+        params = res.params
+        results.append(PhaseResult(phase=ph, result=res))
+    return ScheduleResult(phases=results, ledger=ledger)
+
+
+# ---------------------------------------------------------------------------
+# the paper's two-phase pipeline, expressed as a schedule
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class PipelineResult:
@@ -55,13 +149,11 @@ def run_cyclic_then_federated(
     switch_policy=None,
 ) -> PipelineResult:
     """cyclic_cfg=None runs the w/o-Cyclic baseline under the same ledger."""
-    ledger = CommLedger()
-    cyc = None
-    init_params = None
+    phases: List[Phase] = []
     if cyclic_cfg is not None:
-        cyc = cyclic_pretrain(task, data, cyclic_cfg, ledger=ledger,
-                              verbose=verbose, switch_policy=switch_policy)
-        init_params = cyc.params
-    fed = run_federated(task, data, fl_cfg, init_params=init_params,
-                        ledger=ledger, verbose=verbose)
-    return PipelineResult(cyclic=cyc, federated=fed, ledger=ledger)
+        phases.append(Phase("P1", cyclic_cfg, switch_policy=switch_policy))
+    phases.append(Phase("P2", fl_cfg))
+    sched = run_phase_schedule(task, data, phases, verbose=verbose)
+    cyc = sched.phases[0].result if cyclic_cfg is not None else None
+    return PipelineResult(cyclic=cyc, federated=sched.phases[-1].result,
+                          ledger=sched.ledger)

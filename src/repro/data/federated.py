@@ -35,6 +35,8 @@ class FederatedDataset:
     test_y: np.ndarray
     n_classes: int
     name: str = "federated"
+    _device_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = \
+        dataclasses.field(default=None, init=False, repr=False, compare=False)
 
     @property
     def n_clients(self) -> int:
@@ -103,12 +105,17 @@ class FederatedDataset:
         """Sample ``n_batches`` batches for one client; returns stacked
         (n_batches, batch, ...) arrays ready for ``lax.scan``."""
         idx = jax.random.randint(key, (n_batches, batch_size), 0, self.n_per_client)
-        x = jnp.asarray(self.x[client])[idx]
-        y = jnp.asarray(self.y[client])[idx]
-        return x, y
+        x_all, y_all, _ = self.device_arrays()
+        return x_all[client][idx], y_all[client][idx]
 
     def device_arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        return jnp.asarray(self.x), jnp.asarray(self.y), jnp.asarray(self.n_real)
+        """Stacked client arrays on device, uploaded once and cached —
+        every round/batch access indexes the resident copies instead of
+        re-transferring host memory."""
+        if self._device_cache is None:
+            self._device_cache = (jnp.asarray(self.x), jnp.asarray(self.y),
+                                  jnp.asarray(self.n_real))
+        return self._device_cache
 
 
 class ClientBatchIterator:

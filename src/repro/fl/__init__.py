@@ -1,5 +1,12 @@
 from repro.fl.task import Task, vision_task, charlm_task, lm_task
 from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.engine import (
+    AggregateStrategy,
+    EngineResult,
+    RelayStrategy,
+    RoundSchedule,
+    run_rounds,
+)
 from repro.fl.simulation import (
     ALGORITHMS,
     FLConfig,

@@ -1,0 +1,436 @@
+"""The federated round engine — ONE driver for both CyclicFL phases.
+
+The paper's P1 (cyclic relay) and P2 (FedAvg-style rounds) are two
+phases of one training process; this module is the single loop that runs
+either, parameterized by a ``RoundStrategy``:
+
+  RelayStrategy     : P1 — sequential ``lax.scan`` over the selected
+                      clients carrying the model, NO aggregation
+                      (Algorithm 1's server-relayed download/upload).
+  AggregateStrategy : P2 — ``vmap`` over the selected clients + weighted
+                      mean, with pluggable algorithm state for
+                      fedavg / fedprox / scaffold / moon and an optional
+                      server-side optimizer (FedAvgM / FedAdam).
+
+The engine owns everything the three seed drivers each re-implemented:
+
+  * client selection — ON DEVICE by default: a
+    ``jax.random.permutation``-based without-replacement draw folded
+    into the jitted round program (``sampling="host"`` reproduces the
+    seed drivers' ``np.random.default_rng`` streams bit-for-bit for
+    parity testing);
+  * round chunking — ``lax.scan`` over a chunk of R rounds per XLA
+    dispatch with donated carries, so the host dispatches once per
+    chunk and losses come back as one stacked array.  Chunks never
+    cross an eval boundary, so histories are chunk-size invariant;
+  * the lr-decay schedule, eval cadence, ``CommLedger`` recording and
+    history rows;
+  * switch policies (core.switch) at any phase boundary — when a policy
+    is installed the engine pins chunk=1 so per-round early exit keeps
+    the seed drivers' semantics.
+
+``core.cyclic.cyclic_pretrain`` and ``fl.simulation.run_federated`` are
+thin shims over :func:`run_rounds`; ``core.pipeline`` sequences phases
+declaratively.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedDataset
+from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.task import Task
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+ALGORITHMS = ("fedavg", "fedprox", "scaffold", "moon")
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers shared by the aggregation algorithms
+# ---------------------------------------------------------------------------
+
+def stack_copies(tree: Pytree, n: int) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), tree)
+
+
+def tree_rows(tree: Pytree, ids: jnp.ndarray) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x[ids], tree)
+
+
+def tree_set_rows(tree: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, r: x.at[ids].set(r.astype(x.dtype)),
+                                  tree, rows)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RelayStrategy:
+    """P1 — Algorithm 1's sequential relay.  The model hops client →
+    client inside one scan; the carry IS the relay."""
+    spec: LocalSpec
+    participation: float = 0.25
+
+    name = "relay"
+
+    def n_selected(self, n_clients: int) -> int:
+        return max(1, int(round(self.participation * n_clients)))
+
+    def init_state(self, task: Task, params: Pytree, n_clients: int) -> Dict:
+        return {}
+
+    def make_server_update(self):
+        return None
+
+    def build_round(self, task: Task) -> Callable:
+        local = make_local_fn(task, self.spec)
+
+        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+            del weights  # relay has no aggregation, hence no weighting
+            cx = x_all[ids]                       # (K, n, ...)
+            cy = y_all[ids]
+            keys = jax.random.split(key, ids.shape[0])
+
+            def relay(w, inp):
+                k, cxi, cyi = inp
+                w_next, aux = local(k, w, {}, cxi, cyi, lr_scale)
+                return w_next, aux["loss"]
+
+            params, losses = jax.lax.scan(relay, params, (keys, cx, cy))
+            return params, algo_state, jnp.mean(losses)
+
+        return body
+
+    def record(self, ledger, k: int, params: Pytree) -> None:
+        ledger.record_cyclic_round(k, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateStrategy:
+    """P2 — one federated round: vmapped local runs over the stacked
+    client axis + weighted-mean aggregation, with per-algorithm state
+    (scaffold control variates, moon previous-local models) carried
+    through the engine's scan."""
+    spec: LocalSpec
+    algorithm: str = "fedavg"
+    participation: float = 0.1
+    server_opt: str = "none"        # none | momentum | adam
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
+
+    @property
+    def name(self) -> str:
+        return self.algorithm
+
+    def n_selected(self, n_clients: int) -> int:
+        return max(1, int(round(self.participation * n_clients)))
+
+    def init_state(self, task: Task, params: Pytree, n_clients: int) -> Dict:
+        if self.algorithm == "scaffold":
+            return {"c_global": tm.zeros_like(params),
+                    "c_clients": stack_copies(tm.zeros_like(params), n_clients)}
+        if self.algorithm == "moon":
+            return {"w_prev": stack_copies(params, n_clients)}
+        return {}
+
+    def make_server_update(self) -> Optional[Tuple[Callable, Callable]]:
+        """Server-side optimizer (Reddi et al., adaptive federated
+        optimization): pseudo-gradient g = w − w_avg.  Returns
+        (init_fn, update_fn) or None for "none" (w ← w_avg exactly)."""
+        if self.server_opt == "none":
+            return None
+        from repro.optim.optimizers import adamw, sgd
+        if self.server_opt == "momentum":
+            opt = sgd(self.server_lr, momentum=self.server_momentum)
+        elif self.server_opt == "adam":
+            opt = adamw(self.server_lr, b1=0.9, b2=0.99)
+        else:
+            raise ValueError(f"unknown server_opt {self.server_opt!r}")
+
+        def update(params, avg_params, state):
+            pseudo_grad = tm.sub(params, avg_params)
+            return opt.apply(pseudo_grad, state, params)
+
+        return opt.init, update
+
+    def build_round(self, task: Task) -> Callable:
+        spec = self.spec
+        local = make_local_fn(task, spec)
+        algo = self.algorithm
+
+        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+            K = ids.shape[0]
+            keys = jax.random.split(key, K)
+            cx = x_all[ids]
+            cy = y_all[ids]
+
+            if algo in ("fedavg", "fedprox"):
+                extras = {"w_global": params} if algo == "fedprox" else {}
+                in_ext = jax.tree_util.tree_map(lambda _: None, extras)
+                w_locals, aux = jax.vmap(
+                    local, in_axes=(0, None, in_ext, 0, 0, None))(
+                    keys, params, extras, cx, cy, lr_scale)
+                new_params = tm.stacked_weighted_mean(w_locals, weights)
+                return new_params, algo_state, jnp.mean(aux["loss"])
+
+            if algo == "scaffold":
+                c, c_all = algo_state["c_global"], algo_state["c_clients"]
+                c_i = tree_rows(c_all, ids)
+                # per-client extras carry (c − c_i) with a leading K axis
+                c_diff = jax.tree_util.tree_map(
+                    lambda g, l: jnp.broadcast_to(g[None], l.shape) - l, c, c_i)
+                extras = {"c_diff": c_diff}
+                w_locals, aux = jax.vmap(
+                    local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None))(
+                    keys, params, extras, cx, cy, lr_scale)
+                # control-variate update (option II):
+                # c_i⁺ = c_i − c + (w−w_i)/(S·lr)
+                denom = spec.n_steps * spec.lr * lr_scale
+                c_i_new = jax.tree_util.tree_map(
+                    lambda ci, cg, w, wl: ci - cg[None] + (w[None] - wl) / denom,
+                    c_i, c, params, w_locals)
+                new_params = tm.stacked_weighted_mean(w_locals, weights)
+                # c ← c + (K/N)·mean_i(c_i⁺ − c_i)
+                n_clients = jax.tree_util.tree_leaves(c_all)[0].shape[0]
+                frac = K / n_clients
+                c_new = jax.tree_util.tree_map(
+                    lambda cg, new, old: cg + frac * jnp.mean(new - old, axis=0),
+                    c, c_i_new, c_i)
+                c_all_new = tree_set_rows(c_all, ids, c_i_new)
+                state = {"c_global": c_new, "c_clients": c_all_new}
+                return new_params, state, jnp.mean(aux["loss"])
+
+            if algo == "moon":
+                w_prev_all = algo_state["w_prev"]
+                w_prev = tree_rows(w_prev_all, ids)
+                extras = {"w_global": params, "w_prev": w_prev}
+                w_locals, aux = jax.vmap(
+                    local,
+                    in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
+                    keys, params, extras, cx, cy, lr_scale)
+                new_params = tm.stacked_weighted_mean(w_locals, weights)
+                state = {"w_prev": tree_set_rows(w_prev_all, ids, w_locals)}
+                return new_params, state, jnp.mean(aux["loss"])
+
+            raise ValueError(f"unknown algorithm {algo!r}")
+
+        return body
+
+    def record(self, ledger, k: int, params: Pytree) -> None:
+        ledger.record_round(self.algorithm, k, params)
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+def make_eval_fn(task: Task, batch: int) -> Callable:
+    @jax.jit
+    def eval_batch(params, bx, by):
+        return task.accuracy(params, bx, by)
+
+    def evaluate(params, test_x, test_y) -> float:
+        n = len(test_y)
+        accs, ws = [], []
+        for s in range(0, n, batch):
+            bx = jnp.asarray(test_x[s:s + batch])
+            by = jnp.asarray(test_y[s:s + batch])
+            accs.append(float(eval_batch(params, bx, by)))
+            ws.append(len(by))
+        return float(np.average(accs, weights=ws))
+
+    return evaluate
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """Host-side schedule knobs shared by every strategy.
+
+    sampling="device" draws the per-round client subset inside the jitted
+    chunk program (``jax.random.permutation(k, n_clients)[:K]``);
+    "host" reproduces the seed drivers' ``np.random.default_rng(seed +
+    host_rng_offset)`` stream (the offset was 31 for P1, 17 for P2) and
+    feeds the precomputed ids in as scan inputs.
+
+    eval_every ≤ 0 disables evaluation entirely (benchmark mode);
+    otherwise the engine evaluates every ``eval_every`` rounds and on
+    the final round, exactly like the seed drivers.
+    """
+    rounds: int
+    lr_decay: float = 0.998
+    eval_every: int = 10
+    eval_batch: int = 256
+    seed: int = 0
+    chunk_size: int = 1
+    sampling: str = "device"        # device | host
+    host_rng_offset: int = 0
+
+    def __post_init__(self):
+        if self.sampling not in ("device", "host"):
+            raise ValueError(f"unknown sampling mode {self.sampling!r}")
+
+
+@dataclasses.dataclass
+class EngineResult:
+    params: Pytree
+    history: List[Dict[str, float]]
+    algo_state: Dict[str, Pytree]
+    server_state: Any = None
+
+
+def make_chunk_fn(task: Task, strategy, schedule: RoundSchedule,
+                  n_clients: int) -> Callable:
+    """Build the jitted R-round program.
+
+    signature: chunk_fn(key, params, algo_state, server_state,
+                        x_all, y_all, n_real, ids, lr_scales)
+               -> (key, params, algo_state, server_state, losses)
+    The per-round keys are derived INSIDE the scan by the same
+    ``key, rk = jax.random.split(key)`` recurrence the seed drivers ran
+    on the host (threefry is deterministic, so the streams are
+    bit-identical) — the host does zero per-round work.  lr_scales is
+    the (R,)-stacked decay schedule, ids is (R, K) for host sampling or
+    None for on-device sampling, and the four carries are donated so
+    chunk i+1 reuses chunk i's buffers.
+
+    Programs are cached on (task, strategy, sampling, n_clients) —
+    Task and the strategies are frozen dataclasses — so repeated engine
+    runs (benchmark sweeps, schedule phases reusing a config) skip
+    retracing; jax.jit then caches per chunk length R underneath.
+    """
+    return _cached_chunk_fn(task, strategy, schedule.sampling, n_clients)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_chunk_fn(task: Task, strategy, sampling: str,
+                     n_clients: int) -> Callable:
+    body = strategy.build_round(task)
+    server = strategy.make_server_update()
+    on_device = sampling == "device"
+    K = strategy.n_selected(n_clients)
+
+    def chunk(key, params, algo_state, server_state, x_all, y_all, n_real,
+              ids, lr_scales):
+        def one_round(carry, xs):
+            key, params, algo_state, server_state = carry
+            ids_r, lr_scale = xs
+            key, rk = jax.random.split(key)
+            if on_device:
+                k_sel, rk = jax.random.split(rk)
+                ids_r = jax.random.permutation(k_sel, n_clients)[:K]
+            weights = n_real[ids_r].astype(jnp.float32)
+            new_params, algo_state, loss = body(
+                rk, params, x_all, y_all, ids_r, weights, lr_scale, algo_state)
+            if server is not None:
+                new_params, server_state = server[1](params, new_params,
+                                                     server_state)
+            return (key, new_params, algo_state, server_state), loss
+
+        (key, params, algo_state, server_state), losses = jax.lax.scan(
+            one_round, (key, params, algo_state, server_state),
+            (ids, lr_scales))
+        return key, params, algo_state, server_state, losses
+
+    return jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
+
+
+def _rounds_until_eval(rnd: int, eval_every: int) -> int:
+    if eval_every <= 0:
+        return 1 << 30
+    return eval_every - (rnd % eval_every)
+
+
+def run_rounds(task: Task, data: FederatedDataset, strategy,
+               schedule: RoundSchedule, *,
+               init_params: Optional[Pytree] = None,
+               ledger=None, verbose: bool = False,
+               eval_fn: Optional[Callable] = None,
+               switch_policy=None,
+               phase: str = "P2",
+               label: Optional[str] = None) -> EngineResult:
+    """Run ``schedule.rounds`` rounds of ``strategy`` and return the
+    final params plus the per-round history.
+
+    The per-round key stream (split once per round from
+    ``PRNGKey(schedule.seed)``) and the lr-decay scalars are derived on
+    the host independently of chunking, so histories are invariant to
+    ``chunk_size`` and, with sampling="host" + the right offset,
+    bit-compatible with the seed drivers.
+    """
+    key = jax.random.PRNGKey(schedule.seed)
+    params = init_params if init_params is not None else task.init(key)
+    # donated carries: copy so the caller's init_params buffer survives
+    params = jax.tree_util.tree_map(jnp.array, params)
+
+    n_clients = data.n_clients
+    K = strategy.n_selected(n_clients)
+    algo_state = strategy.init_state(task, params, n_clients)
+    server = strategy.make_server_update()
+    server_state = server[0](params) if server is not None else ()
+
+    chunk_fn = make_chunk_fn(task, strategy, schedule, n_clients)
+    evaluate = eval_fn or make_eval_fn(task, schedule.eval_batch)
+    x_all, y_all, n_real = data.device_arrays()
+
+    host_rng = None
+    if schedule.sampling == "host":
+        host_rng = np.random.default_rng(schedule.seed + schedule.host_rng_offset)
+
+    label = label or getattr(strategy, "name", phase)
+    # per-round switch decisions need per-round dispatch
+    chunk = 1 if switch_policy is not None else max(1, schedule.chunk_size)
+
+    history: List[Dict[str, float]] = []
+    rnd = 0
+    while rnd < schedule.rounds:
+        R = min(chunk, schedule.rounds - rnd,
+                _rounds_until_eval(rnd, schedule.eval_every))
+        ids = None
+        if host_rng is not None:
+            ids = jnp.asarray(np.stack([
+                host_rng.choice(n_clients, size=K, replace=False)
+                for _ in range(R)]))
+        lr_scales = jnp.asarray(
+            [schedule.lr_decay ** (rnd + j) for j in range(R)], jnp.float32)
+
+        key, params, algo_state, server_state, losses = chunk_fn(
+            key, params, algo_state, server_state, x_all, y_all, n_real,
+            ids, lr_scales)
+        losses = np.asarray(losses)
+
+        for j in range(R):
+            if ledger is not None:
+                strategy.record(ledger, K, params)
+            history.append({"round": rnd + j, "local_loss": float(losses[j]),
+                            "phase": phase})
+        rnd += R
+
+        if schedule.eval_every > 0 and (
+                rnd % schedule.eval_every == 0 or rnd == schedule.rounds):
+            row = history[-1]
+            row["acc"] = evaluate(params, data.test_x, data.test_y)
+            if verbose:
+                print(f"[{label}] round {rnd}/{schedule.rounds} "
+                      f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
+                      flush=True)
+        if switch_policy is not None and switch_policy.should_switch(
+                rnd - 1, history):
+            break
+
+    return EngineResult(params=params, history=history,
+                        algo_state=algo_state, server_state=server_state)

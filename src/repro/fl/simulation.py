@@ -1,11 +1,12 @@
-"""Federated-training simulation driver (P2).
+"""Federated-training simulation driver (P2) — a configuration shim over
+the shared round engine (repro.fl.engine).
 
-Each round compiles to ONE XLA program: the K selected clients' local
+Each round compiles into ONE XLA program: the K selected clients' local
 runs are a ``vmap`` over the stacked client axis, and the FedAvg
 aggregation is a weighted mean over that axis — the exact computation
 that becomes a ``psum`` over the mesh ``data`` axis on a pod (see
-repro/launch/train.py for the sharded version; this module is the
-host-simulation used for the paper's accuracy/convergence experiments).
+repro/launch/train.py for the sharded version).  The engine additionally
+scans ``chunk_size`` rounds per dispatch and samples clients on device.
 
 Algorithms: FedAvg, FedProx, SCAFFOLD, Moon — selected by name so
 CyclicFL ("Cyclic+Y") composes with any of them.
@@ -13,22 +14,30 @@ CyclicFL ("Cyclic+Y") composes with any of them.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.data.federated import FederatedDataset
-from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.engine import (
+    ALGORITHMS,
+    AggregateStrategy,
+    RoundSchedule,
+    make_eval_fn,
+    run_rounds,
+)
+from repro.fl.local import LocalSpec
 from repro.fl.task import Task
-from repro.utils import tree_math as tm
 
 Pytree = Any
 
-ALGORITHMS = ("fedavg", "fedprox", "scaffold", "moon")
+__all__ = [
+    "ALGORITHMS", "FLConfig", "ServerState", "FLResult", "make_round_fn",
+    "make_server_update", "make_eval_fn", "init_server_state", "run_federated",
+]
+
+# the seed driver drew P2 client ids from np.random.default_rng(seed + 17)
+HOST_RNG_OFFSET_P2 = 17
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +63,8 @@ class FLConfig:
     eval_every: int = 10
     eval_batch: int = 256
     seed: int = 0
+    chunk_size: int = 8             # rounds per XLA dispatch (engine)
+    sampling: str = "device"        # device | host (seed-compatible)
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -66,6 +77,19 @@ class FLConfig:
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant=variant, mu=self.mu, temperature=self.temperature,
             grad_clip=self.grad_clip)
+
+    def strategy(self) -> AggregateStrategy:
+        return AggregateStrategy(
+            spec=self.local_spec(), algorithm=self.algorithm,
+            participation=self.participation, server_opt=self.server_opt,
+            server_lr=self.server_lr, server_momentum=self.server_momentum)
+
+    def schedule(self) -> RoundSchedule:
+        return RoundSchedule(
+            rounds=self.rounds, lr_decay=self.lr_decay,
+            eval_every=self.eval_every, eval_batch=self.eval_batch,
+            seed=self.seed, chunk_size=self.chunk_size,
+            sampling=self.sampling, host_rng_offset=HOST_RNG_OFFSET_P2)
 
 
 @dataclasses.dataclass
@@ -88,131 +112,31 @@ class FLResult:
         return max(rows, key=lambda h: h[key]) if rows else {}
 
 
-def _stack_copies(tree: Pytree, n: int) -> Pytree:
-    return jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), tree)
-
-
-def _tree_rows(tree: Pytree, ids: jnp.ndarray) -> Pytree:
-    return jax.tree_util.tree_map(lambda x: x[ids], tree)
-
-
-def _tree_set_rows(tree: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
-    return jax.tree_util.tree_map(lambda x, r: x.at[ids].set(r.astype(x.dtype)),
-                                  tree, rows)
-
-
 def make_round_fn(task: Task, cfg: FLConfig) -> Callable:
-    """Build the jitted one-round update.
+    """Build the jitted one-round update (single-round compatibility
+    surface over AggregateStrategy — the loop lives in repro.fl.engine).
 
     signature: round_fn(key, params, x_all, y_all, ids, weights, lr_scale,
                         algo_state) -> (params, algo_state, metrics)
-    where algo_state carries the algorithm's extra tensors (see below) and
-    x_all/y_all are the full stacked client arrays living on device.
     """
-    spec = cfg.local_spec()
-    local = make_local_fn(task, spec)
-    algo = cfg.algorithm
+    body = cfg.strategy().build_round(task)
 
     @jax.jit
     def round_fn(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
-        K = ids.shape[0]
-        keys = jax.random.split(key, K)
-        cx = x_all[ids]
-        cy = y_all[ids]
-
-        if algo in ("fedavg", "fedprox"):
-            extras = {"w_global": params} if algo == "fedprox" else {}
-            in_ext = jax.tree_util.tree_map(lambda _: None, extras)
-            w_locals, aux = jax.vmap(
-                local, in_axes=(0, None, in_ext, 0, 0, None))(
-                keys, params, extras, cx, cy, lr_scale)
-            new_params = tm.stacked_weighted_mean(w_locals, weights)
-            return new_params, algo_state, {"local_loss": jnp.mean(aux["loss"])}
-
-        if algo == "scaffold":
-            c, c_all = algo_state["c_global"], algo_state["c_clients"]
-            c_i = _tree_rows(c_all, ids)
-            # per-client extras carry (c − c_i) with a leading K axis
-            c_diff = jax.tree_util.tree_map(
-                lambda g, l: jnp.broadcast_to(g[None], l.shape) - l, c, c_i)
-            extras = {"c_diff": c_diff}
-            w_locals, aux = jax.vmap(
-                local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None))(
-                keys, params, extras, cx, cy, lr_scale)
-            # control-variate update (option II): c_i⁺ = c_i − c + (w−w_i)/(S·lr)
-            denom = spec.n_steps * spec.lr * lr_scale
-            c_i_new = jax.tree_util.tree_map(
-                lambda ci, cg, w, wl: ci - cg[None] + (w[None] - wl) / denom,
-                c_i, c, params, w_locals)
-            new_params = tm.stacked_weighted_mean(w_locals, weights)
-            # c ← c + (K/N)·mean_i(c_i⁺ − c_i)
-            n_clients = jax.tree_util.tree_leaves(c_all)[0].shape[0]
-            frac = K / n_clients
-            c_new = jax.tree_util.tree_map(
-                lambda cg, new, old: cg + frac * jnp.mean(new - old, axis=0),
-                c, c_i_new, c_i)
-            c_all_new = _tree_set_rows(c_all, ids, c_i_new)
-            state = {"c_global": c_new, "c_clients": c_all_new}
-            return new_params, state, {"local_loss": jnp.mean(aux["loss"])}
-
-        if algo == "moon":
-            w_prev_all = algo_state["w_prev"]
-            w_prev = _tree_rows(w_prev_all, ids)
-            extras = {"w_global": params, "w_prev": w_prev}
-            w_locals, aux = jax.vmap(
-                local, in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
-                keys, params, extras, cx, cy, lr_scale)
-            new_params = tm.stacked_weighted_mean(w_locals, weights)
-            state = {"w_prev": _tree_set_rows(w_prev_all, ids, w_locals)}
-            return new_params, state, {"local_loss": jnp.mean(aux["loss"])}
-
-        raise ValueError(f"unknown algorithm {algo!r}")
+        params, algo_state, loss = body(key, params, x_all, y_all, ids,
+                                        weights, lr_scale, algo_state)
+        return params, algo_state, {"local_loss": loss}
 
     return round_fn
 
 
 def make_server_update(cfg: FLConfig):
-    """Server-side optimizer step (beyond-paper, Reddi et al. adaptive
-    federated optimization): pseudo-gradient g = w − w_avg, so
-    server_opt="momentum" with lr=1 reduces to FedAvgM and
-    server_opt="none" to vanilla FedAvg (w ← w_avg exactly).
-
-    Returns (init_fn, update_fn) or None for "none"."""
-    if cfg.server_opt == "none":
+    """Server-side optimizer step; see AggregateStrategy.make_server_update.
+    Returns (init_fn, jitted_update_fn) or None for "none"."""
+    server = cfg.strategy().make_server_update()
+    if server is None:
         return None
-    from repro.optim.optimizers import adamw, sgd
-    if cfg.server_opt == "momentum":
-        opt = sgd(cfg.server_lr, momentum=cfg.server_momentum)
-    elif cfg.server_opt == "adam":
-        opt = adamw(cfg.server_lr, b1=0.9, b2=0.99)
-    else:
-        raise ValueError(f"unknown server_opt {cfg.server_opt!r}")
-
-    @jax.jit
-    def update(params, avg_params, state):
-        pseudo_grad = tm.sub(params, avg_params)
-        return opt.apply(pseudo_grad, state, params)
-
-    return opt.init, update
-
-
-def make_eval_fn(task: Task, batch: int) -> Callable:
-    @functools.partial(jax.jit, static_argnums=())
-    def eval_batch(params, bx, by):
-        return task.accuracy(params, bx, by)
-
-    def evaluate(params, test_x, test_y) -> float:
-        n = len(test_y)
-        accs, ws = [], []
-        for s in range(0, n, batch):
-            bx = jnp.asarray(test_x[s:s + batch])
-            by = jnp.asarray(test_y[s:s + batch])
-            accs.append(float(eval_batch(params, bx, by)))
-            ws.append(len(by))
-        return float(np.average(accs, weights=ws))
-
-    return evaluate
+    return server[0], jax.jit(server[1])
 
 
 def init_server_state(task: Task, cfg: FLConfig, n_clients: int,
@@ -222,70 +146,27 @@ def init_server_state(task: Task, cfg: FLConfig, n_clients: int,
         key = key if key is not None else jax.random.PRNGKey(cfg.seed)
         init_params = task.init(key)
     st = ServerState(params=init_params)
-    if cfg.algorithm == "scaffold":
-        st.c_global = tm.zeros_like(init_params)
-        st.c_clients = _stack_copies(tm.zeros_like(init_params), n_clients)
-    if cfg.algorithm == "moon":
-        st.w_prev = _stack_copies(init_params, n_clients)
+    algo_state = cfg.strategy().init_state(task, init_params, n_clients)
+    st.c_global = algo_state.get("c_global")
+    st.c_clients = algo_state.get("c_clients")
+    st.w_prev = algo_state.get("w_prev")
     return st
 
 
 def run_federated(task: Task, data: FederatedDataset, cfg: FLConfig,
                   init_params: Optional[Pytree] = None,
                   ledger=None, verbose: bool = False,
-                  eval_fn: Optional[Callable] = None) -> FLResult:
+                  eval_fn: Optional[Callable] = None,
+                  switch_policy=None, phase: str = "P2") -> FLResult:
     """The P2 driver.  ``init_params`` is where CyclicFL plugs in: pass the
     P1-pre-trained model to get "Cyclic+<algorithm>"."""
     assert cfg.algorithm in ALGORITHMS, cfg.algorithm
-    rng = np.random.default_rng(cfg.seed + 17)
-    key = jax.random.PRNGKey(cfg.seed)
-
-    state = init_server_state(task, cfg, data.n_clients, init_params, key)
-    round_fn = make_round_fn(task, cfg)
-    evaluate = eval_fn or make_eval_fn(task, cfg.eval_batch)
-
-    x_all, y_all, n_real = data.device_arrays()
-    K = cfg.n_selected(data.n_clients)
-    history: List[Dict[str, float]] = []
-
-    algo_state: Dict[str, Pytree] = {}
-    if cfg.algorithm == "scaffold":
-        algo_state = {"c_global": state.c_global, "c_clients": state.c_clients}
-    elif cfg.algorithm == "moon":
-        algo_state = {"w_prev": state.w_prev}
-
-    server = make_server_update(cfg)
-    server_state = server[0](state.params) if server else None
-
-    params = state.params
-    for rnd in range(cfg.rounds):
-        ids = jnp.asarray(rng.choice(data.n_clients, size=K, replace=False))
-        weights = n_real[ids].astype(jnp.float32)
-        lr_scale = jnp.asarray(cfg.lr_decay ** rnd, jnp.float32)
-        key, rk = jax.random.split(key)
-        avg_params, algo_state, metrics = round_fn(
-            rk, params, x_all, y_all, ids, weights, lr_scale, algo_state)
-        if server is not None:
-            params, server_state = server[1](params, avg_params, server_state)
-        else:
-            params = avg_params
-        if ledger is not None:
-            ledger.record_round(cfg.algorithm, K, params)
-        row = {"round": rnd, "local_loss": float(metrics["local_loss"]),
-               "phase": "P2"}
-        if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            row["acc"] = evaluate(params, data.test_x, data.test_y)
-            if verbose:
-                print(f"[{cfg.algorithm}] round {rnd + 1}/{cfg.rounds} "
-                      f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
-                      flush=True)
-        history.append(row)
-
-    state.params = params
-    state.round = cfg.rounds
-    if cfg.algorithm == "scaffold":
-        state.c_global = algo_state["c_global"]
-        state.c_clients = algo_state["c_clients"]
-    elif cfg.algorithm == "moon":
-        state.w_prev = algo_state["w_prev"]
-    return FLResult(params=params, history=history, state=state)
+    res = run_rounds(task, data, cfg.strategy(), cfg.schedule(),
+                     init_params=init_params, ledger=ledger, verbose=verbose,
+                     eval_fn=eval_fn, switch_policy=switch_policy,
+                     phase=phase, label=cfg.algorithm)
+    state = ServerState(params=res.params, round=len(res.history),
+                        c_global=res.algo_state.get("c_global"),
+                        c_clients=res.algo_state.get("c_clients"),
+                        w_prev=res.algo_state.get("w_prev"))
+    return FLResult(params=res.params, history=res.history, state=state)

@@ -184,6 +184,23 @@ def cnn_femnist_apply(p: Pytree, x: jnp.ndarray, train: bool = False, rng=None) 
 # CNN-Fashion: 2 conv + dropout + 2 FC
 # ---------------------------------------------------------------------------
 
+def mlp_init(key, n_classes: int = 10, in_ch: int = 1, d_hidden: int = 64,
+             img: int = 28) -> Pytree:
+    """Two-layer MLP — not a paper model; the matmul-only workload used by
+    dispatch/throughput microbenchmarks where conv cost would mask the
+    effect being measured."""
+    ks = jax.random.split(key, 2)
+    return {
+        "f1": init_fc(ks[0], img * img * in_ch, d_hidden),
+        "f2": init_fc(ks[1], d_hidden, n_classes),
+    }
+
+
+def mlp_apply(p: Pytree, x: jnp.ndarray, train: bool = False, rng=None) -> jnp.ndarray:
+    x = x.reshape(x.shape[0], -1)
+    return fc(p["f2"], jax.nn.relu(fc(p["f1"], x)))
+
+
 def cnn_fashion_init(key, n_classes: int = 10, in_ch: int = 1) -> Pytree:
     ks = jax.random.split(key, 4)
     return {
@@ -265,4 +282,5 @@ PAPER_MODELS.register("lenet5")((lenet5_init, lenet5_apply, "vision"))
 PAPER_MODELS.register("resnet8")((resnet8_init, resnet8_apply, "vision"))
 PAPER_MODELS.register("cnn_femnist")((cnn_femnist_init, cnn_femnist_apply, "vision"))
 PAPER_MODELS.register("cnn_fashion")((cnn_fashion_init, cnn_fashion_apply, "vision"))
+PAPER_MODELS.register("mlp")((mlp_init, mlp_apply, "vision"))
 PAPER_MODELS.register("charlstm")((charlstm_init, charlstm_apply, "charlm"))

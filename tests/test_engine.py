@@ -1,0 +1,200 @@
+"""Round-engine tests: chunk-size invariance, determinism, seed-driver
+parity, and the declarative phase schedule.
+
+The seed repo drove P1/P2 with per-round host loops (np.random client
+sampling + one jit dispatch per round).  The engine must (a) reproduce
+those semantics exactly in sampling="host" mode — asserted here against
+step-by-step reference loops built from the kept single-round fns — and
+(b) be invariant to how many rounds are fused into one XLA dispatch.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cyclic import (HOST_RNG_OFFSET_P1, CyclicConfig,
+                               cyclic_pretrain, make_cyclic_round_fn)
+from repro.core.pipeline import Phase, run_phase_schedule
+from repro.core.switch import FixedRounds
+from repro.data.synthetic import DATASETS
+from repro.fl.simulation import (HOST_RNG_OFFSET_P2, FLConfig,
+                                 init_server_state, make_round_fn,
+                                 run_federated)
+from repro.fl.task import vision_task
+
+SEED = 0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = DATASETS.get("cifar10-like")(n_clients=8, beta=0.5, seed=SEED,
+                                        n_train=512, n_test=256)
+    task = vision_task("lenet5", n_classes=10, in_ch=3)
+    return task, data
+
+
+def _fl(algorithm="fedavg", rounds=4, **kw):
+    return FLConfig(algorithm=algorithm, rounds=rounds, participation=0.25,
+                    local_steps=4, eval_every=2, seed=SEED, **kw)
+
+
+def _leaves32(tree):
+    return [np.asarray(x, np.float32) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# chunk-size invariance (satellite: parity test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["fedavg", "scaffold"])
+def test_chunked_matches_per_round(setup, algorithm):
+    """chunk=4 must produce the same history/params as chunk=1: the
+    per-round key stream and lr schedule are chunk-independent."""
+    task, data = setup
+    r1 = run_federated(task, data, _fl(algorithm, chunk_size=1))
+    r4 = run_federated(task, data, _fl(algorithm, chunk_size=4))
+    assert len(r1.history) == len(r4.history)
+    for a, b in zip(r1.history, r4.history):
+        assert a["round"] == b["round"] and a["phase"] == b["phase"]
+        assert abs(a["local_loss"] - b["local_loss"]) <= 1e-5
+        assert abs(a.get("acc", 0.0) - b.get("acc", 0.0)) <= 1e-5
+    for a, b in zip(_leaves32(r1.params), _leaves32(r4.params)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_relay_matches_per_round(setup):
+    task, data = setup
+    cfg1 = CyclicConfig(rounds=4, participation=0.25, local_steps=4,
+                        eval_every=2, seed=SEED, chunk_size=1)
+    r1 = cyclic_pretrain(task, data, cfg1)
+    r4 = cyclic_pretrain(task, data, dc.replace(cfg1, chunk_size=4))
+    for a, b in zip(r1.history, r4.history):
+        assert abs(a["local_loss"] - b["local_loss"]) <= 1e-5
+    for a, b in zip(_leaves32(r1.params), _leaves32(r4.params)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# determinism (on-device keyed sampling replaces host RNG state)
+# ---------------------------------------------------------------------------
+
+def test_engine_runs_are_deterministic(setup):
+    task, data = setup
+    a = run_federated(task, data, _fl("fedavg"))
+    b = run_federated(task, data, _fl("fedavg"))
+    assert a.history == b.history
+    for x, y in zip(_leaves32(a.params), _leaves32(b.params)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_relay_runs_are_deterministic(setup):
+    task, data = setup
+    cfg = CyclicConfig(rounds=3, participation=0.25, local_steps=4,
+                       eval_every=1, seed=SEED)
+    assert cyclic_pretrain(task, data, cfg).history == \
+        cyclic_pretrain(task, data, cfg).history
+
+
+# ---------------------------------------------------------------------------
+# seed-driver parity (sampling="host" reproduces the pre-engine loops)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_host_sampling_matches_seed_fl_loop(setup, chunk):
+    """Reference reimplementation of the seed run_federated host loop
+    (np rng(seed+17) sampling, one dispatch per round) vs the engine."""
+    task, data = setup
+    cfg = _fl("fedavg", rounds=4, chunk_size=chunk, sampling="host")
+
+    rng = np.random.default_rng(cfg.seed + HOST_RNG_OFFSET_P2)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_server_state(task, cfg, data.n_clients, None, key).params
+    round_fn = make_round_fn(task, cfg)
+    x_all, y_all, n_real = data.device_arrays()
+    K = cfg.n_selected(data.n_clients)
+    ref_losses = []
+    for rnd in range(cfg.rounds):
+        ids = jnp.asarray(rng.choice(data.n_clients, size=K, replace=False))
+        weights = n_real[ids].astype(jnp.float32)
+        lr_scale = jnp.asarray(cfg.lr_decay ** rnd, jnp.float32)
+        key, rk = jax.random.split(key)
+        params, _, metrics = round_fn(rk, params, x_all, y_all, ids, weights,
+                                      lr_scale, {})
+        ref_losses.append(float(metrics["local_loss"]))
+
+    res = run_federated(task, data, cfg)
+    got_losses = [h["local_loss"] for h in res.history]
+    np.testing.assert_allclose(got_losses, ref_losses, atol=1e-5, rtol=1e-5)
+    for a, b in zip(_leaves32(res.params), _leaves32(params)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_host_sampling_matches_seed_cyclic_loop(setup):
+    """Same for P1: np rng(seed+31) sampling + per-round relay dispatch."""
+    task, data = setup
+    cfg = CyclicConfig(rounds=3, participation=0.25, local_steps=4,
+                       eval_every=1, seed=SEED, chunk_size=4, sampling="host")
+
+    rng = np.random.default_rng(cfg.seed + HOST_RNG_OFFSET_P1)
+    key = jax.random.PRNGKey(cfg.seed)
+    params = task.init(key)
+    round_fn = make_cyclic_round_fn(task, cfg)
+    x_all, y_all, _ = data.device_arrays()
+    K = cfg.n_selected(data.n_clients)
+    ref_losses = []
+    for rnd in range(cfg.rounds):
+        ids = jnp.asarray(rng.choice(data.n_clients, size=K, replace=False))
+        lr_scale = jnp.asarray(cfg.lr_decay ** rnd, jnp.float32)
+        key, rk = jax.random.split(key)
+        params, metrics = round_fn(rk, params, x_all, y_all, ids, lr_scale)
+        ref_losses.append(float(metrics["local_loss"]))
+
+    res = cyclic_pretrain(task, data, cfg)
+    got_losses = [h["local_loss"] for h in res.history]
+    np.testing.assert_allclose(got_losses, ref_losses, atol=1e-5, rtol=1e-5)
+    for a, b in zip(_leaves32(res.params), _leaves32(params)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine-owned plumbing
+# ---------------------------------------------------------------------------
+
+def test_init_params_buffer_survives_engine_donation(setup):
+    """The engine donates its carries; the caller's init_params must not
+    be invalidated (the pipeline reuses P1 params after P2 starts)."""
+    task, data = setup
+    w0 = task.init(jax.random.PRNGKey(SEED))
+    run_federated(task, data, _fl("fedavg", rounds=2), init_params=w0)
+    for leaf in jax.tree_util.tree_leaves(w0):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_switch_policy_applies_to_aggregate_phase(setup):
+    """Policies now gate ANY phase boundary, not just P1."""
+    task, data = setup
+    res = run_federated(task, data, _fl("fedavg", rounds=6),
+                        switch_policy=FixedRounds(t_cyc=2))
+    assert len(res.history) == 2
+
+
+def test_phase_schedule_alternation(setup):
+    """Multi-cycle P1↔P2 alternation through one ledger — the scenario
+    the declarative schedule unlocks."""
+    task, data = setup
+    cyc = CyclicConfig(rounds=2, participation=0.25, local_steps=4,
+                       eval_every=1, seed=SEED)
+    fl = _fl("fedavg", rounds=2)
+    sched = run_phase_schedule(task, data, [
+        Phase("P1", cyc), Phase("P2", fl),
+        Phase("P1'", cyc), Phase("P2'", fl),
+    ])
+    hist = sched.history
+    assert [h["phase"] for h in hist] == ["P1"] * 2 + ["P2"] * 2 + \
+        ["P1'"] * 2 + ["P2'"] * 2
+    assert [h["round"] for h in hist] == list(range(8))
+    led = sched.ledger.summary()
+    assert led["p1_rounds"] == 4 and led["p2_rounds"] == 4
+    assert np.isfinite(hist[-1]["local_loss"])

@@ -8,6 +8,9 @@ Python) and deadlines disabled.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
