@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-quick bench-engine
+.PHONY: test test-fast verify bench-quick bench-engine bench-pod
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -10,8 +10,13 @@ test:            ## tier-1 suite (ROADMAP verify command)
 test-fast:       ## tier-1 minus tests marked slow
 	$(PY) -m pytest -x -q -m "not slow"
 
+verify: test     ## alias for the tier-1 verify command
+
 bench-quick:     ## minutes-scale sanity benchmark (Table II subset)
 	$(PY) -m benchmarks.run --only table2 --scale quick
 
 bench-engine:    ## round-engine dispatch benchmark (chunk 1/4/16)
 	$(PY) -m benchmarks.perf_round_engine
+
+bench-pod:       ## pod-backend dispatch benchmark (chunked vs per-round)
+	$(PY) -m benchmarks.perf_pod_round

@@ -1,0 +1,188 @@
+"""Pod round-dispatch benchmark: chunked engine vs per-round dispatch.
+
+The pre-PR-2 pod driver dispatched ONE XLA program per federated round
+and pre-sampled every batch on the host with NumPy, so at reduced scale
+the host round-trip bounds throughput exactly like it did for the host
+simulator.  The engine-backed pod path samples clients AND batches on
+device and scans ``chunk_size`` rounds per dispatch with donated sharded
+carries; this benchmark measures rounds/sec for
+
+  per-round : the legacy loop (jit(make_pod_*_round) once per round,
+              host-side sample_round_batches) — the seed pod driver,
+  chunk=1   : the engine with one dispatch per round,
+  chunk=8   : the engine with 8 rounds fused into one dispatch,
+
+for both the P1 relay and the P2 fedavg round on a 1-device host mesh
+(the same programs the real mesh runs — see tests/test_pod_engine.py for
+the multi-device layout checks).
+
+    PYTHONPATH=src python -m benchmarks.perf_pod_round
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.configs import get_reduced
+from repro.data.synthetic import DATASETS
+from repro.fl.engine import RoundSchedule, run_rounds
+from repro.fl.pod import PodAggregateStrategy, PodFLSpec, PodRelayStrategy
+from repro.fl.task import lm_task
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import (
+    make_pod_cyclic_round,
+    make_pod_fl_round,
+    sample_round_batches,
+)
+from repro.sharding import rules
+
+CHUNKS = (1, 8)
+
+
+def _micro_cfg():
+    # dispatch-bound on purpose: the benchmark isolates host round-trip
+    # overhead, so per-round device compute is kept tiny
+    base = get_reduced("tinyllama-1.1b")
+    return dataclasses.replace(base, name="tinyllama-micro", d_model=64,
+                               n_heads=2, n_kv_heads=2, head_dim=32,
+                               d_ff=128)
+
+
+def _setup(n_clients: int, seed: int):
+    cfg = _micro_cfg()
+    data = DATASETS.get("tokenlm-bigram")(
+        n_clients=n_clients, seed=seed, seq_len=16, n_seq_per_client=16,
+        vocab=cfg.vocab_size, n_test=32)
+    return cfg, lm_task(cfg), data
+
+
+def _time_run(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_legacy(cfg, data, mesh, *, kind: str, rounds: int, K: int,
+                 spec: PodFLSpec, seed: int, repeats: int) -> Dict:
+    """The seed pod loop: one jit dispatch + host batch sampling per
+    round."""
+    from repro.models.transformer import init_lm
+    p_specs = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    p_sh = rules.param_shardings(p_specs, mesh)
+    if kind == "relay":
+        round_j = jax.jit(make_pod_cyclic_round(cfg, spec),
+                          in_shardings=(p_sh, None, None),
+                          out_shardings=(p_sh, None))
+    else:
+        round_j = jax.jit(make_pod_fl_round(cfg, spec),
+                          in_shardings=(p_sh, None, None, None),
+                          out_shardings=(p_sh, None))
+
+    def run():
+        rng = np.random.default_rng(seed)
+        params = init_lm(jax.random.PRNGKey(seed), cfg)
+        for _ in range(rounds):
+            ids = rng.choice(data.n_clients, size=K, replace=False)
+            batches = sample_round_batches(data, ids, spec.local_steps,
+                                           spec.batch_size, rng)
+            if kind == "relay":
+                params, m = round_j(params, batches, jnp.float32(1.0))
+            else:
+                weights = jnp.asarray(data.n_real[ids], jnp.float32)
+                params, m = round_j(params, batches, weights,
+                                    jnp.float32(1.0))
+        jax.block_until_ready(m["local_loss"])
+
+    run()                                       # compile + warm caches
+    secs = _time_run(run, repeats)
+    return {"strategy": kind, "dispatch": "per-round", "rounds": rounds,
+            "secs": round(secs, 4),
+            "rounds_per_sec": round(rounds / secs, 2)}
+
+
+def bench_engine(task, data, mesh, *, kind: str, rounds: int, K: int,
+                 spec: PodFLSpec, seed: int, repeats: int) -> List[Dict]:
+    rows = []
+    if kind == "relay":
+        strat = PodRelayStrategy(spec=spec.local_spec("plain"), mesh=mesh,
+                                 clients_per_round=K)
+    else:
+        strat = PodAggregateStrategy(spec=spec.local_spec(),
+                                     algorithm=spec.algorithm, mesh=mesh,
+                                     clients_per_round=K)
+    for chunk in CHUNKS:
+        sched = RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                              seed=seed, chunk_size=chunk)
+        run = lambda: run_rounds(task, data, strat, sched)   # noqa: E731
+        run()                                   # compile + warm caches
+        secs = _time_run(run, repeats)
+        rows.append({"strategy": kind, "dispatch": f"chunk={chunk}",
+                     "rounds": rounds, "secs": round(secs, 4),
+                     "rounds_per_sec": round(rounds / secs, 2)})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--clients-per-round", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", default=None, help="accepted for run.py "
+                    "compatibility; presets do not change this benchmark")
+    args = ap.parse_args(argv)
+    if args.rounds < 1 or args.repeats < 1:
+        ap.error("--rounds and --repeats must be >= 1")
+
+    cfg, task, data = _setup(args.clients, args.seed)
+    mesh = make_host_mesh()
+    spec = PodFLSpec(local_steps=args.local_steps, batch_size=args.batch,
+                     lr=0.01)
+    print(f"[perf_pod_round] {args.rounds} rounds × {args.clients} clients "
+          f"(K={args.clients_per_round}), local_steps={args.local_steps}",
+          flush=True)
+    rows: List[Dict] = []
+    for kind in ("relay", "fedavg"):
+        rows.append(bench_legacy(cfg, data, mesh, kind=kind,
+                                 rounds=args.rounds,
+                                 K=args.clients_per_round, spec=spec,
+                                 seed=args.seed, repeats=args.repeats))
+        rows += bench_engine(task, data, mesh, kind=kind, rounds=args.rounds,
+                             K=args.clients_per_round, spec=spec,
+                             seed=args.seed, repeats=args.repeats)
+        base = rows[-1 - len(CHUNKS)]["rounds_per_sec"]
+        for r in rows[-1 - len(CHUNKS):]:
+            r["speedup_vs_per_round"] = round(r["rounds_per_sec"] / base, 2)
+            print(f"  {r['strategy']:8s} {r['dispatch']:10s} "
+                  f"{r['rounds_per_sec']:8.2f} rounds/s "
+                  f"({r['secs']:.3f}s / {r['rounds']} rounds)", flush=True)
+    save_result("perf_pod_round", {"config": vars(args), "rows": rows})
+
+    ok = True
+    for kind in ("relay", "fedavg"):
+        sub = {r["dispatch"]: r["rounds_per_sec"] for r in rows
+               if r["strategy"] == kind}
+        if not sub["chunk=8"] >= sub["per-round"]:
+            print(f"[perf_pod_round] REGRESSION: {kind} chunk=8 "
+                  f"({sub['chunk=8']}) slower than per-round dispatch "
+                  f"({sub['per-round']})", file=sys.stderr)
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

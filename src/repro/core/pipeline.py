@@ -14,7 +14,7 @@ Table-IV accounting is measured, not asserted; switch policies
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.comm_accounting import CommLedger
 from repro.core.cyclic import CyclicConfig, CyclicResult, cyclic_pretrain
@@ -22,26 +22,55 @@ from repro.data.federated import FederatedDataset
 from repro.fl.simulation import FLConfig, FLResult, run_federated
 from repro.fl.task import Task
 
+# ---------------------------------------------------------------------------
+# phase-runner registry: config type -> (kind, runner).  A runner has the
+# shared driver signature runner(task, data, cfg, *, init_params, ledger,
+# verbose, eval_fn, switch_policy, phase) and returns an object with
+# ``.params`` and ``.history``.  Backends register their configs here
+# (repro.fl.pod adds the sharded pod configs) so the SAME declarative
+# schedule drives host simulation and mesh training.
+# ---------------------------------------------------------------------------
+
+_PHASE_RUNNERS: Dict[type, Tuple[str, Callable]] = {}
+
+
+def register_phase_runner(cfg_type: type, kind: str,
+                          runner: Callable) -> None:
+    """Make ``Phase(cfg=<cfg_type instance>)`` runnable.  ``kind`` is
+    "relay" (P1-style, no aggregation) or "aggregate"."""
+    _PHASE_RUNNERS[cfg_type] = (kind, runner)
+
+
+def _lookup_runner(cfg) -> Tuple[str, Callable]:
+    for t in type(cfg).__mro__:
+        if t in _PHASE_RUNNERS:
+            return _PHASE_RUNNERS[t]
+    raise TypeError(f"no phase runner registered for {type(cfg).__name__}; "
+                    "see core.pipeline.register_phase_runner")
+
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
-    """One schedule entry.  ``cfg`` decides the strategy: a CyclicConfig
-    runs the P1 relay, an FLConfig runs aggregation rounds.  The phase
+    """One schedule entry.  ``cfg`` decides strategy AND backend through
+    the runner registry: CyclicConfig/FLConfig run on the host engine,
+    the repro.fl.pod configs on the sharded mesh backend.  The phase
     ``name`` tags the history rows; ``switch_policy`` may end the phase
-    early (the engine then advances to the next phase)."""
+    early (the engine then advances to the next phase); ``eval_fn``
+    overrides the engine's default test-set evaluation for this phase."""
     name: str
-    cfg: Union[CyclicConfig, FLConfig]
+    cfg: Any
     switch_policy: Optional[object] = None
+    eval_fn: Optional[Callable] = None
 
     @property
     def kind(self) -> str:
-        return "relay" if isinstance(self.cfg, CyclicConfig) else "aggregate"
+        return _lookup_runner(self.cfg)[0]
 
 
 @dataclasses.dataclass
 class PhaseResult:
     phase: Phase
-    result: Union[CyclicResult, FLResult]
+    result: Any                      # CyclicResult | FLResult | EngineResult
 
     @property
     def history(self) -> List[Dict[str, float]]:
@@ -92,19 +121,17 @@ def run_phase_schedule(task: Task, data: FederatedDataset,
     params = None
     results: List[PhaseResult] = []
     for ph in phases:
-        if ph.kind == "relay":
-            res = cyclic_pretrain(task, data, ph.cfg, init_params=params,
-                                  ledger=ledger, verbose=verbose,
-                                  switch_policy=ph.switch_policy,
-                                  phase=ph.name)
-        else:
-            res = run_federated(task, data, ph.cfg, init_params=params,
-                                ledger=ledger, verbose=verbose,
-                                switch_policy=ph.switch_policy,
-                                phase=ph.name)
+        _, runner = _lookup_runner(ph.cfg)
+        res = runner(task, data, ph.cfg, init_params=params,
+                     ledger=ledger, verbose=verbose, eval_fn=ph.eval_fn,
+                     switch_policy=ph.switch_policy, phase=ph.name)
         params = res.params
         results.append(PhaseResult(phase=ph, result=res))
     return ScheduleResult(phases=results, ledger=ledger)
+
+
+register_phase_runner(CyclicConfig, "relay", cyclic_pretrain)
+register_phase_runner(FLConfig, "aggregate", run_federated)
 
 
 # ---------------------------------------------------------------------------

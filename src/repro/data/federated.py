@@ -35,8 +35,8 @@ class FederatedDataset:
     test_y: np.ndarray
     n_classes: int
     name: str = "federated"
-    _device_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = \
-        dataclasses.field(default=None, init=False, repr=False, compare=False)
+    _device_cache: Dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     @property
     def n_clients(self) -> int:
@@ -108,14 +108,28 @@ class FederatedDataset:
         x_all, y_all, _ = self.device_arrays()
         return x_all[client][idx], y_all[client][idx]
 
-    def device_arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    def device_arrays(self, shardings=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Stacked client arrays on device, uploaded once and cached —
         every round/batch access indexes the resident copies instead of
-        re-transferring host memory."""
-        if self._device_cache is None:
-            self._device_cache = (jnp.asarray(self.x), jnp.asarray(self.y),
-                                  jnp.asarray(self.n_real))
-        return self._device_cache
+        re-transferring host memory.
+
+        ``shardings`` is an optional hashable ``(x_sh, y_sh, n_real_sh)``
+        placement triple (e.g. NamedShardings from a pod backend); each
+        distinct placement is uploaded once and cached independently, so
+        host and mesh engines can stream rounds off the same dataset.
+        """
+        if shardings not in self._device_cache:
+            if shardings is None:
+                arrs = (jnp.asarray(self.x), jnp.asarray(self.y),
+                        jnp.asarray(self.n_real))
+            else:
+                sx, sy, sn = shardings
+                arrs = (jax.device_put(self.x, sx),
+                        jax.device_put(self.y, sy),
+                        jax.device_put(self.n_real, sn))
+            self._device_cache[shardings] = arrs
+        return self._device_cache[shardings]
 
 
 class ClientBatchIterator:

@@ -246,3 +246,15 @@ def _femnist_like(n_clients: int = 190, beta: Optional[float] = 0.3, seed: int =
 @DATASETS.register("shakespeare-like")
 def _shakespeare_like(n_clients: int = 66, seed: int = 0, **kw) -> FederatedDataset:
     return make_synthetic_charlm(n_clients=n_clients, seed=seed, **kw)
+
+
+# token-LM stream for the pod backend / LLM-class archs: registered so
+# benchmarks and CLIs can stream per-round batches by dataset name
+@DATASETS.register("tokenlm-bigram")
+def _tokenlm_bigram(n_clients: int = 16, seed: int = 0, seq_len: int = 64,
+                    n_seq_per_client: int = 64, vocab: int = 256,
+                    beta: float = 0.5, n_test: int = 64) -> FederatedDataset:
+    return make_synthetic_tokenlm(
+        n_clients=n_clients, seq_len=seq_len,
+        n_seq_per_client=n_seq_per_client, vocab=vocab, beta=beta,
+        n_test=n_test, seed=seed)

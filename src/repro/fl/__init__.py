@@ -17,3 +17,8 @@ from repro.fl.simulation import (
     make_eval_fn,
     init_server_state,
 )
+# NOTE: repro.fl.pod (the sharded backend) is intentionally NOT imported
+# here — it imports repro.core.pipeline to register its phase configs,
+# and pulling it into the package __init__ would close an import cycle
+# (core.pipeline -> fl.simulation -> this __init__).  Import it directly:
+#   from repro.fl.pod import PodRelayStrategy, PodAggregateStrategy, ...

@@ -32,6 +32,45 @@ The engine owns everything the three seed drivers each re-implemented:
 ``core.cyclic.cyclic_pretrain`` and ``fl.simulation.run_federated`` are
 thin shims over :func:`run_rounds`; ``core.pipeline`` sequences phases
 declaratively.
+
+Backend contract
+----------------
+The loop machinery above is generic over WHERE a round runs.  A strategy
+is also a *backend*: three hooks (defaulted by :class:`HostBackend` to
+the single-process jit path) decide how data, params and the compiled
+chunk program are placed:
+
+  prepare_data(data)            -> (x_all, y_all, n_real) device arrays;
+                                   a sharded backend device_puts the
+                                   stacked client arrays with mesh
+                                   placements (see repro.fl.pod).
+  place_params(params)          -> the engine's working copy of the
+                                   model (host: plain copy so donation
+                                   cannot invalidate the caller's tree;
+                                   pod: device_put with
+                                   rules.param_shardings).
+  jit_chunk(chunk, task, n)     -> the compiled R-round program.  The
+                                   host backend jits with donated
+                                   carries only; the pod backend adds
+                                   in_shardings/out_shardings for every
+                                   carry so chunked dispatch runs as one
+                                   SPMD program on the mesh.
+
+ClientStateStore contract
+-------------------------
+Per-client algorithm state (SCAFFOLD control variates, Moon previous
+local models) lives behind a ``ClientStateStore`` so its residency is a
+backend decision, not an algorithm decision:
+
+  init(template, n_clients)     -> stacked ``(n_clients, ...)`` state
+  gather(state, ids)            -> the selected K rows (inside jit)
+  shardings(p_specs, n, mesh)   -> placement tree for jit in_shardings
+  scatter(state, ids, rows)     -> state with rows written back
+
+``DenseClientStateStore`` keeps the dense host stacks (seed semantics);
+``repro.fl.pod.ShardedClientStateStore`` shards the leading client axis
+over the mesh ``data`` axis so scaffold/moon run at pod scale without a
+replicated (n_clients, model) blow-up.
 """
 from __future__ import annotations
 
@@ -72,11 +111,54 @@ def tree_set_rows(tree: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# backends + per-client state stores
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseClientStateStore:
+    """Per-client state as dense host stacks — the seed representation.
+
+    All three ops are jit-traceable; ``init`` runs eagerly once per
+    engine run.  See the module docstring for the full contract.
+    """
+
+    def init(self, template: Pytree, n_clients: int) -> Pytree:
+        return stack_copies(template, n_clients)
+
+    def gather(self, state: Pytree, ids: jnp.ndarray) -> Pytree:
+        return tree_rows(state, ids)
+
+    def scatter(self, state: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
+        return tree_set_rows(state, ids, rows)
+
+    def shardings(self, p_specs: Pytree, n_clients: int, mesh) -> Any:
+        return None                     # host: no placement constraint
+
+
+DENSE_STORE = DenseClientStateStore()
+
+
+class HostBackend:
+    """Default backend hooks: single-process jit, host-resident data."""
+
+    def prepare_data(self, data: FederatedDataset):
+        return data.device_arrays()
+
+    def place_params(self, params: Pytree) -> Pytree:
+        # donated carries: copy so the caller's init_params buffer survives
+        return jax.tree_util.tree_map(jnp.array, params)
+
+    def jit_chunk(self, chunk: Callable, task: Task,
+                  n_clients: int) -> Callable:
+        return jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
+
+
+# ---------------------------------------------------------------------------
 # strategies
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class RelayStrategy:
+class RelayStrategy(HostBackend):
     """P1 — Algorithm 1's sequential relay.  The model hops client →
     client inside one scan; the carry IS the relay."""
     spec: LocalSpec
@@ -117,17 +199,18 @@ class RelayStrategy:
 
 
 @dataclasses.dataclass(frozen=True)
-class AggregateStrategy:
+class AggregateStrategy(HostBackend):
     """P2 — one federated round: vmapped local runs over the stacked
     client axis + weighted-mean aggregation, with per-algorithm state
     (scaffold control variates, moon previous-local models) carried
-    through the engine's scan."""
+    through the engine's scan behind ``state_store``."""
     spec: LocalSpec
     algorithm: str = "fedavg"
     participation: float = 0.1
     server_opt: str = "none"        # none | momentum | adam
     server_lr: float = 1.0
     server_momentum: float = 0.9
+    state_store: Any = DENSE_STORE
 
     @property
     def name(self) -> str:
@@ -138,10 +221,11 @@ class AggregateStrategy:
 
     def init_state(self, task: Task, params: Pytree, n_clients: int) -> Dict:
         if self.algorithm == "scaffold":
-            return {"c_global": tm.zeros_like(params),
-                    "c_clients": stack_copies(tm.zeros_like(params), n_clients)}
+            zeros = tm.zeros_like(params)
+            return {"c_global": zeros,
+                    "c_clients": self.state_store.init(zeros, n_clients)}
         if self.algorithm == "moon":
-            return {"w_prev": stack_copies(params, n_clients)}
+            return {"w_prev": self.state_store.init(params, n_clients)}
         return {}
 
     def make_server_update(self) -> Optional[Tuple[Callable, Callable]]:
@@ -168,6 +252,7 @@ class AggregateStrategy:
         spec = self.spec
         local = make_local_fn(task, spec)
         algo = self.algorithm
+        store = self.state_store
 
         def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
             K = ids.shape[0]
@@ -186,7 +271,7 @@ class AggregateStrategy:
 
             if algo == "scaffold":
                 c, c_all = algo_state["c_global"], algo_state["c_clients"]
-                c_i = tree_rows(c_all, ids)
+                c_i = store.gather(c_all, ids)
                 # per-client extras carry (c − c_i) with a leading K axis
                 c_diff = jax.tree_util.tree_map(
                     lambda g, l: jnp.broadcast_to(g[None], l.shape) - l, c, c_i)
@@ -207,20 +292,20 @@ class AggregateStrategy:
                 c_new = jax.tree_util.tree_map(
                     lambda cg, new, old: cg + frac * jnp.mean(new - old, axis=0),
                     c, c_i_new, c_i)
-                c_all_new = tree_set_rows(c_all, ids, c_i_new)
+                c_all_new = store.scatter(c_all, ids, c_i_new)
                 state = {"c_global": c_new, "c_clients": c_all_new}
                 return new_params, state, jnp.mean(aux["loss"])
 
             if algo == "moon":
                 w_prev_all = algo_state["w_prev"]
-                w_prev = tree_rows(w_prev_all, ids)
+                w_prev = store.gather(w_prev_all, ids)
                 extras = {"w_global": params, "w_prev": w_prev}
                 w_locals, aux = jax.vmap(
                     local,
                     in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
                 new_params = tm.stacked_weighted_mean(w_locals, weights)
-                state = {"w_prev": tree_set_rows(w_prev_all, ids, w_locals)}
+                state = {"w_prev": store.scatter(w_prev_all, ids, w_locals)}
                 return new_params, state, jnp.mean(aux["loss"])
 
             raise ValueError(f"unknown algorithm {algo!r}")
@@ -346,7 +431,7 @@ def _cached_chunk_fn(task: Task, strategy, sampling: str,
             (ids, lr_scales))
         return key, params, algo_state, server_state, losses
 
-    return jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
+    return strategy.jit_chunk(chunk, task, n_clients)
 
 
 def _rounds_until_eval(rnd: int, eval_every: int) -> int:
@@ -374,8 +459,9 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     """
     key = jax.random.PRNGKey(schedule.seed)
     params = init_params if init_params is not None else task.init(key)
-    # donated carries: copy so the caller's init_params buffer survives
-    params = jax.tree_util.tree_map(jnp.array, params)
+    # backend hook: copy (host) or device_put with shardings (pod) so the
+    # donated carries never invalidate the caller's init_params buffers
+    params = strategy.place_params(params)
 
     n_clients = data.n_clients
     K = strategy.n_selected(n_clients)
@@ -385,7 +471,7 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
 
     chunk_fn = make_chunk_fn(task, strategy, schedule, n_clients)
     evaluate = eval_fn or make_eval_fn(task, schedule.eval_batch)
-    x_all, y_all, n_real = data.device_arrays()
+    x_all, y_all, n_real = strategy.prepare_data(data)
 
     host_rng = None
     if schedule.sampling == "host":

@@ -91,12 +91,15 @@ def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
             params, mom = carry
             bidx = jax.random.randint(step_key, (spec.batch_size,), 0, n_data)
             loss, grads = grad_fn(params, extras, cx[bidx], cy[bidx], step_key)
-            if spec.weight_decay:
-                grads = tm.add_scaled(grads, params, spec.weight_decay)
-            if spec.variant == "scaffold":
-                grads = tm.add(grads, extras["c_diff"])
+            # clip the RAW stochastic gradient, then apply the scaffold
+            # correction and decoupled weight decay — clipping after decay
+            # would rescale the regularizer with the gradient noise
             if spec.grad_clip:
                 grads = tm.global_clip(grads, spec.grad_clip)
+            if spec.variant == "scaffold":
+                grads = tm.add(grads, extras["c_diff"])
+            if spec.weight_decay:
+                grads = tm.add_scaled(grads, params, spec.weight_decay)
             if spec.momentum:
                 mom = tm.add_scaled(grads, mom, spec.momentum)
                 eff = mom

@@ -1,0 +1,431 @@
+"""Pod-scale backends for the federated round engine.
+
+The host engine (repro.fl.engine) and the pod driver used to be two
+parallel codepaths; this module makes the pod a *backend* of the same
+``RoundStrategy`` stack.  ``PodRelayStrategy`` / ``PodAggregateStrategy``
+reuse the engine's round bodies (the same ``make_local_fn`` inner loop,
+the same key derivation, on-device client sampling and chunked
+``lax.scan`` dispatch) and add the mesh placement decisions:
+
+  * params enter/leave every round pinned to ``rules.param_shardings``
+    (FSDP × TP), and the compiled chunk program carries explicit
+    in/out shardings so ``chunk_size`` rounds run as ONE SPMD dispatch;
+  * the stacked client data ``(n_clients, n_per_client, ...)`` is
+    device_put with the sample pool sharded over (pod, data) —
+    ``rules.fl_batch_pspec(batch_axis=1)`` — so every local step's
+    gathered batch is data-parallel across the whole mesh ("the mesh
+    accelerates one client at a time", DESIGN.md §3);
+  * per-client algorithm state lives in a ``ShardedClientStateStore``:
+    the ``(n_clients, ...)`` stacks shard their leading client axis over
+    the mesh ``data`` axis, rows for the selected K clients are gathered
+    inside the program and scattered back — scaffold/moon at pod scale
+    without replicating an (n_clients, model) tensor.
+
+P2 aggregation differs from the host backend in schedule only: clients
+run *sequentially* (``lax.scan``) accumulating a weighted f32 delta —
+at LLM scale a per-client parameter copy per vmap lane is exactly what
+does not fit, so peak memory is ~2×params independent of K, and the
+delta accumulation IS the FedAvg all-reduce on the mesh.  The math is
+identical to the host vmap+weighted-mean path, which is what the
+host↔pod parity tests pin down.
+
+``PodCyclicConfig`` / ``PodFLConfig`` are the declarative phase entries:
+they register with ``core.pipeline`` so ``run_phase_schedule`` drives
+multi-cycle P1↔P2 alternation and switch policies identically on both
+backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# canonical seed host-RNG stream offsets (P1 drew from seed+31, P2 from
+# seed+17) — imported, not re-declared, so host↔pod sampling="host"
+# parity cannot silently diverge
+from repro.core.cyclic import HOST_RNG_OFFSET_P1
+from repro.data.federated import FederatedDataset
+from repro.fl.engine import (
+    DENSE_STORE,
+    AggregateStrategy,
+    RelayStrategy,
+    RoundSchedule,
+    run_rounds,
+    stack_copies,
+    tree_rows,
+    tree_set_rows,
+)
+from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.simulation import HOST_RNG_OFFSET_P2
+from repro.fl.task import Task
+from repro.sharding import rules
+from repro.utils import tree_math as tm
+
+Pytree = Any
+
+POD_ALGORITHMS = ("fedavg", "fedprox", "scaffold", "moon")
+
+# variant names for make_local_fn, keyed by aggregation algorithm
+_VARIANTS = {"fedavg": "plain", "fedprox": "fedprox",
+             "scaffold": "scaffold", "moon": "moon"}
+
+
+@dataclasses.dataclass(frozen=True)
+class PodFLSpec:
+    """Static description of one pod-scale federated round."""
+    local_steps: int = 8            # t_i — SGD steps per client
+    batch_size: int = 8             # B — per-step local batch size
+    lr: float = 0.01
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    algorithm: str = "fedavg"       # fedavg | fedprox | scaffold | moon
+    mu: float = 0.01                # fedprox proximal / moon coefficient
+    temperature: float = 0.5        # moon
+    grad_clip: Optional[float] = None
+
+    def local_spec(self, variant: Optional[str] = None) -> LocalSpec:
+        return LocalSpec(
+            n_steps=self.local_steps, batch_size=self.batch_size, lr=self.lr,
+            momentum=self.momentum, weight_decay=self.weight_decay,
+            variant=variant or _VARIANTS[self.algorithm], mu=self.mu,
+            temperature=self.temperature, grad_clip=self.grad_clip)
+
+
+# ---------------------------------------------------------------------------
+# client-state store sharded over the mesh data axis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedClientStateStore:
+    """Per-client state stacks with the leading client axis sharded over
+    the mesh ``data`` axis (see the ClientStateStore contract in
+    repro.fl.engine).  Gather pulls the K selected rows into the round
+    program; scatter writes them back and re-pins the stack's layout so
+    the carry stays sharded across chunks."""
+    mesh: Any
+
+    def _shardings(self, tree: Pytree) -> Pytree:
+        return rules.client_axis_shardings(tree, self.mesh)
+
+    def init(self, template: Pytree, n_clients: int) -> Pytree:
+        stacked = stack_copies(template, n_clients)
+        return jax.device_put(stacked, self._shardings(stacked))
+
+    def gather(self, state: Pytree, ids: jnp.ndarray) -> Pytree:
+        return tree_rows(state, ids)
+
+    def scatter(self, state: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
+        out = tree_set_rows(state, ids, rows)
+        return jax.lax.with_sharding_constraint(out, self._shardings(out))
+
+    def shardings(self, p_specs: Pytree, n_clients: int, mesh=None) -> Pytree:
+        mesh = mesh or self.mesh
+        return jax.tree_util.tree_map(
+            lambda leaf: jax.sharding.NamedSharding(
+                mesh, rules.client_axis_pspec(mesh, len(leaf.shape) + 1,
+                                              n_clients)),
+            p_specs)
+
+
+# ---------------------------------------------------------------------------
+# the pod backend (engine hooks shared by both strategies)
+# ---------------------------------------------------------------------------
+
+class PodBackendMixin:
+    """Engine backend hooks for a sharded mesh.  Subclasses are frozen
+    strategy dataclasses providing ``mesh``, ``layout`` and
+    ``clients_per_round`` fields."""
+
+    def n_selected(self, n_clients: int) -> int:
+        if self.clients_per_round:
+            return max(1, min(self.clients_per_round, n_clients))
+        return super().n_selected(n_clients)
+
+    def _param_shardings(self, task: Task) -> Pytree:
+        p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+        return rules.param_shardings(p_specs, self.mesh, self.layout)
+
+    def prepare_data(self, data: FederatedDataset):
+        mesh = self.mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_shards = 1
+        for a in ("pod", "data"):
+            n_shards *= sizes.get(a, 1)
+
+        def pool_sharding(arr):
+            # sample pool (axis 1) over (pod, data); replicate when it
+            # does not divide — same degradation policy as the rules
+            if arr.ndim >= 2 and n_shards > 1 and \
+                    arr.shape[1] % n_shards == 0 and arr.shape[1] >= n_shards:
+                return jax.sharding.NamedSharding(
+                    mesh, rules.fl_batch_pspec(mesh, arr.ndim, batch_axis=1))
+            return rules.replicated(mesh)
+
+        return data.device_arrays((pool_sharding(data.x),
+                                   pool_sharding(data.y),
+                                   rules.replicated(mesh)))
+
+    def place_params(self, params: Pytree) -> Pytree:
+        return jax.device_put(
+            params, rules.param_shardings(params, self.mesh, self.layout))
+
+    def state_shardings(self, p_specs: Pytree, n_clients: int) -> Dict:
+        return {}
+
+    def jit_chunk(self, chunk: Callable, task: Task,
+                  n_clients: int) -> Callable:
+        p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+        p_sh = rules.param_shardings(p_specs, self.mesh, self.layout)
+        rep = rules.replicated(self.mesh)
+        st_sh = self.state_shardings(p_specs, n_clients)
+        # chunk args: (key, params, algo_state, server_state, x_all,
+        #              y_all, n_real, ids, lr_scales); x/y keep the
+        #              committed placement from prepare_data (None =
+        #              inherit), ids is None under on-device sampling
+        in_sh = (rep, p_sh, st_sh, (), None, None, rep, None, rep)
+        out_sh = (rep, p_sh, st_sh, (), rep)
+        return jax.jit(chunk, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(0, 1, 2, 3))
+
+
+@dataclasses.dataclass(frozen=True)
+class PodRelayStrategy(PodBackendMixin, RelayStrategy):
+    """P1 relay on the mesh: the host relay body (sequential client scan,
+    no aggregation) with params pinned to the FSDP×TP layout on round
+    entry/exit."""
+    mesh: Any = None
+    layout: str = "fsdp_tp"
+    clients_per_round: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mesh is None:
+            raise ValueError("PodRelayStrategy requires a mesh")
+
+    def build_round(self, task: Task) -> Callable:
+        inner = RelayStrategy.build_round(self, task)
+        p_sh = self._param_shardings(task)
+
+        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+            params = jax.lax.with_sharding_constraint(params, p_sh)
+            new_params, algo_state, loss = inner(
+                key, params, x_all, y_all, ids, weights, lr_scale, algo_state)
+            new_params = jax.lax.with_sharding_constraint(new_params, p_sh)
+            return new_params, algo_state, loss
+
+        return body
+
+
+@dataclasses.dataclass(frozen=True)
+class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
+    """P2 on the mesh: sequential client scan + weighted f32 delta
+    accumulation (peak memory independent of K), algorithm state behind
+    a data-axis-sharded ClientStateStore.  Numerically matches the host
+    vmap backend round-for-round."""
+    mesh: Any = None
+    layout: str = "fsdp_tp"
+    clients_per_round: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mesh is None:
+            raise ValueError("PodAggregateStrategy requires a mesh")
+        if self.algorithm not in POD_ALGORITHMS:
+            raise ValueError(f"unknown pod algorithm {self.algorithm!r}")
+        if self.server_opt != "none":
+            raise NotImplementedError(
+                "server-side optimizers are host-backend only for now")
+        if self.state_store is DENSE_STORE:
+            object.__setattr__(self, "state_store",
+                               ShardedClientStateStore(self.mesh))
+
+    def state_shardings(self, p_specs: Pytree, n_clients: int) -> Dict:
+        store = self.state_store
+        if not hasattr(store, "shardings"):
+            return {}
+        stacked = store.shardings(p_specs, n_clients, self.mesh)
+        if stacked is None:
+            return {}
+        if self.algorithm == "scaffold":
+            return {"c_global": rules.param_shardings(p_specs, self.mesh,
+                                                      self.layout),
+                    "c_clients": stacked}
+        if self.algorithm == "moon":
+            return {"w_prev": stacked}
+        return {}
+
+    def build_round(self, task: Task) -> Callable:
+        spec = self.spec
+        local = make_local_fn(task, spec)
+        algo = self.algorithm
+        store = self.state_store
+        p_sh = self._param_shardings(task)
+
+        def pin(t):
+            return jax.lax.with_sharding_constraint(t, p_sh)
+
+        def apply_delta(params, delta):
+            return jax.tree_util.tree_map(
+                lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+                params, delta)
+
+        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+            params = pin(params)
+            K = ids.shape[0]
+            keys = jax.random.split(key, K)
+            cx = x_all[ids]
+            cy = y_all[ids]
+            w32 = weights.astype(jnp.float32)
+            wsum = jnp.sum(w32)
+            delta0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def add_delta(delta, w_end, w_i):
+                # the running weighted delta sum IS the FedAvg all-reduce
+                return jax.tree_util.tree_map(
+                    lambda d, we, p: d + (w_i / wsum) * (
+                        we.astype(jnp.float32) - p.astype(jnp.float32)),
+                    delta, w_end, params)
+
+            if algo in ("fedavg", "fedprox"):
+                def one_client(delta, inp):
+                    k, cxi, cyi, w_i = inp
+                    extras = {"w_global": params} if algo == "fedprox" else {}
+                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
+                    return add_delta(delta, w_end, w_i), aux["loss"]
+
+                delta, losses = jax.lax.scan(one_client, delta0,
+                                             (keys, cx, cy, w32))
+                return pin(apply_delta(params, delta)), algo_state, \
+                    jnp.mean(losses)
+
+            if algo == "scaffold":
+                c, c_all = algo_state["c_global"], algo_state["c_clients"]
+                c_i = store.gather(c_all, ids)
+                denom = spec.n_steps * spec.lr * lr_scale
+
+                def one_client(delta, inp):
+                    k, cxi, cyi, w_i, c_i_row = inp
+                    extras = {"c_diff": tm.sub(c, c_i_row)}
+                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
+                    # option II: c_i⁺ = c_i − c + (w − w_i)/(S·lr)
+                    c_i_new = jax.tree_util.tree_map(
+                        lambda ci, cg, p, we: ci - cg + (p - we) / denom,
+                        c_i_row, c, params, w_end)
+                    return add_delta(delta, w_end, w_i), \
+                        (aux["loss"], c_i_new)
+
+                delta, (losses, c_i_new) = jax.lax.scan(
+                    one_client, delta0, (keys, cx, cy, w32, c_i))
+                new_params = apply_delta(params, delta)
+                n_cl = jax.tree_util.tree_leaves(c_all)[0].shape[0]
+                frac = K / n_cl
+                c_new = jax.tree_util.tree_map(
+                    lambda cg, new, old: cg + frac * jnp.mean(new - old,
+                                                              axis=0),
+                    c, c_i_new, c_i)
+                state = {"c_global": c_new,
+                         "c_clients": store.scatter(c_all, ids, c_i_new)}
+                return pin(new_params), state, jnp.mean(losses)
+
+            if algo == "moon":
+                w_prev_all = algo_state["w_prev"]
+                w_prev = store.gather(w_prev_all, ids)
+
+                def one_client(delta, inp):
+                    k, cxi, cyi, w_i, w_prev_row = inp
+                    extras = {"w_global": params, "w_prev": w_prev_row}
+                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
+                    return add_delta(delta, w_end, w_i), \
+                        (aux["loss"], w_end)
+
+                delta, (losses, w_ends) = jax.lax.scan(
+                    one_client, delta0, (keys, cx, cy, w32, w_prev))
+                state = {"w_prev": store.scatter(w_prev_all, ids, w_ends)}
+                return pin(apply_delta(params, delta)), state, \
+                    jnp.mean(losses)
+
+            raise ValueError(f"unknown algorithm {algo!r}")
+
+        return body
+
+
+# ---------------------------------------------------------------------------
+# declarative phase configs (core.pipeline entries)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PodCyclicConfig:
+    """P1 relay phase on the pod backend."""
+    mesh: Any
+    rounds: int = 4
+    clients_per_round: int = 4
+    spec: PodFLSpec = PodFLSpec()
+    layout: str = "fsdp_tp"
+    lr_decay: float = 1.0           # the pod driver historically had no decay
+    eval_every: int = 0
+    eval_batch: int = 64
+    seed: int = 0
+    chunk_size: int = 4
+    sampling: str = "device"        # device | host (seed-compatible)
+
+    def strategy(self) -> PodRelayStrategy:
+        return PodRelayStrategy(
+            spec=self.spec.local_spec("plain"), mesh=self.mesh,
+            layout=self.layout, clients_per_round=self.clients_per_round)
+
+    def schedule(self) -> RoundSchedule:
+        return RoundSchedule(
+            rounds=self.rounds, lr_decay=self.lr_decay,
+            eval_every=self.eval_every, eval_batch=self.eval_batch,
+            seed=self.seed, chunk_size=self.chunk_size,
+            sampling=self.sampling, host_rng_offset=HOST_RNG_OFFSET_P1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PodFLConfig:
+    """P2 aggregation phase on the pod backend (algorithm from spec)."""
+    mesh: Any
+    rounds: int = 4
+    clients_per_round: int = 4
+    spec: PodFLSpec = PodFLSpec()
+    layout: str = "fsdp_tp"
+    lr_decay: float = 1.0
+    eval_every: int = 0
+    eval_batch: int = 64
+    seed: int = 0
+    chunk_size: int = 4
+    sampling: str = "device"
+
+    def strategy(self) -> PodAggregateStrategy:
+        return PodAggregateStrategy(
+            spec=self.spec.local_spec(), algorithm=self.spec.algorithm,
+            mesh=self.mesh, layout=self.layout,
+            clients_per_round=self.clients_per_round)
+
+    def schedule(self) -> RoundSchedule:
+        return RoundSchedule(
+            rounds=self.rounds, lr_decay=self.lr_decay,
+            eval_every=self.eval_every, eval_batch=self.eval_batch,
+            seed=self.seed, chunk_size=self.chunk_size,
+            sampling=self.sampling, host_rng_offset=HOST_RNG_OFFSET_P2)
+
+
+def run_pod_rounds(task: Task, data: FederatedDataset, cfg,
+                   init_params: Optional[Pytree] = None,
+                   ledger=None, verbose: bool = False,
+                   eval_fn: Optional[Callable] = None,
+                   switch_policy=None, phase: str = "P2"):
+    """Phase runner for the pod configs — the engine loop does the work."""
+    strategy = cfg.strategy()
+    return run_rounds(task, data, strategy, cfg.schedule(),
+                      init_params=init_params, ledger=ledger, verbose=verbose,
+                      eval_fn=eval_fn, switch_policy=switch_policy,
+                      phase=phase, label=f"pod-{strategy.name}")
+
+
+# register with the declarative schedule so Phase(cfg=Pod*Config) works
+from repro.core.pipeline import register_phase_runner  # noqa: E402
+
+register_phase_runner(PodCyclicConfig, "relay", run_pod_rounds)
+register_phase_runner(PodFLConfig, "aggregate", run_pod_rounds)

@@ -40,15 +40,25 @@ SINGLE_POD = MeshSpec("pod", (16, 16), ("data", "model"))
 MULTI_POD = MeshSpec("multipod", (2, 16, 16), ("pod", "data", "model"))
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and the
+    AxisType enum) only exist on newer jax; every mesh here wants the
+    Auto type, which IS the old default, so fall back silently."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     spec = MULTI_POD if multi_pod else SINGLE_POD
-    return jax.make_mesh(
-        spec.shape, spec.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes))
+    return _make_mesh(spec.shape, spec.axes)
 
 
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU tests (same axis names)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))

@@ -9,10 +9,7 @@ runs a whole federated round:
 
   P1 (cyclic relay)   : ``lax.scan`` over the K selected clients carrying
                         the model — the strict sequential schedule of
-                        Algorithm 1.  Each relay hop is ``t_i`` local SGD
-                        steps in which the WHOLE mesh accelerates one
-                        client (grad psum over ``data``; TP collectives
-                        over ``model``).  No aggregation — the model hops
+                        Algorithm 1.  No aggregation — the model hops
                         client→client exactly like the paper's
                         server-relayed download/upload, except the "hop"
                         is free on-chip.
@@ -20,13 +17,19 @@ runs a whole federated round:
                         round's global params and emits a weighted delta;
                         aggregation is the running weighted delta sum —
                         the computation that IS the FedAvg all-reduce.
-                        (fedavg and fedprox variants; SCAFFOLD/Moon keep
-                        per-client state and live in repro.fl.simulation,
-                        the host-scale driver.)
+                        fedavg / fedprox / scaffold / moon, with
+                        per-client state sharded over the mesh ``data``
+                        axis (repro.fl.pod.ShardedClientStateStore).
 
-Inputs are pre-sampled per-round batches ``(K, t_i, B, S)`` so the round
-is a single static program — the production analogue of an input
-pipeline delivering per-client token streams.
+Since PR 2 the driver is a thin schedule over the shared round engine:
+``run_pod_training`` builds ``PodCyclicConfig``/``PodFLConfig`` phases
+and hands them to ``core.pipeline.run_phase_schedule``, so the sharded
+path gets on-device client sampling, in-program key derivation, chunked
+``chunk_size``-rounds-per-dispatch scans with donated sharded carries,
+lr schedules and switch policies — identical to the host simulator.
+The pre-sampled per-round bodies (``make_pod_cyclic_round`` /
+``make_pod_fl_round``) are kept for AOT lowering (dry-run HLO analysis)
+and as the per-round-dispatch baseline in benchmarks/perf_pod_round.py.
 
 CLI (CPU, reduced configs):
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -38,29 +41,26 @@ import argparse
 import dataclasses
 import sys
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pipeline import Phase, run_phase_schedule
+from repro.fl.pod import (
+    POD_ALGORITHMS,
+    PodCyclicConfig,
+    PodFLConfig,
+    PodFLSpec,
+)
+from repro.fl.task import lm_task
 from repro.models.transformer import TransformerConfig, init_lm, lm_loss
 from repro.sharding import rules
+from repro.sharding.rules import fl_batch_pspec, fl_batch_shardings  # noqa: F401  (re-export)
 from repro.utils import tree_math as tm
 
 Pytree = Any
-
-
-@dataclasses.dataclass(frozen=True)
-class PodFLSpec:
-    """Static description of one pod-scale federated round."""
-    local_steps: int = 8            # t_i — SGD steps per client
-    lr: float = 0.01
-    momentum: float = 0.0
-    weight_decay: float = 0.0
-    algorithm: str = "fedavg"       # fedavg | fedprox (pod-scale variants)
-    mu: float = 0.01                # fedprox proximal coefficient
-    grad_clip: Optional[float] = None
 
 
 def _local_sgd(cfg: TransformerConfig, spec: PodFLSpec):
@@ -68,7 +68,9 @@ def _local_sgd(cfg: TransformerConfig, spec: PodFLSpec):
 
     (params, batches, lr_scale, w_anchor) -> (params, mean_loss)
     batches leaves: (t_i, B, S); w_anchor is the fedprox anchor (the
-    round's global params) or None.
+    round's global params) or None.  Kept for the AOT-lowered round
+    bodies; the engine path runs the same math through
+    ``repro.fl.local.make_local_fn`` with on-device batch sampling.
     """
 
     def loss_fn(params, mb, anchor):
@@ -85,10 +87,12 @@ def _local_sgd(cfg: TransformerConfig, spec: PodFLSpec):
         def step(carry, mb):
             w, mom = carry
             loss, grads = jax.value_and_grad(loss_fn)(w, mb, anchor)
-            if spec.weight_decay:
-                grads = tm.add_scaled(grads, w, spec.weight_decay)
+            # clip the RAW gradient, then decay — same order as
+            # repro.fl.local (parity-tested in tests/test_pod_engine.py)
             if spec.grad_clip:
                 grads = tm.global_clip(grads, spec.grad_clip)
+            if spec.weight_decay:
+                grads = tm.add_scaled(grads, w, spec.weight_decay)
             if spec.momentum:
                 mom = tm.add_scaled(grads, mom, spec.momentum)
                 eff = mom
@@ -164,28 +168,6 @@ def make_pod_fl_round(cfg: TransformerConfig, spec: PodFLSpec) -> Callable:
     return round_fn
 
 
-# ---------------------------------------------------------------------------
-# sharding: batches (K, t_i, B, S) — B over (pod, data); params via rules
-# ---------------------------------------------------------------------------
-
-def fl_batch_pspec(mesh, leaf_rank: int):
-    """Client batches (K, t_i, B, ...): shard the per-step batch dim B
-    (axis 2) over (pod, data).  K and t_i are schedule axes — never
-    sharded (K is scanned sequentially; t_i is the SGD step axis)."""
-    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    ax = baxes if len(baxes) > 1 else baxes[0]
-    spec = [None] * leaf_rank
-    if leaf_rank >= 3:
-        spec[2] = ax
-    return jax.sharding.PartitionSpec(*spec)
-
-
-def fl_batch_shardings(batch_tree: Pytree, mesh) -> Pytree:
-    return jax.tree_util.tree_map(
-        lambda leaf: jax.sharding.NamedSharding(
-            mesh, fl_batch_pspec(mesh, len(leaf.shape))), batch_tree)
-
-
 def lower_pod_round(cfg: TransformerConfig, mesh, *, kind: str = "fl",
                     spec: Optional[PodFLSpec] = None, K: int = 8,
                     batch: int = 32, seq: int = 512):
@@ -214,12 +196,13 @@ def lower_pod_round(cfg: TransformerConfig, mesh, *, kind: str = "fl",
 
 
 # ---------------------------------------------------------------------------
-# host-scale end-to-end driver (CPU, reduced configs) — examples/tests use it
+# end-to-end driver: the engine's phase schedule on the pod backend
 # ---------------------------------------------------------------------------
 
 def sample_round_batches(data, ids: np.ndarray, steps: int, batch: int,
                          rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
-    """Pre-sample (K, steps, batch, S) token/label batches for ``ids``."""
+    """Pre-sample (K, steps, batch, S) token/label batches for ``ids``
+    (the per-round-dispatch baseline; the engine samples on device)."""
     toks, labs = [], []
     for cid in ids:
         bidx = rng.integers(0, data.n_per_client, size=(steps, batch))
@@ -241,53 +224,60 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                      spec: Optional[PodFLSpec] = None,
                      mesh=None, seed: int = 0,
                      eval_fn: Optional[Callable] = None,
-                     verbose: bool = False) -> PodTrainResult:
-    """CyclicFL end-to-end on the pod driver: P1 relay rounds, then P2
-    federated rounds, all through the sharded round programs."""
+                     verbose: bool = False,
+                     chunk_size: int = 4,
+                     sampling: str = "device",
+                     layout: str = "fsdp_tp") -> PodTrainResult:
+    """CyclicFL end-to-end on the pod backend: a declarative P1→P2 phase
+    schedule through the shared round engine — no hand-rolled loops.
+
+    ``eval_fn`` keeps the legacy per-round signature ``eval_fn(params)``;
+    when given, every round's history row carries an ``eval`` entry.
+    """
     from repro.launch.mesh import make_host_mesh
     spec = spec or PodFLSpec()
     mesh = mesh or make_host_mesh()
-    rng = np.random.default_rng(seed)
-    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    task = lm_task(cfg)
 
-    p_sh = rules.param_shardings(params, mesh)
-    cyc = make_pod_cyclic_round(cfg, spec)
-    fl = make_pod_fl_round(cfg, spec)
-    with mesh:
-        cyc_j = jax.jit(cyc, in_shardings=(p_sh, None, None),
-                        out_shardings=(p_sh, None))
-        fl_j = jax.jit(fl, in_shardings=(p_sh, None, None, None),
-                       out_shardings=(p_sh, None))
+    eval_every = 1 if eval_fn is not None else 0
+    engine_eval = None
+    if eval_fn is not None:
+        def engine_eval(params, test_x, test_y):  # noqa: F811
+            return eval_fn(params)
 
+    common = dict(mesh=mesh, clients_per_round=clients_per_round, spec=spec,
+                  layout=layout, chunk_size=chunk_size,
+                  sampling=sampling, eval_every=eval_every)
+    phases = []
+    if cyclic_rounds > 0:
+        phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
+                                                  seed=seed, **common),
+                            eval_fn=engine_eval))
+    if fl_rounds > 0:
+        # decorrelate the P2 key stream from P1's: each phase restarts
+        # from PRNGKey(its seed), and with equal K the relay and
+        # aggregate rounds split keys identically — the same seed would
+        # replay P1's exact client selections and batch draws in P2.
+        # When P2 is the first phase its seed also drives model init,
+        # so only offset when a P1 phase precedes it.
+        from repro.fl.pod import HOST_RNG_OFFSET_P2
+        p2_seed = seed + HOST_RNG_OFFSET_P2 if phases else seed
+        phases.append(Phase("P2", PodFLConfig(rounds=fl_rounds, seed=p2_seed,
+                                              **common),
+                            eval_fn=engine_eval))
+    if not phases:
+        return PodTrainResult(params=init_lm(jax.random.PRNGKey(seed), cfg),
+                              history=[])
+
+    sched = run_phase_schedule(task, data, phases, verbose=verbose)
     history = []
-    K = clients_per_round
-    for rnd in range(cyclic_rounds):
-        ids = rng.choice(data.n_clients, size=K, replace=False)
-        batches = sample_round_batches(data, ids, spec.local_steps, 8, rng)
-        with mesh:
-            params, m = cyc_j(params, batches, jnp.float32(1.0))
-        row = {"phase": "P1", "round": rnd, "loss": float(m["local_loss"])}
-        if eval_fn is not None:
-            row["eval"] = eval_fn(params)
+    for h in sched.history:
+        row = {"phase": h["phase"], "round": h["round"],
+               "loss": h["local_loss"]}
+        if "acc" in h:
+            row["eval"] = h["acc"]
         history.append(row)
-        if verbose:
-            print(f"[pod-cyclic] {rnd + 1}/{cyclic_rounds} loss={row['loss']:.4f}",
-                  flush=True)
-    for rnd in range(fl_rounds):
-        ids = rng.choice(data.n_clients, size=K, replace=False)
-        batches = sample_round_batches(data, ids, spec.local_steps, 8, rng)
-        weights = jnp.asarray(data.n_real[ids], jnp.float32)
-        with mesh:
-            params, m = fl_j(params, batches, weights, jnp.float32(1.0))
-        row = {"phase": "P2", "round": cyclic_rounds + rnd,
-               "loss": float(m["local_loss"])}
-        if eval_fn is not None:
-            row["eval"] = eval_fn(params)
-        history.append(row)
-        if verbose:
-            print(f"[pod-fl] {rnd + 1}/{fl_rounds} loss={row['loss']:.4f}",
-                  flush=True)
-    return PodTrainResult(params=params, history=history)
+    return PodTrainResult(params=sched.params, history=history)
 
 
 def main(argv=None) -> int:
@@ -301,10 +291,17 @@ def main(argv=None) -> int:
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--clients-per-round", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="per-step local batch size B")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--algorithm", default="fedavg",
-                    choices=("fedavg", "fedprox"))
+                    choices=POD_ALGORITHMS)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--chunk-size", type=int, default=4,
+                    help="rounds fused into one XLA dispatch")
+    ap.add_argument("--sampling", default="device",
+                    choices=("device", "host"))
+    ap.add_argument("--layout", default="fsdp_tp", choices=rules.LAYOUTS)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -317,13 +314,14 @@ def main(argv=None) -> int:
     data = make_synthetic_tokenlm(
         n_clients=args.clients, seq_len=args.seq, n_seq_per_client=64,
         vocab=cfg.vocab_size, beta=0.5, seed=args.seed)
-    spec = PodFLSpec(local_steps=args.local_steps, lr=args.lr,
-                     algorithm=args.algorithm)
+    spec = PodFLSpec(local_steps=args.local_steps, batch_size=args.batch,
+                     lr=args.lr, algorithm=args.algorithm)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.rounds,
         clients_per_round=args.clients_per_round, spec=spec,
-        seed=args.seed, verbose=True)
+        seed=args.seed, verbose=True, chunk_size=args.chunk_size,
+        sampling=args.sampling, layout=args.layout)
     first = res.history[0]["loss"]
     last = res.history[-1]["loss"]
     print(f"[train] {args.arch}: loss {first:.4f} -> {last:.4f} "

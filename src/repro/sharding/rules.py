@@ -193,6 +193,57 @@ def replicated(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# federated batch / client-stack sharding (pod round programs)
+# ---------------------------------------------------------------------------
+
+def fl_batch_pspec(mesh: Mesh, leaf_rank: int, batch_axis: int = 2) -> P:
+    """Client batch stacks: shard ONE batch-like axis over (pod, data).
+
+    The pre-sampled round layout is ``(K, t_i, B, ...)`` — K and t_i are
+    schedule axes (K is scanned sequentially; t_i is the SGD step axis)
+    so the per-step batch dim B (axis 2, the default) is the one that
+    distributes.  The engine's on-device-sampling layout is
+    ``(n_clients, n_per_client, ...)`` where the sample pool (axis 1) is
+    the batch-like axis — pass ``batch_axis=1`` for it.
+    """
+    baxes = tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+    ax = baxes if len(baxes) > 1 else baxes[0]
+    spec = [None] * leaf_rank
+    if leaf_rank > batch_axis:
+        spec[batch_axis] = ax
+    return P(*spec)
+
+
+def fl_batch_shardings(batch_tree: Pytree, mesh: Mesh,
+                       batch_axis: int = 2) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, fl_batch_pspec(mesh, len(leaf.shape), batch_axis)),
+        batch_tree)
+
+
+def client_axis_pspec(mesh: Mesh, leaf_rank: int, n_clients: int) -> P:
+    """Stacked per-client leaves ``(n_clients, ...)``: shard the leading
+    client axis over the mesh ``data`` axis (replicate when the client
+    count does not divide it — the same graceful degradation as the
+    param rules, so 1-device test meshes stay bit-compatible)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = axis_sizes.get(DATA, 1)
+    if leaf_rank < 1 or n <= 1 or n_clients % n != 0 or n_clients < n:
+        return P(*([None] * leaf_rank))
+    return P(DATA, *([None] * (leaf_rank - 1)))
+
+
+def client_axis_shardings(tree: Pytree, mesh: Mesh) -> Pytree:
+    """NamedSharding tree for client-stacked leaves (shape-aware: dim 0
+    is the client axis)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, client_axis_pspec(mesh, len(leaf.shape), leaf.shape[0])),
+        tree)
+
+
+# ---------------------------------------------------------------------------
 # decode-cache sharding
 # ---------------------------------------------------------------------------
 
