@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify bench-quick bench-engine bench-pod
+.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -10,7 +10,10 @@ test:            ## tier-1 suite (ROADMAP verify command)
 test-fast:       ## tier-1 minus tests marked slow
 	$(PY) -m pytest -x -q -m "not slow"
 
-verify: test     ## alias for the tier-1 verify command
+docs-check:      ## verify README/docs path:symbol references resolve
+	$(PY) tools/check_docs.py
+
+verify: test docs-check  ## tier-1 suite + docs reference check
 
 bench-quick:     ## minutes-scale sanity benchmark (Table II subset)
 	$(PY) -m benchmarks.run --only table2 --scale quick

@@ -130,6 +130,17 @@ def summarize(res, target_acc: Optional[float] = None) -> Dict[str, Any]:
     return out
 
 
+def time_best_of(fn, repeats: int) -> float:
+    """Best-of-N wall-clock seconds for ``fn()`` — the perf benchmarks'
+    shared timing policy (min over repeats suppresses CPU noise)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def save_result(name: str, payload: Dict[str, Any]) -> pathlib.Path:
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"{name}.json"

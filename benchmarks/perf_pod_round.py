@@ -14,7 +14,12 @@ carries; this benchmark measures rounds/sec for
 
 for both the P1 relay and the P2 fedavg round on a 1-device host mesh
 (the same programs the real mesh runs — see tests/test_pod_engine.py for
-the multi-device layout checks).
+the multi-device layout checks).  Each engine row also runs with the
+in-program eval stream ON (eval_every=2) and records the dispatch
+count, asserting that evaluation no longer degrades chunked dispatch to
+per-round dispatch (pre-eval-stream, any eval_every pinned chunks to
+the eval cadence; ``run_pod_training(eval_fn=...)`` pinned
+eval_every=1).
 
     PYTHONPATH=src python -m benchmarks.perf_pod_round
 """
@@ -23,14 +28,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import sys
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import save_result, time_best_of
 from repro.configs import get_reduced
 from repro.data.synthetic import DATASETS
 from repro.fl.engine import RoundSchedule, run_rounds
@@ -62,15 +66,6 @@ def _setup(n_clients: int, seed: int):
         n_clients=n_clients, seed=seed, seq_len=16, n_seq_per_client=16,
         vocab=cfg.vocab_size, n_test=32)
     return cfg, lm_task(cfg), data
-
-
-def _time_run(fn, repeats: int) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def bench_legacy(cfg, data, mesh, *, kind: str, rounds: int, K: int,
@@ -105,14 +100,16 @@ def bench_legacy(cfg, data, mesh, *, kind: str, rounds: int, K: int,
         jax.block_until_ready(m["local_loss"])
 
     run()                                       # compile + warm caches
-    secs = _time_run(run, repeats)
+    secs = time_best_of(run, repeats)
     return {"strategy": kind, "dispatch": "per-round", "rounds": rounds,
+            "eval_every": 0, "dispatches": rounds,
             "secs": round(secs, 4),
             "rounds_per_sec": round(rounds / secs, 2)}
 
 
 def bench_engine(task, data, mesh, *, kind: str, rounds: int, K: int,
-                 spec: PodFLSpec, seed: int, repeats: int) -> List[Dict]:
+                 spec: PodFLSpec, seed: int, repeats: int,
+                 eval_every: int = 0) -> List[Dict]:
     rows = []
     if kind == "relay":
         strat = PodRelayStrategy(spec=spec.local_spec("plain"), mesh=mesh,
@@ -122,13 +119,17 @@ def bench_engine(task, data, mesh, *, kind: str, rounds: int, K: int,
                                      algorithm=spec.algorithm, mesh=mesh,
                                      clients_per_round=K)
     for chunk in CHUNKS:
-        sched = RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+        sched = RoundSchedule(rounds=rounds, lr_decay=1.0,
+                              eval_every=eval_every, eval_batch=32,
                               seed=seed, chunk_size=chunk)
         run = lambda: run_rounds(task, data, strat, sched)   # noqa: E731
-        run()                                   # compile + warm caches
-        secs = _time_run(run, repeats)
-        rows.append({"strategy": kind, "dispatch": f"chunk={chunk}",
-                     "rounds": rounds, "secs": round(secs, 4),
+        res = run()                             # compile + warm caches
+        secs = time_best_of(run, repeats)
+        tag = f"chunk={chunk}" + (f"+eval{eval_every}" if eval_every else "")
+        rows.append({"strategy": kind, "dispatch": tag,
+                     "rounds": rounds, "eval_every": eval_every,
+                     "dispatches": res.dispatches,
+                     "secs": round(secs, 4),
                      "rounds_per_sec": round(rounds / secs, 2)})
     return rows
 
@@ -140,6 +141,8 @@ def main(argv=None) -> int:
     ap.add_argument("--clients-per-round", type=int, default=2)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--eval-every", type=int, default=2,
+                    help="cadence for the eval-ON engine rows")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", default=None, help="accepted for run.py "
@@ -147,6 +150,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.rounds < 1 or args.repeats < 1:
         ap.error("--rounds and --repeats must be >= 1")
+    if args.eval_every < 1:
+        ap.error("--eval-every must be >= 1 (it tags the eval-ON rows; "
+                 "the eval-OFF sweep always runs)")
 
     cfg, task, data = _setup(args.clients, args.seed)
     mesh = make_host_mesh()
@@ -164,22 +170,41 @@ def main(argv=None) -> int:
         rows += bench_engine(task, data, mesh, kind=kind, rounds=args.rounds,
                              K=args.clients_per_round, spec=spec,
                              seed=args.seed, repeats=args.repeats)
-        base = rows[-1 - len(CHUNKS)]["rounds_per_sec"]
-        for r in rows[-1 - len(CHUNKS):]:
+        rows += bench_engine(task, data, mesh, kind=kind, rounds=args.rounds,
+                             K=args.clients_per_round, spec=spec,
+                             seed=args.seed, repeats=args.repeats,
+                             eval_every=args.eval_every)
+        n_new = 1 + 2 * len(CHUNKS)
+        base = rows[-n_new]["rounds_per_sec"]
+        for r in rows[-n_new:]:
             r["speedup_vs_per_round"] = round(r["rounds_per_sec"] / base, 2)
-            print(f"  {r['strategy']:8s} {r['dispatch']:10s} "
+            nd = r.get("dispatches", r["rounds"])
+            print(f"  {r['strategy']:8s} {r['dispatch']:14s} "
                   f"{r['rounds_per_sec']:8.2f} rounds/s "
-                  f"({r['secs']:.3f}s / {r['rounds']} rounds)", flush=True)
+                  f"({r['secs']:.3f}s / {r['rounds']} rounds, "
+                  f"{nd} dispatches)", flush=True)
     save_result("perf_pod_round", {"config": vars(args), "rows": rows})
 
     ok = True
+    chunk = max(CHUNKS)
+    want = -(-args.rounds // chunk)             # ceil(rounds / chunk)
     for kind in ("relay", "fedavg"):
-        sub = {r["dispatch"]: r["rounds_per_sec"] for r in rows
-               if r["strategy"] == kind}
-        if not sub["chunk=8"] >= sub["per-round"]:
-            print(f"[perf_pod_round] REGRESSION: {kind} chunk=8 "
-                  f"({sub['chunk=8']}) slower than per-round dispatch "
-                  f"({sub['per-round']})", file=sys.stderr)
+        sub = {r["dispatch"]: r for r in rows if r["strategy"] == kind}
+        # the chunked-vs-per-round margin at this micro scale is only a
+        # few percent (see experiments/results/perf_pod_round.json), so
+        # the throughput gate tolerates the documented ~10-15% CPU
+        # timing noise; the DISPATCH-COUNT gate below is exact
+        if sub[f"chunk={chunk}"]["rounds_per_sec"] < \
+                0.9 * sub["per-round"]["rounds_per_sec"]:
+            print(f"[perf_pod_round] REGRESSION: {kind} chunk={chunk} "
+                  f">10% slower than per-round dispatch", file=sys.stderr)
+            ok = False
+        ev = sub[f"chunk={chunk}+eval{args.eval_every}"]
+        if ev["dispatches"] != want:
+            print(f"[perf_pod_round] REGRESSION: {kind} eval-on run took "
+                  f"{ev['dispatches']} dispatches for {args.rounds} rounds "
+                  f"(want {want}: evaluation must not split chunks)",
+                  file=sys.stderr)
             ok = False
     return 0 if ok else 1
 

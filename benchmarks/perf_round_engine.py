@@ -6,7 +6,10 @@ Python bookkeeping) bounds throughput.  The engine scans ``chunk_size``
 rounds per dispatch with donated carries; this benchmark measures the
 resulting rounds/sec for both strategies at chunk ∈ {1, 4, 16} — chunk=1
 IS the seed per-round dispatch path, so the speedup column reads as
-"engine vs seed".
+"engine vs seed".  A second sweep runs with the in-program eval stream
+ON (eval_every=4) and records dispatch counts, asserting evaluation
+does not split chunks (pre-eval-stream, chunks broke at every eval
+boundary).
 
     PYTHONPATH=src python -m benchmarks.perf_round_engine
 """
@@ -14,10 +17,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 from typing import Dict, List
 
-from benchmarks.common import save_result
+from benchmarks.common import save_result, time_best_of
 from repro.core.cyclic import CyclicConfig, cyclic_pretrain
 from repro.data.synthetic import DATASETS
 from repro.fl.simulation import FLConfig, run_federated
@@ -37,36 +39,34 @@ def _setup(n_clients: int, n_train: int, seed: int):
     return task, data
 
 
-def _time_run(fn, repeats: int) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
 def bench_strategy(task, data, *, kind: str, rounds: int, local_steps: int,
-                   seed: int, repeats: int) -> List[Dict]:
+                   seed: int, repeats: int,
+                   eval_every: int = 0) -> List[Dict]:
     rows = []
     for chunk in CHUNKS:
         if kind == "relay":
             cfg = CyclicConfig(rounds=rounds, participation=0.25,
                                local_steps=local_steps, batch_size=8,
-                               eval_every=0, seed=seed, chunk_size=chunk)
+                               eval_every=eval_every, eval_batch=128,
+                               seed=seed, chunk_size=chunk)
             run = lambda: cyclic_pretrain(task, data, cfg)        # noqa: E731
         else:
             cfg = FLConfig(algorithm=kind, rounds=rounds, participation=0.25,
                            local_steps=local_steps, batch_size=8,
-                           eval_every=0, seed=seed, chunk_size=chunk)
+                           eval_every=eval_every, eval_batch=128,
+                           seed=seed, chunk_size=chunk)
             run = lambda: run_federated(task, data, cfg)          # noqa: E731
-        run()                                   # compile + warm caches
-        secs = _time_run(run, repeats)
-        rows.append({"strategy": kind, "chunk": chunk,
+        res = run()                             # compile + warm caches
+        secs = time_best_of(run, repeats)
+        tag = f"{chunk}" + (f"+eval{eval_every}" if eval_every else "")
+        rows.append({"strategy": kind, "chunk": chunk, "label": tag,
+                     "eval_every": eval_every,
+                     "dispatches": res.dispatches,
                      "rounds": rounds, "secs": round(secs, 4),
                      "rounds_per_sec": round(rounds / secs, 2)})
-        print(f"  {kind:8s} chunk={chunk:<3d} {rounds / secs:8.2f} rounds/s "
-              f"({secs:.3f}s / {rounds} rounds)", flush=True)
+        print(f"  {kind:8s} chunk={tag:<10s} {rounds / secs:8.2f} rounds/s "
+              f"({secs:.3f}s / {rounds} rounds, {res.dispatches} dispatches)",
+              flush=True)
     base = rows[0]["rounds_per_sec"]
     for r in rows:
         r["speedup_vs_chunk1"] = round(r["rounds_per_sec"] / base, 2)
@@ -79,6 +79,8 @@ def main(argv=None) -> int:
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--n-train", type=int, default=512)
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--eval-every", type=int, default=4,
+                    help="cadence for the eval-ON rows")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", default=None, help="accepted for run.py "
@@ -86,6 +88,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.rounds < 1 or args.repeats < 1:
         ap.error("--rounds and --repeats must be >= 1")
+    if args.eval_every < 1:
+        ap.error("--eval-every must be >= 1 (it tags the eval-ON rows; "
+                 "the eval-OFF sweep always runs)")
 
     task, data = _setup(args.clients, args.n_train, args.seed)
     print(f"[perf_round_engine] {args.rounds} rounds × {args.clients} clients,"
@@ -95,16 +100,27 @@ def main(argv=None) -> int:
         rows += bench_strategy(task, data, kind=kind, rounds=args.rounds,
                                local_steps=args.local_steps, seed=args.seed,
                                repeats=args.repeats)
+        rows += bench_strategy(task, data, kind=kind, rounds=args.rounds,
+                               local_steps=args.local_steps, seed=args.seed,
+                               repeats=args.repeats,
+                               eval_every=args.eval_every)
     save_result("perf_round_engine", {
         "config": vars(args), "rows": rows})
 
     ok = True
+    top = max(CHUNKS)
     for kind in ("relay", "fedavg"):
-        sub = {r["chunk"]: r["rounds_per_sec"] for r in rows
-               if r["strategy"] == kind}
-        if not sub[16] > sub[1]:
-            print(f"[perf_round_engine] REGRESSION: {kind} chunk=16 "
-                  f"({sub[16]}) not faster than chunk=1 ({sub[1]})",
+        sub = {r["label"]: r for r in rows if r["strategy"] == kind}
+        if not sub[str(top)]["rounds_per_sec"] > sub["1"]["rounds_per_sec"]:
+            print(f"[perf_round_engine] REGRESSION: {kind} chunk={top} "
+                  f"not faster than chunk=1", file=sys.stderr)
+            ok = False
+        ev = sub[f"{top}+eval{args.eval_every}"]
+        want = -(-args.rounds // top)           # ceil(rounds / chunk)
+        if ev["dispatches"] != want:
+            print(f"[perf_round_engine] REGRESSION: {kind} eval-on run took "
+                  f"{ev['dispatches']} dispatches for {args.rounds} rounds "
+                  f"(want {want}: evaluation must not split chunks)",
                   file=sys.stderr)
             ok = False
     return 0 if ok else 1

@@ -15,12 +15,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.data.synthetic import make_synthetic_tokenlm
 from repro.launch.train import PodFLSpec, run_pod_training
-from repro.models.transformer import lm_loss
+from repro.models.transformer import lm_forward
 from repro.configs.common import param_count
 
 
@@ -52,21 +51,29 @@ def main():
         n_clients=16, seq_len=args.seq, n_seq_per_client=32,
         vocab=cfg.vocab_size, beta=0.5, seed=args.seed)
 
-    # eval: mean next-token loss on a held-out batch
-    ex = jnp.asarray(data.test_x[:16])
-    ey = jnp.asarray(data.test_y[:16])
-
-    @jax.jit
-    def eval_loss(params):
-        loss, _ = lm_loss(params, cfg, {"tokens": ex, "labels": ey})
-        return loss
+    # eval: per-sequence next-token loss, streamed through the engine's
+    # in-program eval (traceable per-sample contract — the engine
+    # evaluates the whole test set inside the chunked round program, so
+    # evaluating every round still costs one dispatch per chunk).  The
+    # metric must be PER-SAMPLE — (B,) values, not a broadcast batch
+    # mean — so the engine's pad weighting stays exact for any
+    # eval_batch / test-set size combination
+    def eval_loss(params, bx, by):
+        logits, _, _ = lm_forward(params, cfg, {"tokens": bx})
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(by, 0)[..., None], axis=-1)[..., 0]
+        valid = (by >= 0).astype(jnp.float32)
+        per_tok = (logz - gold) * valid
+        return per_tok.sum(axis=-1) / jnp.maximum(valid.sum(axis=-1), 1.0)
 
     spec = PodFLSpec(local_steps=args.local_steps, lr=0.03)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.fl_rounds,
         clients_per_round=4, spec=spec, seed=args.seed,
-        eval_fn=lambda p: float(eval_loss(p)), verbose=True)
+        eval_fn=eval_loss, eval_batch=16, verbose=True)
     print(f"[llm] eval loss trajectory: "
           f"{[round(h['eval'], 4) for h in res.history]}")
     first, last = res.history[0]["eval"], res.history[-1]["eval"]

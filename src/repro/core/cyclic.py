@@ -101,6 +101,7 @@ def make_cyclic_round_fn(task: Task, cfg: CyclicConfig) -> Callable:
 class CyclicResult:
     params: Pytree
     history: List[Dict[str, float]]
+    dispatches: int = 0             # chunk-program invocations (engine)
 
 
 def cyclic_pretrain(task: Task, data: FederatedDataset, cfg: CyclicConfig,
@@ -117,4 +118,5 @@ def cyclic_pretrain(task: Task, data: FederatedDataset, cfg: CyclicConfig,
                      init_params=init_params, ledger=ledger, verbose=verbose,
                      eval_fn=eval_fn, switch_policy=switch_policy,
                      phase=phase, label="cyclic")
-    return CyclicResult(params=res.params, history=res.history)
+    return CyclicResult(params=res.params, history=res.history,
+                        dispatches=res.dispatches)

@@ -56,7 +56,9 @@ class Phase:
     the repro.fl.pod configs on the sharded mesh backend.  The phase
     ``name`` tags the history rows; ``switch_policy`` may end the phase
     early (the engine then advances to the next phase); ``eval_fn``
-    overrides the engine's default test-set evaluation for this phase."""
+    overrides the engine's default eval metric for this phase — it is
+    traced into the round program, so it must follow the engine's
+    per-sample contract ``eval_fn(params, bx, by) -> (B,)``."""
     name: str
     cfg: Any
     switch_policy: Optional[object] = None

@@ -5,6 +5,8 @@ from repro.fl.engine import (
     EngineResult,
     RelayStrategy,
     RoundSchedule,
+    batch_test_set,
+    make_accuracy_metric,
     run_rounds,
 )
 from repro.fl.simulation import (

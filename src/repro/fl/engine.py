@@ -10,7 +10,9 @@ either, parameterized by a ``RoundStrategy``:
   AggregateStrategy : P2 — ``vmap`` over the selected clients + weighted
                       mean, with pluggable algorithm state for
                       fedavg / fedprox / scaffold / moon and an optional
-                      server-side optimizer (FedAvgM / FedAdam).
+                      server-side optimizer (FedAvgM / FedAdam) — on
+                      BOTH backends: the pod shards the optimizer
+                      moments exactly like the params they mirror.
 
 The engine owns everything the three seed drivers each re-implemented:
 
@@ -21,10 +23,16 @@ The engine owns everything the three seed drivers each re-implemented:
     parity testing);
   * round chunking — ``lax.scan`` over a chunk of R rounds per XLA
     dispatch with donated carries, so the host dispatches once per
-    chunk and losses come back as one stacked array.  Chunks never
-    cross an eval boundary, so histories are chunk-size invariant;
-  * the lr-decay schedule, eval cadence, ``CommLedger`` recording and
-    history rows;
+    chunk and losses come back as one stacked array;
+  * evaluation — IN PROGRAM: the chunk takes a per-round eval mask as a
+    scan input and a pre-batched test stream as arguments, computes the
+    eval metric under ``lax.cond`` on rounds where the mask is set
+    (NaN-masked otherwise) and emits an (R,) metric stream next to the
+    losses.  ``eval_every`` and ``chunk_size`` are therefore fully
+    decoupled: evaluating runs cost zero extra dispatches, and
+    histories stay chunk-size invariant because the mask is computed
+    from global round indices on the host;
+  * the lr-decay schedule, ``CommLedger`` recording and history rows;
   * switch policies (core.switch) at any phase boundary — when a policy
     is installed the engine pins chunk=1 so per-round early exit keeps
     the seed drivers' semantics.
@@ -44,11 +52,22 @@ chunk program are placed:
                                    a sharded backend device_puts the
                                    stacked client arrays with mesh
                                    placements (see repro.fl.pod).
+  prepare_eval_data(batched)    -> (ev_x, ev_y, ev_w) device arrays for
+                                   the in-program eval stream — the
+                                   (n_batches, B, ...) batched test set
+                                   plus the (n_batches, B) pad-validity
+                                   weights (pod: batch axis sharded
+                                   over (pod, data)).
   place_params(params)          -> the engine's working copy of the
                                    model (host: plain copy so donation
                                    cannot invalidate the caller's tree;
                                    pod: device_put with
                                    rules.param_shardings).
+  place_server_state(state, t)  -> placement for the server-optimizer
+                                   moments (host: identity; pod:
+                                   device_put with param shardings so
+                                   FedAvgM/FedAdam state shards like
+                                   the params it mirrors).
   jit_chunk(chunk, task, n)     -> the compiled R-round program.  The
                                    host backend jits with donated
                                    carries only; the pod backend adds
@@ -144,9 +163,15 @@ class HostBackend:
     def prepare_data(self, data: FederatedDataset):
         return data.device_arrays()
 
+    def prepare_eval_data(self, batched: Tuple) -> Tuple:
+        return tuple(jnp.asarray(a) for a in batched)
+
     def place_params(self, params: Pytree) -> Pytree:
         # donated carries: copy so the caller's init_params buffer survives
         return jax.tree_util.tree_map(jnp.array, params)
+
+    def place_server_state(self, state: Pytree, task: Task) -> Pytree:
+        return state
 
     def jit_chunk(self, chunk: Callable, task: Task,
                   n_clients: int) -> Callable:
@@ -317,10 +342,25 @@ class AggregateStrategy(HostBackend):
 
 
 # ---------------------------------------------------------------------------
-# evaluation
+# evaluation — the in-program eval stream
 # ---------------------------------------------------------------------------
+#
+# The engine evaluates INSIDE the compiled chunk program: the test set is
+# batched once into (n_batches, B, ...) arrays (the tail batch padded by
+# wrap-around, with a (n_batches, B) 0/1 weight marking real samples),
+# handed to the backend for placement, and scanned under a per-round
+# ``lax.cond`` so non-eval rounds pay nothing.  The metric contract is
+# PER-SAMPLE: ``metric(params, bx, by) -> (B,)`` — the engine returns the
+# weight-averaged mean over the whole stream, which for the default
+# accuracy metric equals full-test-set accuracy exactly (every sample
+# carries the same number of label elements).
 
 def make_eval_fn(task: Task, batch: int) -> Callable:
+    """Host-side reference evaluation (one jit dispatch per test batch).
+
+    Kept as the parity oracle for the in-program stream and for
+    evaluating a model outside an engine run; the training loop itself
+    evaluates in-program (see ``make_accuracy_metric``)."""
     @jax.jit
     def eval_batch(params, bx, by):
         return task.accuracy(params, bx, by)
@@ -336,6 +376,41 @@ def make_eval_fn(task: Task, batch: int) -> Callable:
         return float(np.average(accs, weights=ws))
 
     return evaluate
+
+
+@functools.lru_cache(maxsize=64)
+def make_accuracy_metric(task: Task) -> Callable:
+    """Default in-program eval metric: per-sample accuracy.
+
+    ``metric(params, bx, by) -> (B,)`` mean correctness per sample (the
+    trailing label dims — sequence positions for token tasks — are
+    averaged within each sample, matching ``Task.accuracy``)."""
+
+    def metric(params, bx, by):
+        correct = (task.predict_fn(params, bx) == by).astype(jnp.float32)
+        return correct.reshape(correct.shape[0], -1).mean(axis=1)
+
+    return metric
+
+
+def batch_test_set(test_x, test_y, batch: int) -> Tuple:
+    """Batch the held-out test set for the in-program eval stream.
+
+    Returns host arrays ``(ev_x, ev_y, ev_w)``: ``(n_batches, B, ...)``
+    data (tail batch padded by wrapping around to the front of the test
+    set) and ``(n_batches, B)`` float32 weights — 1 for real samples, 0
+    for pad — so the weighted mean over the stream is exact."""
+    test_x, test_y = np.asarray(test_x), np.asarray(test_y)
+    n = len(test_y)
+    B = max(1, min(batch, n))
+    n_batches = -(-n // B)
+    pad = n_batches * B - n
+    idx = np.concatenate([np.arange(n), np.arange(pad) % n])
+    w = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    shape = (n_batches, B)
+    return (test_x[idx].reshape(shape + test_x.shape[1:]),
+            test_y[idx].reshape(shape + test_y.shape[1:]),
+            w.reshape(shape))
 
 
 # ---------------------------------------------------------------------------
@@ -354,7 +429,9 @@ class RoundSchedule:
 
     eval_every ≤ 0 disables evaluation entirely (benchmark mode);
     otherwise the engine evaluates every ``eval_every`` rounds and on
-    the final round, exactly like the seed drivers.
+    the final round — the same cadence as the seed drivers, but computed
+    in-program from a per-round mask, so any ``eval_every`` composes
+    with any ``chunk_size`` without splitting a dispatch.
     """
     rounds: int
     lr_decay: float = 0.998
@@ -376,15 +453,18 @@ class EngineResult:
     history: List[Dict[str, float]]
     algo_state: Dict[str, Pytree]
     server_state: Any = None
+    dispatches: int = 0             # chunk-program invocations this run
 
 
 def make_chunk_fn(task: Task, strategy, schedule: RoundSchedule,
-                  n_clients: int) -> Callable:
+                  n_clients: int, metric: Optional[Callable] = None
+                  ) -> Callable:
     """Build the jitted R-round program.
 
     signature: chunk_fn(key, params, algo_state, server_state,
-                        x_all, y_all, n_real, ids, lr_scales)
-               -> (key, params, algo_state, server_state, losses)
+                        x_all, y_all, n_real, ids, lr_scales, eval_mask,
+                        ev_x, ev_y, ev_w)
+               -> (key, params, algo_state, server_state, losses, metrics)
     The per-round keys are derived INSIDE the scan by the same
     ``key, rk = jax.random.split(key)`` recurrence the seed drivers ran
     on the host (threefry is deterministic, so the streams are
@@ -393,27 +473,48 @@ def make_chunk_fn(task: Task, strategy, schedule: RoundSchedule,
     None for on-device sampling, and the four carries are donated so
     chunk i+1 reuses chunk i's buffers.
 
-    Programs are cached on (task, strategy, sampling, n_clients) —
-    Task and the strategies are frozen dataclasses — so repeated engine
-    runs (benchmark sweeps, schedule phases reusing a config) skip
-    retracing; jax.jit then caches per chunk length R underneath.
+    ``metric`` is the in-program eval metric (per-sample contract, see
+    ``make_accuracy_metric``) or None for no-eval programs.  With a
+    metric, eval_mask is an (R,) bool scan input and ev_x/ev_y/ev_w the
+    backend-placed test stream from :func:`batch_test_set`; the chunk
+    evaluates under ``lax.cond`` on masked-in rounds and emits an (R,)
+    metric stream (NaN on masked-out rounds).  Without one, those four
+    args are None and the metrics output is None.
+
+    Programs are cached on (task, strategy, sampling, n_clients,
+    metric) — Task and the strategies are frozen dataclasses — so
+    repeated engine runs (benchmark sweeps, schedule phases reusing a
+    config) skip retracing; jax.jit then caches per chunk length R
+    underneath.
     """
-    return _cached_chunk_fn(task, strategy, schedule.sampling, n_clients)
+    return _cached_chunk_fn(task, strategy, schedule.sampling, n_clients,
+                            metric)
 
 
 @functools.lru_cache(maxsize=64)
 def _cached_chunk_fn(task: Task, strategy, sampling: str,
-                     n_clients: int) -> Callable:
+                     n_clients: int, metric: Optional[Callable]) -> Callable:
     body = strategy.build_round(task)
     server = strategy.make_server_update()
     on_device = sampling == "device"
     K = strategy.n_selected(n_clients)
 
     def chunk(key, params, algo_state, server_state, x_all, y_all, n_real,
-              ids, lr_scales):
+              ids, lr_scales, eval_mask, ev_x, ev_y, ev_w):
+        def evaluate(params):
+            # weighted mean over the batched test stream; ev_w zeroes
+            # the wrap-around pad in the tail batch
+            def eval_batch(tot, inp):
+                bx, by, w = inp
+                return tot + jnp.sum(metric(params, bx, by) * w), None
+
+            tot, _ = jax.lax.scan(eval_batch, jnp.float32(0.0),
+                                  (ev_x, ev_y, ev_w))
+            return tot / jnp.sum(ev_w)
+
         def one_round(carry, xs):
             key, params, algo_state, server_state = carry
-            ids_r, lr_scale = xs
+            ids_r, lr_scale, do_eval = xs
             key, rk = jax.random.split(key)
             if on_device:
                 k_sel, rk = jax.random.split(rk)
@@ -424,20 +525,18 @@ def _cached_chunk_fn(task: Task, strategy, sampling: str,
             if server is not None:
                 new_params, server_state = server[1](params, new_params,
                                                      server_state)
-            return (key, new_params, algo_state, server_state), loss
+            m = None
+            if metric is not None:
+                m = jax.lax.cond(do_eval, evaluate,
+                                 lambda _: jnp.float32(jnp.nan), new_params)
+            return (key, new_params, algo_state, server_state), (loss, m)
 
-        (key, params, algo_state, server_state), losses = jax.lax.scan(
-            one_round, (key, params, algo_state, server_state),
-            (ids, lr_scales))
-        return key, params, algo_state, server_state, losses
+        (key, params, algo_state, server_state), (losses, metrics) = \
+            jax.lax.scan(one_round, (key, params, algo_state, server_state),
+                         (ids, lr_scales, eval_mask))
+        return key, params, algo_state, server_state, losses, metrics
 
     return strategy.jit_chunk(chunk, task, n_clients)
-
-
-def _rounds_until_eval(rnd: int, eval_every: int) -> int:
-    if eval_every <= 0:
-        return 1 << 30
-    return eval_every - (rnd % eval_every)
 
 
 def run_rounds(task: Task, data: FederatedDataset, strategy,
@@ -456,6 +555,14 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     the host independently of chunking, so histories are invariant to
     ``chunk_size`` and, with sampling="host" + the right offset,
     bit-compatible with the seed drivers.
+
+    Evaluation runs IN PROGRAM (see ``make_chunk_fn``): rounds where
+    ``(round + 1) % eval_every == 0`` — plus the final round — compute
+    the eval metric inside the chunk scan, so evaluating never splits a
+    chunk or adds a dispatch.  ``eval_fn`` overrides the default
+    accuracy metric and must follow the traceable per-sample contract
+    ``eval_fn(params, bx, by) -> (B,)``; the history rows record the
+    stream's weighted mean under the ``"acc"`` key either way.
     """
     key = jax.random.PRNGKey(schedule.seed)
     params = init_params if init_params is not None else task.init(key)
@@ -468,10 +575,18 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     algo_state = strategy.init_state(task, params, n_clients)
     server = strategy.make_server_update()
     server_state = server[0](params) if server is not None else ()
+    server_state = strategy.place_server_state(server_state, task)
 
-    chunk_fn = make_chunk_fn(task, strategy, schedule, n_clients)
-    evaluate = eval_fn or make_eval_fn(task, schedule.eval_batch)
+    with_eval = schedule.eval_every > 0 and len(np.asarray(data.test_y)) > 0
+    metric = None
+    if with_eval:
+        metric = eval_fn if eval_fn is not None else make_accuracy_metric(task)
+    chunk_fn = make_chunk_fn(task, strategy, schedule, n_clients, metric)
     x_all, y_all, n_real = strategy.prepare_data(data)
+    ev_x = ev_y = ev_w = None
+    if with_eval:
+        ev_x, ev_y, ev_w = strategy.prepare_eval_data(
+            batch_test_set(data.test_x, data.test_y, schedule.eval_batch))
 
     host_rng = None
     if schedule.sampling == "host":
@@ -483,9 +598,9 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
 
     history: List[Dict[str, float]] = []
     rnd = 0
+    dispatches = 0
     while rnd < schedule.rounds:
-        R = min(chunk, schedule.rounds - rnd,
-                _rounds_until_eval(rnd, schedule.eval_every))
+        R = min(chunk, schedule.rounds - rnd)
         ids = None
         if host_rng is not None:
             ids = jnp.asarray(np.stack([
@@ -493,30 +608,40 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
                 for _ in range(R)]))
         lr_scales = jnp.asarray(
             [schedule.lr_decay ** (rnd + j) for j in range(R)], jnp.float32)
+        # the eval cadence is a host-computed mask over GLOBAL round
+        # indices, so it is independent of how rounds chunk into dispatches
+        eval_mask = None
+        do_eval = [False] * R
+        if with_eval:
+            do_eval = [(rnd + j + 1) % schedule.eval_every == 0
+                       or rnd + j + 1 == schedule.rounds for j in range(R)]
+            eval_mask = jnp.asarray(do_eval)
 
-        key, params, algo_state, server_state, losses = chunk_fn(
+        key, params, algo_state, server_state, losses, metrics = chunk_fn(
             key, params, algo_state, server_state, x_all, y_all, n_real,
-            ids, lr_scales)
+            ids, lr_scales, eval_mask, ev_x, ev_y, ev_w)
+        dispatches += 1
         losses = np.asarray(losses)
+        metrics = np.asarray(metrics) if metrics is not None else None
 
         for j in range(R):
             if ledger is not None:
                 strategy.record(ledger, K, params)
-            history.append({"round": rnd + j, "local_loss": float(losses[j]),
-                            "phase": phase})
+            row = {"round": rnd + j, "local_loss": float(losses[j]),
+                   "phase": phase}
+            if do_eval[j]:
+                row["acc"] = float(metrics[j])
+                if verbose:
+                    print(f"[{label}] round {rnd + j + 1}/{schedule.rounds} "
+                          f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
+                          flush=True)
+            history.append(row)
         rnd += R
 
-        if schedule.eval_every > 0 and (
-                rnd % schedule.eval_every == 0 or rnd == schedule.rounds):
-            row = history[-1]
-            row["acc"] = evaluate(params, data.test_x, data.test_y)
-            if verbose:
-                print(f"[{label}] round {rnd}/{schedule.rounds} "
-                      f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
-                      flush=True)
         if switch_policy is not None and switch_policy.should_switch(
                 rnd - 1, history):
             break
 
     return EngineResult(params=params, history=history,
-                        algo_state=algo_state, server_state=server_state)
+                        algo_state=algo_state, server_state=server_state,
+                        dispatches=dispatches)

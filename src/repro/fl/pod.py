@@ -29,6 +29,15 @@ delta accumulation IS the FedAvg all-reduce on the mesh.  The math is
 identical to the host vmap+weighted-mean path, which is what the
 host↔pod parity tests pin down.
 
+Server-side optimizers (``server_opt="momentum"|"adam"`` — FedAvgM /
+FedAdam) run at pod scale too: the optimizer moments mirror the param
+tree, so ``rules.param_shardings`` applied to the ``OptState`` pytree
+shards every moment exactly like the parameter it tracks (the scalar
+step count replicates), and the state rides the donated chunk carry —
+one sharded optimizer state per run, zero host round-trips.  The
+in-program eval stream's test batches shard their per-batch sample axis
+over (pod, data), same policy as the training pool.
+
 ``PodCyclicConfig`` / ``PodFLConfig`` are the declarative phase entries:
 they register with ``core.pipeline`` so ``run_phase_schedule`` drives
 multi-cycle P1↔P2 alternation and switch policies identically on both
@@ -84,6 +93,11 @@ class PodFLSpec:
     mu: float = 0.01                # fedprox proximal / moon coefficient
     temperature: float = 0.5        # moon
     grad_clip: Optional[float] = None
+    # server-side optimizer (FedAvgM / FedAdam, Reddi et al.): applied to
+    # the aggregated pseudo-gradient, moments sharded like params
+    server_opt: str = "none"        # none | momentum | adam
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
 
     def local_spec(self, variant: Optional[str] = None) -> LocalSpec:
         return LocalSpec(
@@ -147,32 +161,69 @@ class PodBackendMixin:
         p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
         return rules.param_shardings(p_specs, self.mesh, self.layout)
 
-    def prepare_data(self, data: FederatedDataset):
+    def _axis1_sharding(self, arr):
+        # batch-like axis 1 over (pod, data); replicate when it does not
+        # divide — same degradation policy as the rules
         mesh = self.mesh
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         n_shards = 1
         for a in ("pod", "data"):
             n_shards *= sizes.get(a, 1)
+        if arr.ndim >= 2 and n_shards > 1 and \
+                arr.shape[1] % n_shards == 0 and arr.shape[1] >= n_shards:
+            return jax.sharding.NamedSharding(
+                mesh, rules.fl_batch_pspec(mesh, arr.ndim, batch_axis=1))
+        return rules.replicated(mesh)
 
-        def pool_sharding(arr):
-            # sample pool (axis 1) over (pod, data); replicate when it
-            # does not divide — same degradation policy as the rules
-            if arr.ndim >= 2 and n_shards > 1 and \
-                    arr.shape[1] % n_shards == 0 and arr.shape[1] >= n_shards:
-                return jax.sharding.NamedSharding(
-                    mesh, rules.fl_batch_pspec(mesh, arr.ndim, batch_axis=1))
-            return rules.replicated(mesh)
+    def prepare_data(self, data: FederatedDataset):
+        # sample pool (n_clients, n_per_client, ...): pool axis over the
+        # mesh batch axes
+        return data.device_arrays((self._axis1_sharding(data.x),
+                                   self._axis1_sharding(data.y),
+                                   rules.replicated(self.mesh)))
 
-        return data.device_arrays((pool_sharding(data.x),
-                                   pool_sharding(data.y),
-                                   rules.replicated(mesh)))
+    def prepare_eval_data(self, batched):
+        # eval stream (n_batches, B, ...): per-batch sample axis over the
+        # mesh batch axes, exactly like the training pool
+        return tuple(jax.device_put(a, self._axis1_sharding(a))
+                     for a in batched)
+
+    def _put_unaliased(self, tree: Pytree, shardings) -> Pytree:
+        # device_put is a NO-OP (returns the caller's array) when the
+        # placement already matches — e.g. phase 2 of a pod schedule
+        # receiving phase 1's already-sharded result — and the engine
+        # donates its carries, which would delete the caller's buffer.
+        # Copy any aliased leaf so donation never eats external state.
+        placed = jax.device_put(tree, shardings)
+        return jax.tree_util.tree_map(
+            lambda orig, out: jnp.copy(out) if out is orig else out,
+            tree, placed)
 
     def place_params(self, params: Pytree) -> Pytree:
-        return jax.device_put(
+        return self._put_unaliased(
             params, rules.param_shardings(params, self.mesh, self.layout))
+
+    def place_server_state(self, state: Pytree, task: Task) -> Pytree:
+        if not jax.tree_util.tree_leaves(state):
+            return state
+        p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+        return self._put_unaliased(state,
+                                   self.server_state_shardings(p_specs))
 
     def state_shardings(self, p_specs: Pytree, n_clients: int) -> Dict:
         return {}
+
+    def server_state_shardings(self, p_specs: Pytree) -> Any:
+        """Placement for the server-optimizer ``OptState``.  The moment
+        trees mirror the param tree leaf-for-leaf, so the param
+        path-pattern rules apply verbatim (the OptState/AdamWState
+        wrappers only prefix the paths); the scalar step count falls
+        through every rule to replication."""
+        server = self.make_server_update()
+        if server is None:
+            return ()
+        state = jax.eval_shape(server[0], p_specs)
+        return rules.param_shardings(state, self.mesh, self.layout)
 
     def jit_chunk(self, chunk: Callable, task: Task,
                   n_clients: int) -> Callable:
@@ -180,12 +231,18 @@ class PodBackendMixin:
         p_sh = rules.param_shardings(p_specs, self.mesh, self.layout)
         rep = rules.replicated(self.mesh)
         st_sh = self.state_shardings(p_specs, n_clients)
+        srv_sh = self.server_state_shardings(p_specs)
         # chunk args: (key, params, algo_state, server_state, x_all,
-        #              y_all, n_real, ids, lr_scales); x/y keep the
-        #              committed placement from prepare_data (None =
-        #              inherit), ids is None under on-device sampling
-        in_sh = (rep, p_sh, st_sh, (), None, None, rep, None, rep)
-        out_sh = (rep, p_sh, st_sh, (), rep)
+        #              y_all, n_real, ids, lr_scales, eval_mask, ev_x,
+        #              ev_y, ev_w); x/y and the eval stream keep the
+        #              committed placement from prepare_data /
+        #              prepare_eval_data (None = inherit), ids is None
+        #              under on-device sampling, eval args are None in
+        #              no-eval programs (a sharding entry broadcasts
+        #              over the empty pytree)
+        in_sh = (rep, p_sh, st_sh, srv_sh, None, None, rep, None, rep,
+                 rep, None, None, None)
+        out_sh = (rep, p_sh, st_sh, srv_sh, rep, rep)
         return jax.jit(chunk, in_shardings=in_sh, out_shardings=out_sh,
                        donate_argnums=(0, 1, 2, 3))
 
@@ -221,8 +278,9 @@ class PodRelayStrategy(PodBackendMixin, RelayStrategy):
 class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
     """P2 on the mesh: sequential client scan + weighted f32 delta
     accumulation (peak memory independent of K), algorithm state behind
-    a data-axis-sharded ClientStateStore.  Numerically matches the host
-    vmap backend round-for-round."""
+    a data-axis-sharded ClientStateStore, server-side optimizers
+    (``server_opt="momentum"|"adam"``) with param-sharded moments.
+    Numerically matches the host vmap backend round-for-round."""
     mesh: Any = None
     layout: str = "fsdp_tp"
     clients_per_round: Optional[int] = None
@@ -232,9 +290,6 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             raise ValueError("PodAggregateStrategy requires a mesh")
         if self.algorithm not in POD_ALGORITHMS:
             raise ValueError(f"unknown pod algorithm {self.algorithm!r}")
-        if self.server_opt != "none":
-            raise NotImplementedError(
-                "server-side optimizers are host-backend only for now")
         if self.state_store is DENSE_STORE:
             object.__setattr__(self, "state_store",
                                ShardedClientStateStore(self.mesh))
@@ -400,6 +455,8 @@ class PodFLConfig:
     def strategy(self) -> PodAggregateStrategy:
         return PodAggregateStrategy(
             spec=self.spec.local_spec(), algorithm=self.spec.algorithm,
+            server_opt=self.spec.server_opt, server_lr=self.spec.server_lr,
+            server_momentum=self.spec.server_momentum,
             mesh=self.mesh, layout=self.layout,
             clients_per_round=self.clients_per_round)
 

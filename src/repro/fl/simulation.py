@@ -106,6 +106,7 @@ class FLResult:
     params: Pytree
     history: List[Dict[str, float]]
     state: ServerState
+    dispatches: int = 0             # chunk-program invocations (engine)
 
     def best(self, key: str = "acc") -> Dict[str, float]:
         rows = [h for h in self.history if key in h]
@@ -169,4 +170,5 @@ def run_federated(task: Task, data: FederatedDataset, cfg: FLConfig,
                         c_global=res.algo_state.get("c_global"),
                         c_clients=res.algo_state.get("c_clients"),
                         w_prev=res.algo_state.get("w_prev"))
-    return FLResult(params=res.params, history=res.history, state=state)
+    return FLResult(params=res.params, history=res.history, state=state,
+                    dispatches=res.dispatches)

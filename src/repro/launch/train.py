@@ -224,6 +224,8 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                      spec: Optional[PodFLSpec] = None,
                      mesh=None, seed: int = 0,
                      eval_fn: Optional[Callable] = None,
+                     eval_every: Optional[int] = None,
+                     eval_batch: int = 64,
                      verbose: bool = False,
                      chunk_size: int = 4,
                      sampling: str = "device",
@@ -231,28 +233,33 @@ def run_pod_training(cfg: TransformerConfig, data, *,
     """CyclicFL end-to-end on the pod backend: a declarative P1→P2 phase
     schedule through the shared round engine — no hand-rolled loops.
 
-    ``eval_fn`` keeps the legacy per-round signature ``eval_fn(params)``;
-    when given, every round's history row carries an ``eval`` entry.
+    Evaluation streams IN PROGRAM (repro.fl.engine): rounds on the
+    ``eval_every`` cadence score the held-out test set inside the
+    compiled chunk, so evaluating keeps ONE mesh dispatch per
+    ``chunk_size`` rounds — there is no per-round-dispatch eval mode
+    anymore.  ``eval_fn`` optionally overrides the default test-accuracy
+    metric and must be traceable with the engine's per-sample contract
+    ``eval_fn(params, bx, by) -> (B,)``.  ``eval_every=None`` defaults
+    to every round when a custom metric is given (the legacy cadence)
+    and to no evaluation otherwise; evaluated rounds carry an ``eval``
+    entry in their history row.
     """
     from repro.launch.mesh import make_host_mesh
     spec = spec or PodFLSpec()
     mesh = mesh or make_host_mesh()
     task = lm_task(cfg)
 
-    eval_every = 1 if eval_fn is not None else 0
-    engine_eval = None
-    if eval_fn is not None:
-        def engine_eval(params, test_x, test_y):  # noqa: F811
-            return eval_fn(params)
+    if eval_every is None:
+        eval_every = 1 if eval_fn is not None else 0
 
     common = dict(mesh=mesh, clients_per_round=clients_per_round, spec=spec,
-                  layout=layout, chunk_size=chunk_size,
-                  sampling=sampling, eval_every=eval_every)
+                  layout=layout, chunk_size=chunk_size, sampling=sampling,
+                  eval_every=eval_every, eval_batch=eval_batch)
     phases = []
     if cyclic_rounds > 0:
         phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
                                                   seed=seed, **common),
-                            eval_fn=engine_eval))
+                            eval_fn=eval_fn))
     if fl_rounds > 0:
         # decorrelate the P2 key stream from P1's: each phase restarts
         # from PRNGKey(its seed), and with equal K the relay and
@@ -264,7 +271,7 @@ def run_pod_training(cfg: TransformerConfig, data, *,
         p2_seed = seed + HOST_RNG_OFFSET_P2 if phases else seed
         phases.append(Phase("P2", PodFLConfig(rounds=fl_rounds, seed=p2_seed,
                                               **common),
-                            eval_fn=engine_eval))
+                            eval_fn=eval_fn))
     if not phases:
         return PodTrainResult(params=init_lm(jax.random.PRNGKey(seed), cfg),
                               history=[])
@@ -297,6 +304,17 @@ def main(argv=None) -> int:
     ap.add_argument("--algorithm", default="fedavg",
                     choices=POD_ALGORITHMS)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--server-opt", default="none",
+                    choices=("none", "momentum", "adam"),
+                    help="server-side optimizer on the aggregated "
+                         "pseudo-gradient (FedAvgM / FedAdam)")
+    ap.add_argument("--server-lr", type=float, default=1.0,
+                    help="server step size; 1.0 suits momentum (FedAvgM), "
+                         "adam wants ~0.01-0.1 (its update is sign-scale)")
+    ap.add_argument("--server-momentum", type=float, default=0.9)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="in-program test-accuracy cadence "
+                         "(0 = no evaluation; never splits a chunk)")
     ap.add_argument("--chunk-size", type=int, default=4,
                     help="rounds fused into one XLA dispatch")
     ap.add_argument("--sampling", default="device",
@@ -315,12 +333,15 @@ def main(argv=None) -> int:
         n_clients=args.clients, seq_len=args.seq, n_seq_per_client=64,
         vocab=cfg.vocab_size, beta=0.5, seed=args.seed)
     spec = PodFLSpec(local_steps=args.local_steps, batch_size=args.batch,
-                     lr=args.lr, algorithm=args.algorithm)
+                     lr=args.lr, algorithm=args.algorithm,
+                     server_opt=args.server_opt, server_lr=args.server_lr,
+                     server_momentum=args.server_momentum)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.rounds,
         clients_per_round=args.clients_per_round, spec=spec,
         seed=args.seed, verbose=True, chunk_size=args.chunk_size,
+        eval_every=args.eval_every,
         sampling=args.sampling, layout=args.layout)
     first = res.history[0]["loss"]
     last = res.history[-1]["loss"]

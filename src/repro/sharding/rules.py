@@ -18,6 +18,14 @@ axis it falls back to replication on that axis, so the same rules drive
 the 16×16 pod, the 2×16×16 multi-pod and single-device CPU tests.
 Stacked scan layers (leading L axis) are handled by left-padding specs
 with None to the leaf rank.
+
+The rules match by PATH SUFFIX, so they also shard any pytree whose
+leaves mirror the param tree under a wrapper prefix — in particular the
+server-optimizer ``OptState`` (repro.optim.optimizers): a momentum/adam
+moment at ``inner/.../wq/w`` gets the same spec as the param it tracks,
+and non-mirroring leaves (the scalar step count) fall through every
+rule to replication.  repro.fl.pod leans on this to place FedAvgM /
+FedAdam state (``server_state_shardings``) without a second rule table.
 """
 from __future__ import annotations
 

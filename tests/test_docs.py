@@ -1,0 +1,39 @@
+"""Docs stay wired to the code: `make docs-check` semantics as a test.
+
+Runs tools/check_docs.py over README.md + docs/*.md (every backticked
+``path`` / ``path:symbol`` reference must resolve against the source
+tree) and asserts the checker itself still catches breakage.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CHECKER = ROOT / "tools" / "check_docs.py"
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, str(CHECKER), *args],
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_docs_references_resolve():
+    out = _run()
+    assert out.returncode == 0, out.stderr + out.stdout
+
+
+def test_docs_suite_is_present():
+    for f in ("README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"):
+        assert (ROOT / f).is_file(), f
+
+
+def test_checker_catches_broken_refs(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("`src/repro/fl/engine.py:definitely_not_a_symbol` and\n"
+                   "`src/repro/no/such/file.py` but `lax.scan` is prose\n"
+                   "and `src/repro/fl/engine.py:run_rounds` is real.\n")
+    out = _run(str(bad))
+    assert out.returncode == 1
+    assert "definitely_not_a_symbol" in out.stderr
+    assert "does not exist" in out.stderr
+    assert "run_rounds" not in out.stderr

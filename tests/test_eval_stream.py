@@ -1,0 +1,220 @@
+"""In-program eval stream + pod server-optimizer tests.
+
+The engine evaluates INSIDE the compiled chunk program (per-round mask
+scan input + batched test stream, see repro.fl.engine).  These tests pin
+the contract down:
+
+  - the streamed metric equals the host-side reference evaluation
+    (``make_eval_fn``) to fp tolerance, including when the test-set size
+    does not divide ``eval_batch`` (wrap-around padding + weights);
+  - histories (losses AND acc rows) are invariant to ``chunk_size``
+    even when ``eval_every`` does not divide it — the decoupling that
+    removed ``_rounds_until_eval`` chunk-splitting;
+  - evaluating costs ZERO extra dispatches: ceil(rounds / chunk_size)
+    chunk invocations with eval on or off;
+  - pod ``server_opt="momentum"|"adam"`` matches the host engine
+    round-for-round, and the optimizer moments shard like the params
+    they mirror.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.data.synthetic import DATASETS, make_synthetic_tokenlm
+from repro.fl.engine import (
+    AggregateStrategy,
+    RoundSchedule,
+    batch_test_set,
+    make_eval_fn,
+    run_rounds,
+)
+from repro.fl.local import LocalSpec
+from repro.fl.simulation import HOST_RNG_OFFSET_P2, FLConfig, run_federated
+from repro.fl.task import lm_task, vision_task
+from repro.launch.mesh import make_host_mesh
+
+SEED = 0
+
+
+@pytest.fixture(scope="module")
+def vision_setup():
+    # n_test=250 deliberately does not divide eval_batch=64: the tail
+    # batch exercises the wrap-around padding + weight masking
+    data = DATASETS.get("cifar10-like")(n_clients=8, beta=0.5, seed=SEED,
+                                        n_train=256, n_test=250)
+    task = vision_task("lenet5", n_classes=10, in_ch=3)
+    return task, data
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import get_reduced
+    cfg = get_reduced("qwen1.5-0.5b")
+    data = make_synthetic_tokenlm(n_clients=8, seq_len=16,
+                                  n_seq_per_client=8,
+                                  vocab=cfg.vocab_size, beta=0.5, seed=SEED)
+    return lm_task(cfg), data
+
+
+def _fl(rounds=4, **kw):
+    kw.setdefault("eval_batch", 64)
+    return FLConfig(algorithm="fedavg", rounds=rounds, participation=0.25,
+                    local_steps=2, seed=SEED, **kw)
+
+
+def _leaves32(tree):
+    return [np.asarray(x, np.float32) for x in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# batching helper
+# ---------------------------------------------------------------------------
+
+def test_batch_test_set_pads_with_wraparound_and_weights():
+    x = np.arange(10, dtype=np.float32)[:, None]
+    y = np.arange(10)
+    bx, by, w = batch_test_set(x, y, 4)
+    assert bx.shape == (3, 4, 1) and by.shape == (3, 4) and w.shape == (3, 4)
+    np.testing.assert_array_equal(by.ravel()[:10], y)
+    np.testing.assert_array_equal(by.ravel()[10:], y[:2])   # wrap-around pad
+    np.testing.assert_array_equal(w.ravel(),
+                                  [1] * 10 + [0] * 2)
+    # eval_batch larger than the test set clamps to one full batch
+    bx, by, w = batch_test_set(x, y, 256)
+    assert bx.shape == (1, 10, 1) and w.sum() == 10
+
+
+# ---------------------------------------------------------------------------
+# stream ↔ host-reference parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eval_every", [1, 3])
+def test_inprogram_eval_matches_host_reference(vision_setup, eval_every):
+    """The final round always evaluates; its in-program acc must equal
+    the host-side batched reference on the final params."""
+    task, data = vision_setup
+    res = run_federated(task, data, _fl(rounds=4, eval_every=eval_every,
+                                        chunk_size=4))
+    want = make_eval_fn(task, 64)(res.params, data.test_x, data.test_y)
+    assert abs(res.history[-1]["acc"] - want) <= 1e-5
+
+
+def test_inprogram_eval_matches_host_reference_tokenlm(lm_setup):
+    task, data = lm_setup
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05)
+    sched = RoundSchedule(rounds=2, lr_decay=1.0, eval_every=2, eval_batch=8,
+                          seed=SEED, chunk_size=2)
+    res = run_rounds(task, data,
+                     AggregateStrategy(spec=spec, participation=0.25), sched)
+    want = make_eval_fn(task, 8)(res.params, data.test_x, data.test_y)
+    assert abs(res.history[-1]["acc"] - want) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# eval_every ⊥ chunk_size
+# ---------------------------------------------------------------------------
+
+def test_eval_cadence_decoupled_from_chunking(vision_setup):
+    """eval_every=3 with chunk_size=4 (neither divides the other):
+    histories — including which rounds carry acc and their values —
+    must match the chunk_size=1 run."""
+    task, data = vision_setup
+    cfg = _fl(rounds=7, eval_every=3, chunk_size=4)
+    r1 = run_federated(task, data, dc.replace(cfg, chunk_size=1))
+    r4 = run_federated(task, data, cfg)
+    assert [h["round"] for h in r4.history] == list(range(7))
+    # cadence: rounds 3, 6 (1-based) plus the final round
+    assert [h["round"] for h in r4.history if "acc" in h] == [2, 5, 6]
+    for a, b in zip(r1.history, r4.history):
+        assert ("acc" in a) == ("acc" in b)
+        assert abs(a["local_loss"] - b["local_loss"]) <= 1e-5
+        assert abs(a.get("acc", 0.0) - b.get("acc", 0.0)) <= 1e-5
+    for a, b in zip(_leaves32(r1.params), _leaves32(r4.params)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_eval_costs_zero_extra_dispatches(vision_setup):
+    """ceil(rounds / chunk) dispatches, evaluation on or off — the
+    pre-eval-stream engine split every chunk at eval boundaries."""
+    task, data = vision_setup
+    off = run_federated(task, data, _fl(rounds=6, eval_every=0, chunk_size=4))
+    on = run_federated(task, data, _fl(rounds=6, eval_every=3, chunk_size=4))
+    assert off.dispatches == on.dispatches == 2
+    assert [h["round"] for h in on.history if "acc" in h] == [2, 5]
+
+
+# ---------------------------------------------------------------------------
+# pod server-side optimizers (FedAvgM / FedAdam)
+# ---------------------------------------------------------------------------
+
+def _sched(rounds, chunk):
+    return RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                         seed=SEED, chunk_size=chunk, sampling="host",
+                         host_rng_offset=HOST_RNG_OFFSET_P2)
+
+
+@pytest.mark.parametrize("server_opt,server_lr,tol",
+                         [("momentum", 0.5, 1e-5),
+                          ("adam", 0.02, 2e-3)])
+def test_pod_server_opt_matches_host_engine(lm_setup, server_opt, server_lr,
+                                            tol):
+    """Pod FedAvgM/FedAdam vs the host engine, same seeds + host
+    sampling.  momentum is tight; adam's sign-like normalization
+    amplifies the scan-delta vs vmap-mean fp reduction-order difference
+    on near-zero pseudo-gradient elements, hence the looser tolerance
+    and step size."""
+    from repro.fl.pod import PodAggregateStrategy
+
+    task, data = lm_setup
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.01)
+    host = run_rounds(task, data,
+                      AggregateStrategy(spec=spec, participation=0.25,
+                                        server_opt=server_opt,
+                                        server_lr=server_lr),
+                      _sched(3, 2))
+    pod = run_rounds(task, data,
+                     PodAggregateStrategy(spec=spec, mesh=make_host_mesh(),
+                                          clients_per_round=2,
+                                          server_opt=server_opt,
+                                          server_lr=server_lr),
+                     _sched(3, 2))
+    np.testing.assert_allclose([h["local_loss"] for h in host.history],
+                               [h["local_loss"] for h in pod.history],
+                               atol=tol, rtol=tol)
+    for a, b in zip(_leaves32(host.params), _leaves32(pod.params)):
+        np.testing.assert_allclose(a, b, atol=5 * tol, rtol=5 * tol)
+    # the server state rides the carry: momentum buffers must have moved
+    inner = jax.tree_util.tree_leaves(pod.server_state.inner)
+    assert inner and any(np.abs(np.asarray(l)).max() > 0 for l in inner)
+
+
+def test_pod_server_state_shards_like_params(lm_setup):
+    """The OptState moments mirror the param tree, so the param
+    path-pattern rules shard them identically (scalar step replicated)."""
+    from repro.fl.pod import PodAggregateStrategy
+    from repro.optim.optimizers import adamw
+    from repro.sharding import rules
+    from types import SimpleNamespace
+
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           devices=np.empty((4, 4)))
+    p_specs = {"blk": {"wq": {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
+                       "norm": {"scale": jax.ShapeDtypeStruct((8,),
+                                                              jnp.float32)}}}
+    state = jax.eval_shape(adamw(0.1).init, p_specs)
+    specs = rules.param_pspecs(state, mesh)
+    assert specs.step == P()
+    assert specs.inner.mu["blk"]["wq"]["w"] == P("data", "model")
+    assert specs.inner.nu["blk"]["wq"]["w"] == P("data", "model")
+    assert specs.inner.mu["blk"]["norm"]["scale"] == P(None)
+
+    # and the strategy-level hook wires those rules to a real mesh
+    strat = PodAggregateStrategy(
+        spec=LocalSpec(n_steps=1, batch_size=2, lr=0.01),
+        mesh=make_host_mesh(), clients_per_round=2, server_opt="adam")
+    sh = strat.server_state_shardings(p_specs)
+    assert jax.tree_util.tree_leaves(sh)          # non-empty placement tree

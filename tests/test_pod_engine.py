@@ -12,9 +12,11 @@ Covers the PR-2 contract:
     dispatch per chunk on the mesh);
   - scaffold/moon on the pod backend through the ShardedClientStateStore;
   - the _local_sgd ↔ fl.local clip-then-decay order parity;
-  - run_pod_training driving both phases through run_phase_schedule;
+  - run_pod_training driving both phases through run_phase_schedule,
+    with the in-program eval stream (default accuracy + custom metric);
   - (slow) a 16-fake-device subprocess run asserting the client-state
-    stack actually shards over the mesh ``data`` axis.
+    stack AND the server-optimizer moments actually shard over the
+    mesh, with in-program eval keeping one dispatch per chunk.
 """
 import dataclasses
 import os
@@ -259,14 +261,15 @@ def test_local_sgd_clip_decay_order_matches_fl_local(setup):
 # ---------------------------------------------------------------------------
 
 def test_run_pod_training_eval_rows_and_phases(setup):
+    """A custom traceable metric streams through the in-program eval:
+    every round carries an ``eval`` row even with chunked dispatch
+    (eval_fn no longer forces eval_every=1 → per-round dispatch)."""
     from repro.launch.train import run_pod_training
 
     cfg, task, data = setup
-    calls = []
 
-    def eval_fn(params):
-        calls.append(1)
-        return float(len(calls))
+    def eval_fn(params, bx, by):            # per-sample contract: (B,)
+        return jnp.full((bx.shape[0],), 7.0, jnp.float32)
 
     res = run_pod_training(cfg, data, cyclic_rounds=1, fl_rounds=2,
                            clients_per_round=2,
@@ -276,7 +279,22 @@ def test_run_pod_training_eval_rows_and_phases(setup):
     assert [h["phase"] for h in res.history] == ["P1", "P2", "P2"]
     assert [h["round"] for h in res.history] == [0, 1, 2]
     assert all("eval" in h for h in res.history)
-    assert len(calls) == 3
+    assert all(abs(h["eval"] - 7.0) < 1e-6 for h in res.history)
+
+
+def test_run_pod_training_default_eval_cadence(setup):
+    """eval_every without a custom metric scores test accuracy on the
+    cadence (plus the final round), computed inside the chunk."""
+    from repro.launch.train import run_pod_training
+
+    cfg, task, data = setup
+    res = run_pod_training(cfg, data, cyclic_rounds=0, fl_rounds=3,
+                           clients_per_round=2,
+                           spec=PodFLSpec(local_steps=2, batch_size=4,
+                                          lr=0.05),
+                           seed=SEED, eval_every=2, chunk_size=3)
+    assert [("eval" in h) for h in res.history] == [False, True, True]
+    assert all(0.0 <= h["eval"] <= 1.0 for h in res.history if "eval" in h)
 
 
 def test_run_pod_training_zero_rounds_returns_init(setup):
@@ -290,6 +308,25 @@ def test_run_pod_training_zero_rounds_returns_init(setup):
     want = init_lm(jax.random.PRNGKey(SEED), cfg)
     for a, b in zip(_leaves32(res.params), _leaves32(want)):
         np.testing.assert_array_equal(a, b)
+
+
+def test_pod_phase_params_survive_next_phase_donation(setup):
+    """device_put is a no-op on an already-matching placement, so phase
+    2's place_params must COPY phase 1's result before the donated
+    carries delete it — earlier phases' params stay readable."""
+    from repro.core.pipeline import Phase, run_phase_schedule
+
+    cfg, task, data = setup
+    mesh = make_host_mesh()
+    spec = PodFLSpec(local_steps=2, batch_size=4, lr=0.05)
+    kw = dict(mesh=mesh, rounds=1, clients_per_round=2, spec=spec,
+              seed=SEED, chunk_size=1)
+    sched = run_phase_schedule(task, data, [
+        Phase("P1", PodCyclicConfig(**kw)),
+        Phase("P2", PodFLConfig(**kw)),
+    ])
+    for leaf in jax.tree_util.tree_leaves(sched.phases[0].result.params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
 
 
 def test_pod_phase_schedule_alternation(setup):
@@ -339,14 +376,22 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
                                   vocab=cfg.vocab_size, beta=0.5, seed=0)
     strat = PodAggregateStrategy(
         spec=LocalSpec(n_steps=2, batch_size=8, lr=0.05, variant="scaffold"),
-        algorithm="scaffold", mesh=mesh, clients_per_round=2)
+        algorithm="scaffold", mesh=mesh, clients_per_round=2,
+        server_opt="momentum", server_lr=0.5)
     res = run_rounds(task, data, strat,
-                     RoundSchedule(rounds=2, eval_every=0, seed=0,
-                                   chunk_size=2))
+                     RoundSchedule(rounds=2, eval_every=2, eval_batch=8,
+                                   seed=0, chunk_size=2))
     assert np.isfinite(res.history[-1]["local_loss"])
+    assert 0.0 <= res.history[-1]["acc"] <= 1.0   # in-program eval on mesh
+    assert res.dispatches == 1                    # eval did not split chunks
     leaf = jax.tree_util.tree_leaves(res.algo_state["c_clients"])[0]
     spec = leaf.sharding.spec
     assert spec and spec[0] == "data", ("c_clients not data-sharded", spec)
+    # server-optimizer moments shard like the params they mirror
+    mom = jax.tree_util.tree_leaves(res.server_state.inner)
+    assert mom and any(
+        any(ax is not None for ax in m.sharding.spec) for m in mom
+        if m.ndim >= 2), "server momentum not sharded"
     print("POD_SUBPROCESS_OK")
 """)
 

@@ -1,0 +1,120 @@
+"""Docs reference checker — keeps README/docs pointers from rotting.
+
+Scans markdown files for backticked code references and verifies them
+against the source tree:
+
+  `src/repro/fl/engine.py`            file must exist
+  `src/repro/fl/engine.py:run_rounds` file must exist AND define the
+                                      symbol (def / class / assignment /
+                                      dataclass field / Make target)
+
+Only backticked spans that look like repo paths (contain a ``/`` or name
+a known root file, with a recognised extension) are checked, so prose
+code snippets (`lax.scan`, `eval_every=4`) are ignored.
+
+    python tools/check_docs.py              # README.md + docs/*.md
+    python tools/check_docs.py FILE [...]   # explicit files
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# backticked `path` or `path:symbol` spans
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_REF = re.compile(
+    r"^(?P<path>[\w./-]+\.(?:py|md|ini|txt|json|toml|cfg|sh))"
+    r"(?::(?P<symbol>[A-Za-z_]\w*))?$")
+_ROOT_FILES = ("Makefile", "pytest.ini", "requirements-dev.txt")
+
+
+def extract_refs(text: str):
+    """Yield (path, symbol-or-None) for every checkable backtick span."""
+    for span in _BACKTICK.findall(text):
+        if span in _ROOT_FILES:
+            yield span, None
+            continue
+        m = _REF.match(span)
+        if m and "/" in m.group("path"):
+            yield m.group("path"), m.group("symbol")
+
+
+def _py_definitions(tree: ast.Module) -> set:
+    """Names actually DEFINED at module level or directly in a class
+    body (functions, classes, assignments, annotated fields, methods) —
+    not locals or keyword arguments, which a regex would false-match."""
+    names: set = set()
+
+    def collect(body, top: bool):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                names.add(node.name)
+                if isinstance(node, ast.ClassDef) and top:
+                    collect(node.body, False)
+            elif isinstance(node, ast.Assign):
+                names.update(t.id for t in node.targets
+                             if isinstance(t, ast.Name))
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                names.add(node.target.id)
+
+    collect(tree.body, True)
+    return names
+
+
+def symbol_defined(target: Path, symbol: str) -> bool:
+    text = target.read_text()
+    if target.suffix == ".py":
+        try:
+            return symbol in _py_definitions(ast.parse(text))
+        except SyntaxError:
+            pass
+    # non-Python targets: a line-leading `symbol =` / `symbol:`
+    # (Makefile targets, config keys)
+    return bool(re.search(rf"^\s*{re.escape(symbol)}\s*[:=]", text, re.M))
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    name = str(md.relative_to(ROOT) if md.is_relative_to(ROOT) else md)
+    for path, symbol in extract_refs(md.read_text()):
+        target = ROOT / path
+        if not target.is_file():
+            errors.append(f"{name}: `{path}` does not exist")
+            continue
+        if symbol is not None and not symbol_defined(target, symbol):
+            errors.append(f"{name}: `{path}:{symbol}` — "
+                          f"symbol not found in {path}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.is_file()]
+    if missing:
+        for f in missing:
+            print(f"[docs-check] missing doc file: {f}", file=sys.stderr)
+        return 1
+    errors = []
+    n_refs = 0
+    for f in files:
+        n_refs += sum(1 for _ in extract_refs(f.read_text()))
+        errors += check_file(f)
+    for e in errors:
+        print(f"[docs-check] {e}", file=sys.stderr)
+    print(f"[docs-check] {len(files)} files, {n_refs} refs, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
