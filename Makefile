@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod
+.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -23,3 +23,6 @@ bench-engine:    ## round-engine dispatch benchmark (chunk 1/4/16)
 
 bench-pod:       ## pod-backend dispatch benchmark (chunked vs per-round)
 	$(PY) -m benchmarks.perf_pod_round
+
+bench-fused:     ## fused flat-buffer update kernels vs tree_math
+	$(PY) -m benchmarks.perf_fused_update

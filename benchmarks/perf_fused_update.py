@@ -1,0 +1,242 @@
+"""Fused flat-buffer update benchmark: FlatView + Pallas vs tree_math.
+
+The FL update hot loop — clip / decay / momentum / axpy per local SGD
+step, weighted-mean aggregation per round — is per-leaf ``tree_map``
+algebra on the tree path: O(n_leaves) tiny ops per step.  The fused path
+(``update_impl="fused"``) packs params/grads/momentum into contiguous
+FlatView buffers and runs the whole tail as one blocked Pallas pass
+(repro.kernels.fused_update; interpret mode on this CPU container, the
+same code lowers to Mosaic on TPU).  Three row families:
+
+  step-tail : S fused update steps in one jitted scan vs the identical
+              tree_math sequence — the direct apples-to-apples measure
+              of the dispatch-soup removal (gated: fused must beat tree
+              on the dispatch-bound ``mlp`` config).
+  aggregate : one FedAvg aggregation of K stacked client models
+              (fused_weighted_delta vs tm.stacked_weighted_mean).
+  e2e       : full engine runs (run_federated) with update_impl
+              tree vs fused_interpret, incl. an eval-on row — informational;
+              at this scale the forward/backward dominates.
+
+    PYTHONPATH=src python -m benchmarks.perf_fused_update
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_result, time_best_of
+from repro.data.synthetic import DATASETS
+from repro.fl.engine import fused_aggregate
+from repro.fl.local import LocalSpec, fused_step_tail, tree_step_tail
+from repro.fl.simulation import FLConfig, run_federated
+from repro.fl.task import vision_task
+from repro.utils import tree_math as tm
+from repro.utils.flatten import FlatView
+
+MODELS = ("mlp", "lenet5")              # matmul-only + conv
+
+
+def _setup(model: str, n_clients: int, n_train: int, seed: int):
+    # mlp takes the 28×28 fashion stand-in (dispatch-bound, matmul-only);
+    # lenet5's conv stack wants 32×32 inputs
+    dataset = "fashion-like" if model == "mlp" else "cifar10-like"
+    data = DATASETS.get(dataset)(n_clients=n_clients, beta=0.5, seed=seed,
+                                 n_train=n_train, n_test=128)
+    task = vision_task(model, n_classes=10, in_ch=data.x.shape[-1])
+    return task, data
+
+
+def bench_step_tail(task, *, model: str, steps: int, repeats: int,
+                    seed: int) -> List[Dict]:
+    """S update-tail steps in one jitted scan, tree vs fused — no
+    forward/backward, so the rows isolate exactly what the kernels fuse
+    (clip + decay + momentum + axpy over the whole model).
+
+    TWO fused rows keep the comparison honest:
+
+      fused      — gradients pre-packed once, the scan is pure kernel:
+                   the O(1)-kernels-vs-O(n_leaves)-ops claim itself
+                   (this is the gated row — it is what transfers to
+                   TPU, where grads can stay flat end to end);
+      fused+pack — gradients arrive TREE-form and are packed every
+                   step (``view.flatten(grads)``), the production
+                   ``local_fused`` data flow: the packing concatenate
+                   is measured explicitly instead of hidden."""
+    params = task.init(jax.random.PRNGKey(seed))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    spec = LocalSpec(n_steps=1, batch_size=1, lr=0.05, momentum=0.9,
+                     weight_decay=1e-4, grad_clip=1.0)
+    g_stack = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                    (steps,) + x.shape, x.dtype), params)
+    view = FlatView.of(params)
+    lr_scale = jnp.float32(0.9)
+
+    @jax.jit
+    def run_tree(p, gs):
+        def step(carry, g):
+            return tree_step_tail(spec, carry[0], g, carry[1], None,
+                                  lr_scale), ()
+        (p, _), _ = jax.lax.scan(step, (p, tm.zeros_like(p)), gs)
+        return p
+
+    @jax.jit
+    def run_fused(p_bufs, gbs):
+        def step(carry, gb):
+            return fused_step_tail(spec, carry[0], gb, carry[1], None,
+                                   lr_scale, interpret=True), ()
+        (p, _), _ = jax.lax.scan(step, (p_bufs, view.zeros()), gbs)
+        return p
+
+    @jax.jit
+    def run_fused_pack(p_bufs, gs):
+        def step(carry, g_tree):
+            gb = view.flatten(g_tree)          # per-step pack, as production
+            return fused_step_tail(spec, carry[0], gb, carry[1], None,
+                                   lr_scale, interpret=True), ()
+        (p, _), _ = jax.lax.scan(step, (p_bufs, view.zeros()), gs)
+        return p
+
+    g_bufs = view.flatten_stacked(g_stack)
+    p_bufs = view.flatten(params)
+    jax.block_until_ready(run_tree(params, g_stack))
+    jax.block_until_ready(run_fused(p_bufs, g_bufs))
+    jax.block_until_ready(run_fused_pack(p_bufs, g_stack))
+    rows = []
+    for impl, fn in (("tree", lambda: run_tree(params, g_stack)),
+                     ("fused", lambda: run_fused(p_bufs, g_bufs)),
+                     ("fused+pack", lambda: run_fused_pack(p_bufs, g_stack))):
+        secs = time_best_of(lambda: jax.block_until_ready(fn()), repeats)
+        rows.append({"bench": "step_tail", "model": model, "impl": impl,
+                     "n_params": n_params, "n_leaves": n_leaves,
+                     "steps": steps, "secs": round(secs, 5),
+                     "steps_per_sec": round(steps / secs, 1)})
+        print(f"  step_tail {model:8s} {impl:10s} "
+              f"{steps / secs:10.1f} steps/s "
+              f"({n_params} params / {n_leaves} leaves)", flush=True)
+    return rows
+
+
+def bench_aggregate(task, *, model: str, clients: int, repeats: int,
+                    seed: int) -> List[Dict]:
+    """One FedAvg aggregation of K stacked client models."""
+    params = task.init(jax.random.PRNGKey(seed))
+    K = clients
+    stacked = jax.tree_util.tree_map(
+        lambda x: x[None] + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (K,) + x.shape, x.dtype), params)
+    weights = jnp.linspace(1.0, 2.0, K)
+
+    run_tree = jax.jit(lambda s, w: tm.stacked_weighted_mean(s, w))
+    run_fused = jax.jit(lambda p, s, w: fused_aggregate(p, s, w,
+                                                        interpret=True))
+    jax.block_until_ready(run_tree(stacked, weights))
+    jax.block_until_ready(run_fused(params, stacked, weights))
+    rows = []
+    for impl, fn in (("tree", lambda: run_tree(stacked, weights)),
+                     ("fused", lambda: run_fused(params, stacked, weights))):
+        secs = time_best_of(lambda: jax.block_until_ready(fn()), repeats)
+        rows.append({"bench": "aggregate", "model": model, "impl": impl,
+                     "clients": K, "secs": round(secs, 6),
+                     "aggs_per_sec": round(1.0 / secs, 1)})
+        print(f"  aggregate {model:8s} {impl:5s} {1.0 / secs:10.1f} aggs/s "
+              f"(K={K})", flush=True)
+    return rows
+
+
+def bench_e2e(task, data, *, model: str, rounds: int, local_steps: int,
+              repeats: int, seed: int, eval_every: int = 0) -> List[Dict]:
+    """Full engine runs through run_federated, tree vs fused."""
+    cfg = FLConfig(algorithm="fedavg", rounds=rounds, participation=0.25,
+                   local_steps=local_steps, batch_size=8, momentum=0.9,
+                   grad_clip=1.0, eval_every=eval_every, eval_batch=128,
+                   seed=seed, chunk_size=8)
+    rows = []
+    for impl in ("tree", "fused_interpret"):
+        c = dc.replace(cfg, update_impl=impl)
+        run = lambda: run_federated(task, data, c)          # noqa: E731
+        res = run()                             # compile + warm caches
+        secs = time_best_of(run, repeats)
+        tag = ("fused" if impl != "tree" else "tree") + \
+            (f"+eval{eval_every}" if eval_every else "")
+        rows.append({"bench": "e2e", "model": model, "impl": tag,
+                     "eval_every": eval_every, "rounds": rounds,
+                     "dispatches": res.dispatches, "secs": round(secs, 4),
+                     "rounds_per_sec": round(rounds / secs, 2)})
+        print(f"  e2e       {model:8s} {tag:12s} "
+              f"{rounds / secs:8.2f} rounds/s ({res.dispatches} dispatches)",
+              flush=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=32,
+                    help="scan length for the step-tail rows")
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--eval-every", type=int, default=4,
+                    help="cadence for the eval-ON e2e row (mlp only)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", default=None, help="accepted for run.py "
+                    "compatibility; presets do not change this benchmark")
+    args = ap.parse_args(argv)
+    if args.steps < 1 or args.rounds < 1 or args.repeats < 1:
+        ap.error("--steps, --rounds and --repeats must be >= 1")
+    if args.eval_every < 1:
+        ap.error("--eval-every must be >= 1 (it tags the eval-ON row; "
+                 "the eval-OFF rows always run)")
+
+    print(f"[perf_fused_update] step-tail scan={args.steps}, "
+          f"e2e {args.rounds} rounds × {args.clients} clients", flush=True)
+    rows: List[Dict] = []
+    for model in MODELS:
+        task, data = _setup(model, args.clients, args.n_train, args.seed)
+        rows += bench_step_tail(task, model=model, steps=args.steps,
+                                repeats=args.repeats, seed=args.seed)
+        rows += bench_aggregate(task, model=model, clients=8,
+                                repeats=args.repeats, seed=args.seed)
+        rows += bench_e2e(task, data, model=model, rounds=args.rounds,
+                          local_steps=args.local_steps,
+                          repeats=args.repeats, seed=args.seed)
+    # eval-on row: the dispatch-bound config with the in-program stream
+    task, data = _setup("mlp", args.clients, args.n_train, args.seed)
+    rows += bench_e2e(task, data, model="mlp", rounds=args.rounds,
+                      local_steps=args.local_steps, repeats=args.repeats,
+                      seed=args.seed, eval_every=args.eval_every)
+    save_result("perf_fused_update", {"config": vars(args), "rows": rows})
+
+    # the acceptance gate: fused >= tree on the dispatch-bound mlp
+    # step-tail kernel row (grads pre-packed — the claim that transfers
+    # to TPU; the fused+pack row reports the interpret-mode packing
+    # cost without gating on it, see docs/BENCHMARKS.md).  Like the pod
+    # dispatch gate, tolerate the documented ~10% CPU timing noise —
+    # shared CI runners wobble; the committed numbers show the margin.
+    ok = True
+    sub = {r["impl"]: r for r in rows
+           if r["bench"] == "step_tail" and r["model"] == "mlp"}
+    fused_sps, tree_sps = sub["fused"]["steps_per_sec"], \
+        sub["tree"]["steps_per_sec"]
+    if fused_sps < tree_sps:
+        print(f"[perf_fused_update] WARNING: fused step tail below tree on "
+              f"mlp ({fused_sps} vs {tree_sps} steps/s)", file=sys.stderr)
+    if fused_sps < 0.9 * tree_sps:
+        print("[perf_fused_update] REGRESSION: fused step tail >10% slower "
+              f"than tree on mlp ({fused_sps} vs {tree_sps} steps/s)",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,7 @@ class CyclicConfig:
     seed: int = 0
     chunk_size: int = 8             # rounds per XLA dispatch (engine)
     sampling: str = "device"        # device | host (seed-compatible)
+    update_impl: str = "tree"       # tree | fused | fused_interpret
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -66,7 +67,8 @@ class CyclicConfig:
         return LocalSpec(
             n_steps=self.local_steps, batch_size=self.batch_size, lr=self.lr,
             momentum=self.momentum, weight_decay=self.weight_decay,
-            variant="plain", grad_clip=self.grad_clip)
+            variant="plain", grad_clip=self.grad_clip,
+            update_impl=self.update_impl)
 
     def strategy(self) -> RelayStrategy:
         return RelayStrategy(spec=self.local_spec(),

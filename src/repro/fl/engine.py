@@ -14,6 +14,12 @@ either, parameterized by a ``RoundStrategy``:
                       BOTH backends: the pod shards the optimizer
                       moments exactly like the params they mirror.
 
+Both the per-step client update and the per-round aggregation/server
+step run either as per-leaf tree algebra (``update_impl="tree"``, the
+parity oracle) or as fused blocked kernels over contiguous FlatView
+buffers (``update_impl="fused"``, repro.kernels.fused_update) — the
+spec-level knob threads from LocalSpec through every strategy.
+
 The engine owns everything the three seed drivers each re-implemented:
 
   * client selection — ON DEVICE by default: a
@@ -104,11 +110,19 @@ import numpy as np
 from repro.data.federated import FederatedDataset
 from repro.fl.local import LocalSpec, make_local_fn
 from repro.fl.task import Task
+from repro.kernels import ops
 from repro.utils import tree_math as tm
+from repro.utils.flatten import FlatView
 
 Pytree = Any
 
 ALGORITHMS = ("fedavg", "fedprox", "scaffold", "moon")
+
+# FedAdam (server_opt="adam") moment decays — shared by the tree
+# optimizer construction, the fused kernel call AND its bias-correction
+# scalars, so the two implementations cannot drift apart
+SERVER_ADAM_B1 = 0.9
+SERVER_ADAM_B2 = 0.99
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +141,23 @@ def tree_rows(tree: Pytree, ids: jnp.ndarray) -> Pytree:
 def tree_set_rows(tree: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
     return jax.tree_util.tree_map(lambda x, r: x.at[ids].set(r.astype(x.dtype)),
                                   tree, rows)
+
+
+def fused_aggregate(params: Pytree, w_locals: Pytree, weights: jnp.ndarray,
+                    *, interpret: bool) -> Pytree:
+    """FedAvg aggregation through the flat-buffer path: the stacked
+    ``(K, ...)`` client models pack into one ``(K, N)`` buffer per dtype
+    and ONE blocked kernel per bucket computes the weighted mean
+    (``ops.fused_weighted_delta``), replacing the per-leaf
+    ``tm.stacked_weighted_mean`` soup."""
+    view = FlatView.of(params)
+    p_bufs = view.flatten(params)
+    s_bufs = view.flatten_stacked(w_locals)
+    wbar = (weights / jnp.sum(weights)).astype(jnp.float32)
+    return view.unflatten({
+        name: ops.fused_weighted_delta(s_bufs[name], p_bufs[name], wbar,
+                                       interpret=interpret)
+        for name in p_bufs})
 
 
 # ---------------------------------------------------------------------------
@@ -256,28 +287,85 @@ class AggregateStrategy(HostBackend):
     def make_server_update(self) -> Optional[Tuple[Callable, Callable]]:
         """Server-side optimizer (Reddi et al., adaptive federated
         optimization): pseudo-gradient g = w − w_avg.  Returns
-        (init_fn, update_fn) or None for "none" (w ← w_avg exactly)."""
+        (init_fn, update_fn) or None for "none" (w ← w_avg exactly).
+
+        With ``update_impl="fused"`` the moment update runs as one
+        blocked kernel per dtype bucket (``ops.fused_server_update``)
+        over FlatView buffers; the ``OptState`` pytree structure is
+        identical either way, so the chunk carry (and the pod's
+        param-pattern sharding of it) does not change.
+        """
         if self.server_opt == "none":
             return None
-        from repro.optim.optimizers import adamw, sgd
+        from repro.optim.optimizers import OptState, adamw, sgd
         if self.server_opt == "momentum":
             opt = sgd(self.server_lr, momentum=self.server_momentum)
         elif self.server_opt == "adam":
-            opt = adamw(self.server_lr, b1=0.9, b2=0.99)
+            opt = adamw(self.server_lr, b1=SERVER_ADAM_B1, b2=SERVER_ADAM_B2)
         else:
             raise ValueError(f"unknown server_opt {self.server_opt!r}")
 
-        def update(params, avg_params, state):
-            pseudo_grad = tm.sub(params, avg_params)
-            return opt.apply(pseudo_grad, state, params)
+        if self.spec.update_impl == "tree" or (
+                self.server_opt == "momentum" and self.server_momentum == 0.0):
+            # momentum=0 keeps no moment buffers (OptState.inner is ());
+            # the tree update handles that degenerate shape directly
+            def update(params, avg_params, state):
+                pseudo_grad = tm.sub(params, avg_params)
+                return opt.apply(pseudo_grad, state, params)
 
-        return opt.init, update
+            return opt.init, update
+
+        interpret = ops.fused_interpret(self.spec.update_impl)
+        server_opt, lr, beta = self.server_opt, self.server_lr, \
+            self.server_momentum
+
+        def fused_update(params, avg_params, state):
+            view = FlatView.of(params)
+            p_b = view.flatten(params)
+            a_b = view.flatten(avg_params)
+            delta = {k: a_b[k].astype(jnp.float32) -
+                     p_b[k].astype(jnp.float32) for k in p_b}
+            step = state.step + 1
+            if server_opt == "momentum":
+                m_b = view.flatten(state.inner)
+                moments, scalars = (lambda k: (m_b[k],)), (lr,)
+            else:
+                mu_b = view.flatten(state.inner.mu)
+                nu_b = view.flatten(state.inner.nu)
+                t = step.astype(jnp.float32)
+                moments = lambda k: (mu_b[k], nu_b[k])     # noqa: E731
+                scalars = (lr, 1.0 - SERVER_ADAM_B1 ** t,
+                           1.0 - SERVER_ADAM_B2 ** t)
+            new_p, new_m = {}, []
+            for k in p_b:
+                pn, ms = ops.fused_server_update(
+                    p_b[k], delta[k], moments(k), scalars, opt=server_opt,
+                    beta=beta, b1=SERVER_ADAM_B1, b2=SERVER_ADAM_B2,
+                    interpret=interpret)
+                new_p[k] = pn
+                new_m.append(ms)
+            if server_opt == "momentum":
+                inner = view.unflatten({k: m[0] for k, m in
+                                        zip(p_b, new_m)})
+            else:
+                from repro.optim.optimizers import AdamWState
+                inner = AdamWState(
+                    mu=view.unflatten({k: m[0] for k, m in zip(p_b, new_m)}),
+                    nu=view.unflatten({k: m[1] for k, m in zip(p_b, new_m)}))
+            return view.unflatten(new_p), OptState(step=step, inner=inner)
+
+        return opt.init, fused_update
 
     def build_round(self, task: Task) -> Callable:
         spec = self.spec
         local = make_local_fn(task, spec)
         algo = self.algorithm
         store = self.state_store
+        if spec.update_impl == "tree":
+            aggregate = lambda p, wl, w: tm.stacked_weighted_mean(wl, w)  # noqa: E731
+        else:
+            aggregate = functools.partial(
+                fused_aggregate, interpret=ops.fused_interpret(spec.update_impl))
 
         def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
             K = ids.shape[0]
@@ -291,7 +379,7 @@ class AggregateStrategy(HostBackend):
                 w_locals, aux = jax.vmap(
                     local, in_axes=(0, None, in_ext, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
-                new_params = tm.stacked_weighted_mean(w_locals, weights)
+                new_params = aggregate(params, w_locals, weights)
                 return new_params, algo_state, jnp.mean(aux["loss"])
 
             if algo == "scaffold":
@@ -310,7 +398,7 @@ class AggregateStrategy(HostBackend):
                 c_i_new = jax.tree_util.tree_map(
                     lambda ci, cg, w, wl: ci - cg[None] + (w[None] - wl) / denom,
                     c_i, c, params, w_locals)
-                new_params = tm.stacked_weighted_mean(w_locals, weights)
+                new_params = aggregate(params, w_locals, weights)
                 # c ← c + (K/N)·mean_i(c_i⁺ − c_i)
                 n_clients = jax.tree_util.tree_leaves(c_all)[0].shape[0]
                 frac = K / n_clients
@@ -329,7 +417,7 @@ class AggregateStrategy(HostBackend):
                     local,
                     in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
-                new_params = tm.stacked_weighted_mean(w_locals, weights)
+                new_params = aggregate(params, w_locals, weights)
                 state = {"w_prev": store.scatter(w_prev_all, ids, w_locals)}
                 return new_params, state, jnp.mean(aux["loss"])
 

@@ -13,6 +13,19 @@ The whole local run is a ``lax.scan`` over steps so a round compiles to
 a single XLA program; batches are sampled inside the scan from the
 client's fixed-size shard (uniform with replacement — the stochastic
 approximation of the paper's epoch shuffling that keeps shapes static).
+
+The post-gradient *step tail* — global-norm clip, scaffold correction,
+decoupled weight decay, heavy-ball momentum, SGD axpy — has two
+implementations behind ``LocalSpec.update_impl``:
+
+  tree            : per-leaf ``tree_math`` algebra (the parity oracle)
+  fused[_interpret]: params/momentum ride the scan as contiguous
+                    FlatView buffers (repro.utils.flatten) and the whole
+                    tail is ONE blocked Pallas pass per step
+                    (repro.kernels.fused_update) — O(1) update kernels
+                    per step instead of O(n_leaves) leaf ops.  "fused"
+                    lowers to Mosaic on TPU and auto-interprets on CPU;
+                    "fused_interpret" forces the interpreter.
 """
 from __future__ import annotations
 
@@ -23,9 +36,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.fl.task import Task
+from repro.kernels import ops
 from repro.utils import tree_math as tm
+from repro.utils.flatten import FlatView
 
 Pytree = Any
+
+UPDATE_IMPLS = ("tree", "fused", "fused_interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +57,12 @@ class LocalSpec:
     mu: float = 0.0                 # prox / moon coefficient
     temperature: float = 0.5        # moon
     grad_clip: Optional[float] = None
+    update_impl: str = "tree"       # tree | fused | fused_interpret
+
+    def __post_init__(self):
+        if self.update_impl not in UPDATE_IMPLS:
+            raise ValueError(f"unknown update_impl {self.update_impl!r} "
+                             f"(choose from {UPDATE_IMPLS})")
 
 
 def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
@@ -55,6 +78,62 @@ def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
     sim_g = cos(z, z_glob) / temperature
     sim_p = cos(z, z_prev) / temperature
     return jnp.mean(-sim_g + jax.nn.logsumexp(jnp.stack([sim_g, sim_p]), axis=0))
+
+
+# ---------------------------------------------------------------------------
+# the step tail — tree oracle and fused flat-buffer twin
+# ---------------------------------------------------------------------------
+
+def tree_step_tail(spec: LocalSpec, params: Pytree, grads: Pytree,
+                   mom: Pytree, c_diff: Optional[Pytree], lr_scale):
+    """The per-leaf reference update (clip → correction → decay →
+    momentum → axpy).  Returns ``(params, mom)``."""
+    # clip the RAW stochastic gradient, then apply the scaffold
+    # correction and decoupled weight decay — clipping after decay
+    # would rescale the regularizer with the gradient noise
+    if spec.grad_clip:
+        grads = tm.global_clip(grads, spec.grad_clip)
+    if c_diff is not None:
+        grads = tm.add(grads, c_diff)
+    if spec.weight_decay:
+        grads = tm.add_scaled(grads, params, spec.weight_decay)
+    if spec.momentum:
+        mom = tm.add_scaled(grads, mom, spec.momentum)
+        eff = mom
+    else:
+        eff = grads
+    params = jax.tree_util.tree_map(
+        lambda p, g: (p - spec.lr * lr_scale * g).astype(p.dtype),
+        params, eff)
+    return params, mom
+
+
+def fused_step_tail(spec: LocalSpec, p_bufs: Dict, g_bufs: Dict,
+                    m_bufs: Dict, c_bufs: Optional[Dict], lr_scale, *,
+                    interpret: bool):
+    """The same tail over FlatView buffers: the global clip norm is ONE
+    reduction per dtype bucket and the rest is one fused kernel per
+    bucket — O(1) ops per step regardless of tree depth."""
+    if spec.grad_clip:
+        sq = sum(jnp.vdot(g, g) for g in g_bufs.values())
+        clip_scale = jnp.minimum(
+            1.0, spec.grad_clip / (jnp.sqrt(sq) + 1e-12)).astype(jnp.float32)
+    else:
+        clip_scale = jnp.float32(1.0)
+    step_size = spec.lr * lr_scale
+    new_p, new_m = {}, {}
+    for name, p in p_bufs.items():
+        pn, mn = ops.fused_local_step(
+            p, g_bufs[name],
+            m_bufs[name] if spec.momentum else None,
+            c_bufs[name] if c_bufs is not None else None,
+            clip_scale, step_size,
+            weight_decay=spec.weight_decay, momentum=spec.momentum,
+            interpret=interpret)
+        new_p[name] = pn
+        if spec.momentum:
+            new_m[name] = mn
+    return new_p, new_m
 
 
 def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
@@ -81,37 +160,48 @@ def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
         return base
 
     grad_fn = jax.value_and_grad(loss_for_variant)
+    fused = spec.update_impl != "tree"
+    interpret = ops.fused_interpret(spec.update_impl)
 
-    def local(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
-              cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
+    def local_tree(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
+                   cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
         n_data = cx.shape[0]
         mom0 = tm.zeros_like(w_start) if spec.momentum else ()
+        c_diff = extras["c_diff"] if spec.variant == "scaffold" else None
 
         def step(carry, step_key):
             params, mom = carry
             bidx = jax.random.randint(step_key, (spec.batch_size,), 0, n_data)
             loss, grads = grad_fn(params, extras, cx[bidx], cy[bidx], step_key)
-            # clip the RAW stochastic gradient, then apply the scaffold
-            # correction and decoupled weight decay — clipping after decay
-            # would rescale the regularizer with the gradient noise
-            if spec.grad_clip:
-                grads = tm.global_clip(grads, spec.grad_clip)
-            if spec.variant == "scaffold":
-                grads = tm.add(grads, extras["c_diff"])
-            if spec.weight_decay:
-                grads = tm.add_scaled(grads, params, spec.weight_decay)
-            if spec.momentum:
-                mom = tm.add_scaled(grads, mom, spec.momentum)
-                eff = mom
-            else:
-                eff = grads
-            params = jax.tree_util.tree_map(
-                lambda p, g: (p - spec.lr * lr_scale * g).astype(p.dtype),
-                params, eff)
+            params, mom = tree_step_tail(spec, params, grads, mom, c_diff,
+                                         lr_scale)
             return (params, mom), loss
 
         keys = jax.random.split(key, spec.n_steps)
         (w_end, _), losses = jax.lax.scan(step, (w_start, mom0), keys)
         return w_end, {"loss": jnp.mean(losses)}
 
-    return local
+    def local_fused(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
+                    cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
+        n_data = cx.shape[0]
+        view = FlatView.of(w_start)
+        p0 = view.flatten(w_start)
+        m0 = view.zeros() if spec.momentum else {}
+        c_bufs = (view.flatten(extras["c_diff"])
+                  if spec.variant == "scaffold" else None)
+
+        def step(carry, step_key):
+            p_bufs, m_bufs = carry
+            params = view.unflatten(p_bufs)
+            bidx = jax.random.randint(step_key, (spec.batch_size,), 0, n_data)
+            loss, grads = grad_fn(params, extras, cx[bidx], cy[bidx], step_key)
+            p_bufs, m_bufs = fused_step_tail(
+                spec, p_bufs, view.flatten(grads), m_bufs, c_bufs, lr_scale,
+                interpret=interpret)
+            return (p_bufs, m_bufs), loss
+
+        keys = jax.random.split(key, spec.n_steps)
+        (p_end, _), losses = jax.lax.scan(step, (p0, m0), keys)
+        return view.unflatten(p_end), {"loss": jnp.mean(losses)}
+
+    return local_fused if fused else local_tree

@@ -29,6 +29,16 @@ delta accumulation IS the FedAvg all-reduce on the mesh.  The math is
 identical to the host vmap+weighted-mean path, which is what the
 host↔pod parity tests pin down.
 
+The delta accumulation (and the whole client step tail) has two
+implementations behind ``PodFLSpec.update_impl``: the per-leaf
+``tree_map`` algebra ("tree", the parity oracle, and the default — it
+preserves per-leaf FSDP×TP shardings) and the fused FlatView + Pallas
+path ("fused"/"fused_interpret": one contiguous f32 buffer per dtype,
+one blocked kernel per client — see repro.kernels.fused_update).  The
+fused path flattens the model, so it trades the per-leaf mesh layout
+for O(1) update kernels — the single-device / interpret fast path, not
+the multi-device default.
+
 Server-side optimizers (``server_opt="momentum"|"adam"`` — FedAvgM /
 FedAdam) run at pod scale too: the optimizer moments mirror the param
 tree, so ``rules.param_shardings`` applied to the ``OptState`` pytree
@@ -69,8 +79,10 @@ from repro.fl.engine import (
 from repro.fl.local import LocalSpec, make_local_fn
 from repro.fl.simulation import HOST_RNG_OFFSET_P2
 from repro.fl.task import Task
+from repro.kernels import ops
 from repro.sharding import rules
 from repro.utils import tree_math as tm
+from repro.utils.flatten import FlatView
 
 Pytree = Any
 
@@ -98,13 +110,20 @@ class PodFLSpec:
     server_opt: str = "none"        # none | momentum | adam
     server_lr: float = 1.0
     server_momentum: float = 0.9
+    # step-tail implementation: "tree" leaf-wise algebra (parity oracle)
+    # or the fused FlatView/Pallas path.  NOTE: the fused path packs the
+    # model into per-dtype 1-D buffers, which gives up the FSDP×TP
+    # layout of individual leaves — on a real multi-device mesh keep
+    # "tree"; "fused" is the single-device / interpret fast path.
+    update_impl: str = "tree"       # tree | fused | fused_interpret
 
     def local_spec(self, variant: Optional[str] = None) -> LocalSpec:
         return LocalSpec(
             n_steps=self.local_steps, batch_size=self.batch_size, lr=self.lr,
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant=variant or _VARIANTS[self.algorithm], mu=self.mu,
-            temperature=self.temperature, grad_clip=self.grad_clip)
+            temperature=self.temperature, grad_clip=self.grad_clip,
+            update_impl=self.update_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -315,14 +334,11 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         algo = self.algorithm
         store = self.state_store
         p_sh = self._param_shardings(task)
+        fused = spec.update_impl != "tree"
+        interpret = ops.fused_interpret(spec.update_impl)
 
         def pin(t):
             return jax.lax.with_sharding_constraint(t, p_sh)
-
-        def apply_delta(params, delta):
-            return jax.tree_util.tree_map(
-                lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
-                params, delta)
 
         def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
             params = pin(params)
@@ -332,15 +348,42 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             cy = y_all[ids]
             w32 = weights.astype(jnp.float32)
             wsum = jnp.sum(w32)
-            delta0 = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
-            def add_delta(delta, w_end, w_i):
-                # the running weighted delta sum IS the FedAvg all-reduce
-                return jax.tree_util.tree_map(
-                    lambda d, we, p: d + (w_i / wsum) * (
-                        we.astype(jnp.float32) - p.astype(jnp.float32)),
-                    delta, w_end, params)
+            if fused:
+                # flat path: the f32 delta accumulator is one contiguous
+                # buffer per dtype bucket; each client's contribution and
+                # the final apply are ONE blocked kernel per bucket
+                view = FlatView.of(params)
+                p_bufs = view.flatten(params)
+                delta0 = view.zeros(jnp.float32)
+
+                def add_delta(delta, w_end, w_i):
+                    wb = view.flatten(w_end)
+                    return {k: ops.fused_delta_accum(
+                        delta[k], wb[k], p_bufs[k], w_i / wsum,
+                        interpret=interpret) for k in delta}
+
+                def apply_delta(params_, delta):
+                    base = view.flatten(params_)   # == p_bufs today (CSE'd)
+                    return view.unflatten({
+                        k: ops.fused_server_update(
+                            base[k], delta[k], (), (1.0,), opt="none",
+                            interpret=interpret)[0] for k in delta})
+            else:
+                delta0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def add_delta(delta, w_end, w_i):
+                    # the running weighted delta sum IS the FedAvg all-reduce
+                    return jax.tree_util.tree_map(
+                        lambda d, we, p: d + (w_i / wsum) * (
+                            we.astype(jnp.float32) - p.astype(jnp.float32)),
+                        delta, w_end, params)
+
+                def apply_delta(params_, delta):
+                    return jax.tree_util.tree_map(
+                        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+                        params_, delta)
 
             if algo in ("fedavg", "fedprox"):
                 def one_client(delta, inp):

@@ -65,6 +65,10 @@ class FLConfig:
     seed: int = 0
     chunk_size: int = 8             # rounds per XLA dispatch (engine)
     sampling: str = "device"        # device | host (seed-compatible)
+    # step-tail/aggregation implementation: per-leaf tree algebra (the
+    # parity oracle) or the fused FlatView + Pallas path (repro.kernels
+    # .fused_update); "fused" auto-interprets off-TPU
+    update_impl: str = "tree"       # tree | fused | fused_interpret
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -76,7 +80,7 @@ class FLConfig:
             n_steps=self.local_steps, batch_size=self.batch_size, lr=self.lr,
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant=variant, mu=self.mu, temperature=self.temperature,
-            grad_clip=self.grad_clip)
+            grad_clip=self.grad_clip, update_impl=self.update_impl)
 
     def strategy(self) -> AggregateStrategy:
         return AggregateStrategy(

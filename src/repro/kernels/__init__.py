@@ -2,10 +2,13 @@
 
 flash_attention — causal GQA attention w/ online softmax + sliding window
 ssd_scan        — Mamba2 SSD chunked scan with carried VMEM state
+fused_update    — FL update hot loop over FlatView flat buffers (client
+                  step tail, weighted-delta aggregation, server moments)
 
 ``ops`` holds the jit'd wrappers; ``ref`` the pure-jnp oracles the tests
-sweep against (interpret mode — this container has no TPU).
+sweep against (interpret mode — this container has no TPU; the fused
+update kernels' oracle is the tree_math path itself).
 """
-from repro.kernels import ops, ref
+from repro.kernels import fused_update, ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_update as _fu
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -46,3 +47,72 @@ def ssd_with_state(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                    B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
                    interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused FL-update kernels (repro.kernels.fused_update over FlatView buffers)
+# ---------------------------------------------------------------------------
+#
+# The FL layers call these with ``interpret=fused_interpret(spec)`` so
+# ``update_impl="fused"`` lowers to Mosaic on TPU and transparently runs
+# the interpreter on the CPU container (where there is no Mosaic
+# backend); ``update_impl="fused_interpret"`` forces the interpreter
+# everywhere (parity tests, benchmarks).
+
+def fused_interpret(update_impl: str) -> bool:
+    """interpret= flag for an ``update_impl`` value: explicit interpret
+    mode, or a CPU/GPU backend where Mosaic cannot lower."""
+    return update_impl == "fused_interpret" or jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("weight_decay", "momentum",
+                                             "block_rows", "interpret"))
+def fused_local_step(p: jnp.ndarray, g: jnp.ndarray,
+                     m: Optional[jnp.ndarray], c: Optional[jnp.ndarray],
+                     clip_scale, step_size, *, weight_decay: float = 0.0,
+                     momentum: float = 0.0, block_rows: int = 0,
+                     interpret: bool = False):
+    """Fused client step tail over one flat buffer — clip-scaled gradient
+    + scaffold correction + decoupled weight decay + heavy-ball momentum
+    + axpy in one blocked pass.  Returns (p_new, m_new-or-None)."""
+    return _fu.local_step(p, g, m, c, clip_scale, step_size,
+                          weight_decay=weight_decay, momentum=momentum,
+                          block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
+                         weights: jnp.ndarray, *, block_rows: int = 0,
+                         interpret: bool = False) -> jnp.ndarray:
+    """FedAvg aggregation over a stacked (K, N) flat buffer:
+    ``cast(p32 + sum_k w_k * (stacked[k] - p))``."""
+    return _fu.weighted_delta(stacked, p, weights,
+                              block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_delta_accum(delta: jnp.ndarray, w_end: jnp.ndarray,
+                      p: jnp.ndarray, coeff, *, block_rows: int = 0,
+                      interpret: bool = False) -> jnp.ndarray:
+    """One client's contribution to the pod backend's running f32
+    weighted-delta sum: ``delta + coeff * (w_end32 - p32)``."""
+    return _fu.delta_accum(delta, w_end, p, coeff,
+                           block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("opt", "beta", "b1", "b2",
+                                             "eps", "block_rows",
+                                             "interpret"))
+def fused_server_update(p: jnp.ndarray, delta: jnp.ndarray, moments, scalars,
+                        *, opt: str = "none", beta: float = 0.9,
+                        b1: float = 0.9, b2: float = 0.99, eps: float = 1e-8,
+                        block_rows: int = 0, interpret: bool = False):
+    """Apply an aggregated f32 delta under a server optimizer
+    (none / FedAvgM momentum / FedAdam).  Returns (p_new, new_moments)."""
+    return _fu.server_update(p, delta, tuple(moments), tuple(scalars),
+                             opt=opt, beta=beta, b1=b1, b2=b2, eps=eps,
+                             block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
+                             interpret=interpret)

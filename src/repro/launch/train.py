@@ -312,6 +312,12 @@ def main(argv=None) -> int:
                     help="server step size; 1.0 suits momentum (FedAvgM), "
                          "adam wants ~0.01-0.1 (its update is sign-scale)")
     ap.add_argument("--server-momentum", type=float, default=0.9)
+    ap.add_argument("--update-impl", default="tree",
+                    choices=("tree", "fused", "fused_interpret"),
+                    help="step-tail/aggregation implementation: per-leaf "
+                         "tree algebra (parity oracle) or the fused "
+                         "FlatView+Pallas kernels (repro.kernels."
+                         "fused_update; auto-interprets off-TPU)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="in-program test-accuracy cadence "
                          "(0 = no evaluation; never splits a chunk)")
@@ -335,7 +341,8 @@ def main(argv=None) -> int:
     spec = PodFLSpec(local_steps=args.local_steps, batch_size=args.batch,
                      lr=args.lr, algorithm=args.algorithm,
                      server_opt=args.server_opt, server_lr=args.server_lr,
-                     server_momentum=args.server_momentum)
+                     server_momentum=args.server_momentum,
+                     update_impl=args.update_impl)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.rounds,

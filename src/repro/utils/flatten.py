@@ -1,0 +1,143 @@
+"""FlatView — pack a pytree into contiguous per-dtype 1-D buffers.
+
+The FL update hot loop (clip / correct / decay / momentum / axpy per
+local SGD step, weighted delta accumulation + server moments per round)
+is pure elementwise algebra over the parameter pytree.  Leaf-wise
+``tree_map`` turns each of those into O(n_leaves) tiny ops; packing the
+tree into one contiguous buffer per dtype turns them into O(1) blocked
+kernels (repro.kernels.fused_update) regardless of model depth.
+
+The contract:
+
+  view = FlatView.of(tree)          # shapes/dtypes only — works on tracers
+  bufs = view.flatten(tree)         # {dtype_name: (total,) 1-D buffer}
+  tree == view.unflatten(bufs)      # exact round-trip, any nesting
+
+Leaves are grouped by canonical dtype name ("float32", "bfloat16", ...)
+in first-seen traversal order; each leaf owns a static ``[offset,
+offset+size)`` slice of its dtype's buffer (``slots``), so flatten is
+reshape+concatenate and unflatten is static-slice+reshape — pure data
+movement XLA folds into neighbouring ops.  Scalar leaves occupy one
+element; empty (sub)trees contribute no slots and an empty buffer dict.
+
+``flatten_stacked`` / ``unflatten_stacked`` handle trees whose leaves
+carry a shared leading axis (the engine's vmapped ``(K, ...)`` client
+stacks): buffers come out ``(K, total)`` with the same per-leaf offsets.
+
+FlatView is a frozen, hashable value (treedef + slot tuple), so it can
+key caches and ride static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's static slice of its dtype buffer."""
+    buffer: str                 # canonical dtype name, e.g. "float32"
+    offset: int                 # element offset into the buffer
+    size: int                   # number of elements (1 for scalar leaves)
+    shape: Tuple[int, ...]      # original leaf shape
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatView:
+    """Static packing plan for one pytree structure (see module doc)."""
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+
+    @classmethod
+    def of(cls, tree: Pytree) -> "FlatView":
+        """Build a view from shapes/dtypes only — leaves may be tracers,
+        ShapeDtypeStructs or concrete arrays."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        sizes: Dict[str, int] = {}
+        slots = []
+        for leaf in leaves:
+            name = jnp.dtype(leaf.dtype).name
+            size = int(math.prod(leaf.shape))
+            off = sizes.get(name, 0)
+            slots.append(LeafSlot(buffer=name, offset=off, size=size,
+                                  shape=tuple(leaf.shape)))
+            sizes[name] = off + size
+        return cls(treedef=treedef, slots=tuple(slots))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def buffer_sizes(self) -> Dict[str, int]:
+        """Total elements per dtype buffer, in first-seen order."""
+        sizes: Dict[str, int] = {}
+        for s in self.slots:
+            sizes[s.buffer] = s.offset + s.size
+        return sizes
+
+    @property
+    def total_size(self) -> int:
+        return sum(self.buffer_sizes.values())
+
+    def _check(self, tree: Pytree) -> list:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(f"tree structure mismatch: {treedef} != "
+                             f"{self.treedef}")
+        return leaves
+
+    # -- pack / unpack ------------------------------------------------------
+
+    def flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        """Pack ``tree`` into ``{dtype_name: (total,) buffer}``."""
+        leaves = self._check(tree)
+        parts: Dict[str, list] = {}
+        for slot, leaf in zip(self.slots, leaves):
+            parts.setdefault(slot.buffer, []).append(
+                jnp.asarray(leaf).reshape(-1))
+        return {name: jnp.concatenate(chunks)
+                for name, chunks in parts.items()}
+
+    def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+        """Inverse of :meth:`flatten` (accepts buffers of any dtype —
+        leaves are cast back to the slot's recorded dtype by reshape,
+        not re-cast; pass matching dtypes for an exact round-trip)."""
+        leaves = [bufs[s.buffer][s.offset:s.offset + s.size].reshape(s.shape)
+                  for s in self.slots]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- stacked variants (leading shared axis, e.g. (K, ...) clients) ------
+
+    def flatten_stacked(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        """Pack a tree whose leaves carry one shared leading axis K into
+        ``{dtype_name: (K, total) buffers}``."""
+        leaves = self._check(tree)
+        parts: Dict[str, list] = {}
+        for slot, leaf in zip(self.slots, leaves):
+            leaf = jnp.asarray(leaf)
+            parts.setdefault(slot.buffer, []).append(
+                leaf.reshape(leaf.shape[0], -1))
+        return {name: jnp.concatenate(chunks, axis=1)
+                for name, chunks in parts.items()}
+
+    def unflatten_stacked(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+        leaves = []
+        for s in self.slots:
+            buf = bufs[s.buffer]
+            leaves.append(buf[:, s.offset:s.offset + s.size].reshape(
+                (buf.shape[0],) + s.shape))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- constructors over the same plan ------------------------------------
+
+    def zeros(self, dtype=None) -> Dict[str, jnp.ndarray]:
+        """Zero buffers with this view's sizes; ``dtype`` overrides the
+        per-buffer dtype (e.g. an f32 delta accumulator over bf16
+        params)."""
+        return {name: jnp.zeros((size,), dtype or name)
+                for name, size in self.buffer_sizes.items()}

@@ -1,0 +1,199 @@
+"""Fused flat-buffer update path vs the tree parity oracle.
+
+``update_impl="fused_interpret"`` routes the client step tail, the
+FedAvg aggregation and the server optimizers through the FlatView +
+Pallas kernels (repro.kernels.fused_update, interpret mode on this
+CPU container); ``"tree"`` is the per-leaf tree_math oracle.  These
+tests pin numerical parity at three levels:
+
+  - the step tail alone (fused_step_tail vs tree_step_tail, all term
+    combinations incl. clip / correction / decay / momentum);
+  - full host-engine runs for all four variants and both server
+    optimizers;
+  - full pod-backend runs (sequential fused delta accumulation +
+    fused server moments).
+
+Adam comparisons carry the looser tolerance documented in
+tests/test_eval_stream.py: its sign-like normalization amplifies fp
+reduction-order differences on near-zero pseudo-gradient elements.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import DATASETS, make_synthetic_tokenlm
+from repro.fl.engine import RoundSchedule, run_rounds
+from repro.fl.local import LocalSpec, fused_step_tail, tree_step_tail
+from repro.fl.simulation import HOST_RNG_OFFSET_P2, FLConfig, run_federated
+from repro.fl.task import lm_task, vision_task
+from repro.utils.flatten import FlatView
+
+SEED = 0
+
+
+def _leaves32(tree):
+    return [np.asarray(x, np.float32) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_tree_close(a, b, tol):
+    for x, y in zip(_leaves32(a), _leaves32(b)):
+        np.testing.assert_allclose(x, y, atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# step tail: fused kernel vs tree oracle
+# ---------------------------------------------------------------------------
+
+def _random_tree(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    return {"w": jax.random.normal(ks[0], (17, 33)) * scale,
+            "b": jax.random.normal(ks[1], (33,)) * scale,
+            "head": {"w": jax.random.normal(ks[2], (33, 5)) * scale}}
+
+
+@pytest.mark.parametrize("grad_clip,momentum,weight_decay,with_c", [
+    (None, 0.0, 0.0, False),            # bare axpy
+    (0.5, 0.0, 0.0, False),             # clip only
+    (None, 0.9, 0.0, False),            # momentum only
+    (None, 0.0, 1e-2, False),           # decay only
+    (0.5, 0.9, 1e-2, True),             # everything + scaffold correction
+])
+def test_step_tail_matches_tree(grad_clip, momentum, weight_decay, with_c):
+    spec = LocalSpec(n_steps=1, batch_size=1, lr=0.05, momentum=momentum,
+                     weight_decay=weight_decay, grad_clip=grad_clip,
+                     update_impl="fused_interpret")
+    params = _random_tree(jax.random.PRNGKey(0))
+    grads = _random_tree(jax.random.PRNGKey(1), scale=3.0)
+    mom = _random_tree(jax.random.PRNGKey(2)) if momentum else ()
+    c = _random_tree(jax.random.PRNGKey(3), scale=0.1) if with_c else None
+    lr_scale = jnp.float32(0.7)
+
+    want_p, want_m = tree_step_tail(spec, params, grads, mom, c, lr_scale)
+
+    view = FlatView.of(params)
+    m_bufs = view.flatten(mom) if momentum else {}
+    got_p, got_m = fused_step_tail(
+        spec, view.flatten(params), view.flatten(grads), m_bufs,
+        view.flatten(c) if c is not None else None, lr_scale,
+        interpret=True)
+    _assert_tree_close(view.unflatten(got_p), want_p, 1e-6)
+    if momentum:
+        _assert_tree_close(view.unflatten(got_m), want_m, 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# host engine: all four variants + both server optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def vision_setup():
+    data = DATASETS.get("fashion-like")(n_clients=8, beta=0.5, seed=SEED,
+                                        n_train=256, n_test=64)
+    task = vision_task("mlp", n_classes=10, in_ch=data.x.shape[-1])
+    return task, data
+
+
+def _fl(**kw):
+    kw.setdefault("rounds", 2)
+    kw.setdefault("chunk_size", 2)
+    return FLConfig(participation=0.25, local_steps=2, batch_size=8,
+                    eval_every=0, seed=SEED, **kw)
+
+
+@pytest.mark.parametrize("algorithm", ["fedavg", "fedprox", "scaffold",
+                                       "moon"])
+def test_host_variant_parity(vision_setup, algorithm):
+    task, data = vision_setup
+    cfg = _fl(algorithm=algorithm, momentum=0.9, weight_decay=1e-4,
+              grad_clip=1.0)
+    tree = run_federated(task, data, cfg)
+    fused = run_federated(task, data,
+                          dc.replace(cfg, update_impl="fused_interpret"))
+    np.testing.assert_allclose([h["local_loss"] for h in tree.history],
+                               [h["local_loss"] for h in fused.history],
+                               atol=1e-5, rtol=1e-5)
+    _assert_tree_close(tree.params, fused.params, 2e-5)
+
+
+@pytest.mark.parametrize("server_opt,server_lr,tol",
+                         [("momentum", 0.5, 2e-5), ("adam", 0.02, 1e-2)])
+def test_host_server_opt_parity(vision_setup, server_opt, server_lr, tol):
+    task, data = vision_setup
+    cfg = _fl(algorithm="fedavg", rounds=3, server_opt=server_opt,
+              server_lr=server_lr)
+    tree = run_federated(task, data, cfg)
+    fused = run_federated(task, data,
+                          dc.replace(cfg, update_impl="fused_interpret"))
+    _assert_tree_close(tree.params, fused.params, tol)
+
+
+def test_relay_parity(vision_setup):
+    from repro.core.cyclic import CyclicConfig, cyclic_pretrain
+    task, data = vision_setup
+    cfg = CyclicConfig(rounds=2, participation=0.25, local_steps=2,
+                       batch_size=8, momentum=0.9, grad_clip=1.0,
+                       eval_every=0, seed=SEED, chunk_size=2)
+    tree = cyclic_pretrain(task, data, cfg)
+    fused = cyclic_pretrain(task, data,
+                            dc.replace(cfg, update_impl="fused_interpret"))
+    np.testing.assert_allclose([h["local_loss"] for h in tree.history],
+                               [h["local_loss"] for h in fused.history],
+                               atol=1e-5, rtol=1e-5)
+    _assert_tree_close(tree.params, fused.params, 2e-5)
+
+
+def test_bad_update_impl_rejected():
+    with pytest.raises(ValueError, match="update_impl"):
+        LocalSpec(n_steps=1, batch_size=1, lr=0.1, update_impl="magic")
+
+
+# ---------------------------------------------------------------------------
+# pod backend: fused sequential delta accumulation + server moments
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    from repro.configs import get_reduced
+    cfg = get_reduced("qwen1.5-0.5b")
+    data = make_synthetic_tokenlm(n_clients=8, seq_len=16, n_seq_per_client=8,
+                                  vocab=cfg.vocab_size, beta=0.5, seed=SEED)
+    return lm_task(cfg), data
+
+
+def _pod_sched(rounds=2, chunk=2):
+    return RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0, seed=SEED,
+                         chunk_size=chunk, sampling="host",
+                         host_rng_offset=HOST_RNG_OFFSET_P2)
+
+
+@pytest.mark.parametrize("algorithm,server_opt,server_lr,tol", [
+    ("fedavg", "none", 1.0, 2e-5),
+    ("scaffold", "none", 1.0, 2e-5),
+    ("fedavg", "momentum", 0.5, 2e-5),
+    ("fedavg", "adam", 0.02, 1e-2),
+])
+def test_pod_fused_matches_tree(lm_setup, algorithm, server_opt, server_lr,
+                                tol):
+    from repro.fl.local import UPDATE_IMPLS  # noqa: F401 (doc pointer)
+    from repro.fl.pod import PodAggregateStrategy
+    from repro.launch.mesh import make_host_mesh
+
+    task, data = lm_setup
+    mesh = make_host_mesh()
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.01, momentum=0.9,
+                     variant="scaffold" if algorithm == "scaffold"
+                     else "plain")
+    mk = lambda s: PodAggregateStrategy(         # noqa: E731
+        spec=s, algorithm=algorithm, mesh=mesh, clients_per_round=2,
+        server_opt=server_opt, server_lr=server_lr)
+    tree = run_rounds(task, data, mk(spec), _pod_sched())
+    fused = run_rounds(task, data,
+                       mk(dc.replace(spec, update_impl="fused_interpret")),
+                       _pod_sched())
+    np.testing.assert_allclose([h["local_loss"] for h in tree.history],
+                               [h["local_loss"] for h in fused.history],
+                               atol=1e-5, rtol=1e-5)
+    _assert_tree_close(tree.params, fused.params, tol)
