@@ -60,6 +60,10 @@ class CyclicConfig:
     sampling: str = "device"        # device | host (seed-compatible)
     update_impl: str = "tree"       # tree | fused | fused_interpret
 
+    def __post_init__(self):
+        from repro.fl.local import validate_update_impl
+        validate_update_impl(self.update_impl)
+
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
 
@@ -86,14 +90,23 @@ def make_cyclic_round_fn(task: Task, cfg: CyclicConfig) -> Callable:
     """One P1 round: sequential relay over the K selected clients.
 
     Kept for diagnostics/tests that drive a single round directly; the
-    training loop itself lives in repro.fl.engine.
+    training loop itself lives in repro.fl.engine.  The params contract
+    is TREES regardless of ``update_impl`` — on the fused path this
+    shim packs/unpacks at the boundary (the engine proper carries flat
+    buffers end to end instead).
     """
-    body = cfg.strategy().build_round(task)
+    strategy = cfg.strategy()
+    body = strategy.build_round(task)
+    fops = strategy.flat_ops(task)
 
     @jax.jit
     def round_fn(key, params, x_all, y_all, ids, lr_scale):
+        if fops is not None:
+            params = fops.flatten(params)
         params, _, loss = body(key, params, x_all, y_all, ids,
                                None, lr_scale, {})
+        if fops is not None:
+            params = fops.unflatten(params)
         return params, {"local_loss": loss}
 
     return round_fn

@@ -16,9 +16,17 @@ either, parameterized by a ``RoundStrategy``:
 
 Both the per-step client update and the per-round aggregation/server
 step run either as per-leaf tree algebra (``update_impl="tree"``, the
-parity oracle) or as fused blocked kernels over contiguous FlatView
-buffers (``update_impl="fused"``, repro.kernels.fused_update) — the
-spec-level knob threads from LocalSpec through every strategy.
+parity oracle) or FLAT-FIRST (``update_impl="fused"``): the chunk
+carries params and server-optimizer moments as contiguous FlatParamOps
+buffers from phase start to phase end, the vmapped local outputs arrive
+as already-stacked ``(K, N)`` buffers (no re-concatenate), and every
+update stage is a blocked kernel per bucket
+(repro.kernels.fused_update).  Trees materialize in exactly three
+places: inside the loss closure (the model's forward/backward
+boundary), at the in-program eval metric, and in the final
+:class:`EngineResult` — the spec-level knob threads from LocalSpec
+through every strategy, and the strategy's :meth:`flat_ops` picks the
+buffer flavor (host FlatView; pod ShardedFlatView, see repro.fl.pod).
 
 The engine owns everything the three seed drivers each re-implemented:
 
@@ -108,11 +116,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.federated import FederatedDataset
-from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.local import (
+    FlatParamOps,
+    LocalSpec,
+    host_flat_ops,
+    make_local_fn,
+)
 from repro.fl.task import Task
 from repro.kernels import ops
 from repro.utils import tree_math as tm
-from repro.utils.flatten import FlatView
 
 Pytree = Any
 
@@ -143,21 +155,30 @@ def tree_set_rows(tree: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
                                   tree, rows)
 
 
-def fused_aggregate(params: Pytree, w_locals: Pytree, weights: jnp.ndarray,
-                    *, interpret: bool) -> Pytree:
-    """FedAvg aggregation through the flat-buffer path: the stacked
-    ``(K, ...)`` client models pack into one ``(K, N)`` buffer per dtype
-    and ONE blocked kernel per bucket computes the weighted mean
-    (``ops.fused_weighted_delta``), replacing the per-leaf
-    ``tm.stacked_weighted_mean`` soup."""
-    view = FlatView.of(params)
-    p_bufs = view.flatten(params)
-    s_bufs = view.flatten_stacked(w_locals)
+def fused_aggregate(fops: FlatParamOps, p_bufs: Dict, stacked_bufs: Dict,
+                    weights: jnp.ndarray) -> Dict:
+    """FedAvg aggregation on the flat path: the vmapped flat local
+    outputs are ALREADY the stacked ``(K, N)`` buffers (one per bucket),
+    so aggregation is one blocked kernel per bucket
+    (``ops.fused_weighted_delta``) with zero packing — the
+    ``flatten_stacked`` re-concatenate of the PR-4 flow is gone."""
     wbar = (weights / jnp.sum(weights)).astype(jnp.float32)
-    return view.unflatten({
-        name: ops.fused_weighted_delta(s_bufs[name], p_bufs[name], wbar,
-                                       interpret=interpret)
-        for name in p_bufs})
+    return fops.weighted_delta(p_bufs, stacked_bufs, wbar)
+
+
+def unpack_server_state(fops: FlatParamOps, state: Any) -> Any:
+    """Materialize a flat server OptState's moment buffers back into
+    param-shaped trees (the EngineResult boundary)."""
+    from repro.optim.optimizers import AdamWState, OptState
+    if not isinstance(state, OptState):
+        return state
+    inner = state.inner
+    if isinstance(inner, AdamWState):
+        inner = AdamWState(mu=fops.unflatten(inner.mu),
+                           nu=fops.unflatten(inner.nu))
+    elif isinstance(inner, dict) and inner:
+        inner = fops.unflatten(inner)
+    return OptState(step=state.step, inner=inner)
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +211,15 @@ DENSE_STORE = DenseClientStateStore()
 
 class HostBackend:
     """Default backend hooks: single-process jit, host-resident data."""
+
+    def flat_ops(self, task: Task):
+        """The strategy's flat-buffer representation, or None on the
+        tree path.  When set, the engine's chunk carries params and
+        server moments as this object's buffer dicts (flat-first); the
+        pod backend overrides it with mesh-sharded buffers."""
+        if self.spec.update_impl == "tree":
+            return None
+        return host_flat_ops(task, ops.fused_interpret(self.spec.update_impl))
 
     def prepare_data(self, data: FederatedDataset):
         return data.device_arrays()
@@ -228,11 +258,14 @@ class RelayStrategy(HostBackend):
     def init_state(self, task: Task, params: Pytree, n_clients: int) -> Dict:
         return {}
 
-    def make_server_update(self):
+    def make_server_update(self, task: Optional[Task] = None):
         return None
 
     def build_round(self, task: Task) -> Callable:
-        local = make_local_fn(task, self.spec)
+        # the relay body is representation-agnostic: the scan carry is
+        # whatever `local` consumes — param trees on the tree path, flat
+        # buffer dicts on the fused path
+        local = make_local_fn(task, self.spec, self.flat_ops(task))
 
         def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
             del weights  # relay has no aggregation, hence no weighting
@@ -284,88 +317,98 @@ class AggregateStrategy(HostBackend):
             return {"w_prev": self.state_store.init(params, n_clients)}
         return {}
 
-    def make_server_update(self) -> Optional[Tuple[Callable, Callable]]:
+    def make_server_update(self, task: Optional[Task] = None
+                           ) -> Optional[Tuple[Callable, Callable]]:
         """Server-side optimizer (Reddi et al., adaptive federated
         optimization): pseudo-gradient g = w − w_avg.  Returns
         (init_fn, update_fn) or None for "none" (w ← w_avg exactly).
 
-        With ``update_impl="fused"`` the moment update runs as one
-        blocked kernel per dtype bucket (``ops.fused_server_update``)
-        over FlatView buffers; the ``OptState`` pytree structure is
-        identical either way, so the chunk carry (and the pod's
-        param-pattern sharding of it) does not change.
+        On the tree path both functions speak param trees (the optax
+        style ``repro.optim.optimizers`` pair).  With
+        ``update_impl="fused"`` the WHOLE OptState is flat: init takes
+        the flat param buffers and builds moment buffers mirroring
+        them, update runs one blocked kernel per bucket
+        (``ops.fused_server_update``) — the moments materialize back
+        into trees only in :func:`unpack_server_state` at the
+        EngineResult boundary.  ``task`` is required on the fused path
+        (it keys the strategy's :meth:`flat_ops`).
         """
         if self.server_opt == "none":
             return None
-        from repro.optim.optimizers import OptState, adamw, sgd
-        if self.server_opt == "momentum":
-            opt = sgd(self.server_lr, momentum=self.server_momentum)
-        elif self.server_opt == "adam":
-            opt = adamw(self.server_lr, b1=SERVER_ADAM_B1, b2=SERVER_ADAM_B2)
-        else:
+        if self.server_opt not in ("momentum", "adam"):
             raise ValueError(f"unknown server_opt {self.server_opt!r}")
+        from repro.optim.optimizers import AdamWState, OptState, adamw, sgd
 
-        if self.spec.update_impl == "tree" or (
-                self.server_opt == "momentum" and self.server_momentum == 0.0):
-            # momentum=0 keeps no moment buffers (OptState.inner is ());
-            # the tree update handles that degenerate shape directly
+        if self.spec.update_impl == "tree":
+            if self.server_opt == "momentum":
+                opt = sgd(self.server_lr, momentum=self.server_momentum)
+            else:
+                opt = adamw(self.server_lr, b1=SERVER_ADAM_B1,
+                            b2=SERVER_ADAM_B2)
+
             def update(params, avg_params, state):
                 pseudo_grad = tm.sub(params, avg_params)
                 return opt.apply(pseudo_grad, state, params)
 
             return opt.init, update
 
-        interpret = ops.fused_interpret(self.spec.update_impl)
+        if task is None:
+            raise ValueError("the fused server update is built per task — "
+                             "pass the engine's Task")
+        fops = self.flat_ops(task)
         server_opt, lr, beta = self.server_opt, self.server_lr, \
             self.server_momentum
+        with_moments = server_opt == "adam" or beta != 0.0
 
-        def fused_update(params, avg_params, state):
-            view = FlatView.of(params)
-            p_b = view.flatten(params)
-            a_b = view.flatten(avg_params)
-            delta = {k: a_b[k].astype(jnp.float32) -
-                     p_b[k].astype(jnp.float32) for k in p_b}
+        def init(p_bufs):
+            zeros = lambda: {k: jnp.zeros_like(b)      # noqa: E731
+                             for k, b in p_bufs.items()}
+            if not with_moments:
+                inner = ()          # momentum=0 keeps no moment buffers
+            elif server_opt == "momentum":
+                inner = zeros()
+            else:
+                inner = AdamWState(mu=zeros(), nu=zeros())
+            return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+        def update(p_bufs, avg_bufs, state):
+            delta = {k: avg_bufs[k].astype(jnp.float32) -
+                     p_bufs[k].astype(jnp.float32) for k in p_bufs}
             step = state.step + 1
+            if not with_moments:
+                new_p = fops.apply_delta(
+                    p_bufs, {k: lr * d for k, d in delta.items()})
+                return new_p, OptState(step=step, inner=())
             if server_opt == "momentum":
-                m_b = view.flatten(state.inner)
-                moments, scalars = (lambda k: (m_b[k],)), (lr,)
-            else:
-                mu_b = view.flatten(state.inner.mu)
-                nu_b = view.flatten(state.inner.nu)
-                t = step.astype(jnp.float32)
-                moments = lambda k: (mu_b[k], nu_b[k])     # noqa: E731
-                scalars = (lr, 1.0 - SERVER_ADAM_B1 ** t,
-                           1.0 - SERVER_ADAM_B2 ** t)
-            new_p, new_m = {}, []
-            for k in p_b:
-                pn, ms = ops.fused_server_update(
-                    p_b[k], delta[k], moments(k), scalars, opt=server_opt,
-                    beta=beta, b1=SERVER_ADAM_B1, b2=SERVER_ADAM_B2,
-                    interpret=interpret)
-                new_p[k] = pn
-                new_m.append(ms)
-            if server_opt == "momentum":
-                inner = view.unflatten({k: m[0] for k, m in
-                                        zip(p_b, new_m)})
-            else:
-                from repro.optim.optimizers import AdamWState
-                inner = AdamWState(
-                    mu=view.unflatten({k: m[0] for k, m in zip(p_b, new_m)}),
-                    nu=view.unflatten({k: m[1] for k, m in zip(p_b, new_m)}))
-            return view.unflatten(new_p), OptState(step=step, inner=inner)
+                new_p, (m,) = fops.server_update(
+                    p_bufs, delta, (state.inner,), (lr,), opt="momentum",
+                    beta=beta)
+                return new_p, OptState(step=step, inner=m)
+            t = step.astype(jnp.float32)
+            scalars = (lr, 1.0 - SERVER_ADAM_B1 ** t,
+                       1.0 - SERVER_ADAM_B2 ** t)
+            new_p, (mu, nu) = fops.server_update(
+                p_bufs, delta, (state.inner.mu, state.inner.nu), scalars,
+                opt="adam", b1=SERVER_ADAM_B1, b2=SERVER_ADAM_B2)
+            return new_p, OptState(step=step, inner=AdamWState(mu=mu, nu=nu))
 
-        return opt.init, fused_update
+        return init, update
 
     def build_round(self, task: Task) -> Callable:
         spec = self.spec
-        local = make_local_fn(task, spec)
+        fops = self.flat_ops(task)
+        local = make_local_fn(task, spec, fops)
         algo = self.algorithm
         store = self.state_store
-        if spec.update_impl == "tree":
+        if fops is None:
             aggregate = lambda p, wl, w: tm.stacked_weighted_mean(wl, w)  # noqa: E731
+            unpack = stacked_unpack = lambda t: t                         # noqa: E731
         else:
-            aggregate = functools.partial(
-                fused_aggregate, interpret=ops.fused_interpret(spec.update_impl))
+            # the vmapped flat local outputs ARE the stacked (K, N)
+            # buffers — aggregation consumes them with zero packing
+            aggregate = functools.partial(fused_aggregate, fops)
+            unpack = fops.unflatten
+            stacked_unpack = fops.stacked_unflatten
 
         def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
             K = ids.shape[0]
@@ -374,7 +417,10 @@ class AggregateStrategy(HostBackend):
             cy = y_all[ids]
 
             if algo in ("fedavg", "fedprox"):
-                extras = {"w_global": params} if algo == "fedprox" else {}
+                # extras are TREES (they feed the loss at the forward
+                # boundary) — materialized from the flat carry if needed
+                extras = {"w_global": unpack(params)} \
+                    if algo == "fedprox" else {}
                 in_ext = jax.tree_util.tree_map(lambda _: None, extras)
                 w_locals, aux = jax.vmap(
                     local, in_axes=(0, None, in_ext, 0, 0, None))(
@@ -392,12 +438,16 @@ class AggregateStrategy(HostBackend):
                 w_locals, aux = jax.vmap(
                     local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
+                # the control-variate algebra stays tree-form (the state
+                # store holds trees); only the aggregation is flat
+                w_trees = stacked_unpack(w_locals)
+                p_tree = unpack(params)
                 # control-variate update (option II):
                 # c_i⁺ = c_i − c + (w−w_i)/(S·lr)
                 denom = spec.n_steps * spec.lr * lr_scale
                 c_i_new = jax.tree_util.tree_map(
                     lambda ci, cg, w, wl: ci - cg[None] + (w[None] - wl) / denom,
-                    c_i, c, params, w_locals)
+                    c_i, c, p_tree, w_trees)
                 new_params = aggregate(params, w_locals, weights)
                 # c ← c + (K/N)·mean_i(c_i⁺ − c_i)
                 n_clients = jax.tree_util.tree_leaves(c_all)[0].shape[0]
@@ -412,13 +462,14 @@ class AggregateStrategy(HostBackend):
             if algo == "moon":
                 w_prev_all = algo_state["w_prev"]
                 w_prev = store.gather(w_prev_all, ids)
-                extras = {"w_global": params, "w_prev": w_prev}
+                extras = {"w_global": unpack(params), "w_prev": w_prev}
                 w_locals, aux = jax.vmap(
                     local,
                     in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
                 new_params = aggregate(params, w_locals, weights)
-                state = {"w_prev": store.scatter(w_prev_all, ids, w_locals)}
+                state = {"w_prev": store.scatter(w_prev_all, ids,
+                                                 stacked_unpack(w_locals))}
                 return new_params, state, jnp.mean(aux["loss"])
 
             raise ValueError(f"unknown algorithm {algo!r}")
@@ -583,13 +634,19 @@ def make_chunk_fn(task: Task, strategy, schedule: RoundSchedule,
 def _cached_chunk_fn(task: Task, strategy, sampling: str,
                      n_clients: int, metric: Optional[Callable]) -> Callable:
     body = strategy.build_round(task)
-    server = strategy.make_server_update()
+    server = strategy.make_server_update(task)
+    fops = strategy.flat_ops(task)
     on_device = sampling == "device"
     K = strategy.n_selected(n_clients)
 
     def chunk(key, params, algo_state, server_state, x_all, y_all, n_real,
               ids, lr_scales, eval_mask, ev_x, ev_y, ev_w):
         def evaluate(params):
+            # the eval metric speaks param trees — the flat carry
+            # materializes one here, at the model's forward boundary
+            if fops is not None:
+                params = fops.unflatten(params)
+
             # weighted mean over the batched test stream; ev_w zeroes
             # the wrap-around pad in the tail batch
             def eval_batch(tot, inp):
@@ -654,14 +711,27 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     """
     key = jax.random.PRNGKey(schedule.seed)
     params = init_params if init_params is not None else task.init(key)
-    # backend hook: copy (host) or device_put with shardings (pod) so the
-    # donated carries never invalidate the caller's init_params buffers
-    params = strategy.place_params(params)
+    # flat-first: on the fused path the engine's working params are the
+    # strategy's flat buffers from here to the EngineResult — the server
+    # OptState inits flat too, and trees reappear only at the eval /
+    # forward boundaries inside the chunk.  Packing replaces the
+    # place_params hook outright: fops.place commits the packed buffers
+    # to the flat shardings AND de-aliases any flatten passthrough (a
+    # single-1-D-leaf bucket packs to the caller's own array), so the
+    # donated carries never eat the caller's tree and the per-leaf
+    # placement would be dead work.
+    fops = strategy.flat_ops(task)
+    if fops is None:
+        # backend hook: copy (host) or device_put with shardings (pod) so
+        # the donated carries never invalidate the caller's init_params
+        params = strategy.place_params(params)
 
     n_clients = data.n_clients
     K = strategy.n_selected(n_clients)
     algo_state = strategy.init_state(task, params, n_clients)
-    server = strategy.make_server_update()
+    if fops is not None:
+        params = fops.place(fops.flatten(params))
+    server = strategy.make_server_update(task)
     server_state = server[0](params) if server is not None else ()
     server_state = strategy.place_server_state(server_state, task)
 
@@ -730,6 +800,9 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
                 rnd - 1, history):
             break
 
+    if fops is not None:                # EngineResult speaks trees
+        params = fops.unflatten(params)
+        server_state = unpack_server_state(fops, server_state)
     return EngineResult(params=params, history=history,
                         algo_state=algo_state, server_state=server_state,
                         dispatches=dispatches)

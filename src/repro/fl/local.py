@@ -18,19 +18,31 @@ The post-gradient *step tail* — global-norm clip, scaffold correction,
 decoupled weight decay, heavy-ball momentum, SGD axpy — has two
 implementations behind ``LocalSpec.update_impl``:
 
-  tree            : per-leaf ``tree_math`` algebra (the parity oracle)
-  fused[_interpret]: params/momentum ride the scan as contiguous
-                    FlatView buffers (repro.utils.flatten) and the whole
-                    tail is ONE blocked Pallas pass per step
-                    (repro.kernels.fused_update) — O(1) update kernels
-                    per step instead of O(n_leaves) leaf ops.  "fused"
-                    lowers to Mosaic on TPU and auto-interprets on CPU;
+  tree            : per-leaf ``tree_math`` algebra (the parity oracle);
+                    the local fn takes and returns parameter TREES.
+  fused[_interpret]: FLAT-FIRST — the local fn takes and returns
+                    FlatView buffers; params/momentum ride the scan as
+                    contiguous buffers, ``value_and_grad`` differentiates
+                    w.r.t. the buffers themselves (the tree materializes
+                    only inside the loss closure, at the model's
+                    forward/backward boundary), so the backward emits
+                    PACKED gradients — there is no per-step pack copy —
+                    and the whole tail is ONE blocked Pallas pass per
+                    step (repro.kernels.fused_update).  "fused" lowers
+                    to Mosaic on TPU and auto-interprets on CPU;
                     "fused_interpret" forces the interpreter.
+
+The buffer flavor is a backend decision carried by a
+:class:`FlatParamOps` (host: 1-D per-dtype FlatView buffers, kernels
+called directly; pod: ``repro.fl.pod.ShardedFlatOps`` — per-mesh-axis
+group ``(n_shards, per_shard)`` buffers, kernels run shard-locally
+under ``shard_map``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +55,16 @@ from repro.utils.flatten import FlatView
 Pytree = Any
 
 UPDATE_IMPLS = ("tree", "fused", "fused_interpret")
+
+
+def validate_update_impl(update_impl: str) -> str:
+    """Reject an unknown ``update_impl`` with the allowed values spelled
+    out — shared by every spec/config so a typo fails at construction
+    time, not deep inside the engine."""
+    if update_impl not in UPDATE_IMPLS:
+        raise ValueError(f"unknown update_impl {update_impl!r} "
+                         f"(choose from {UPDATE_IMPLS})")
+    return update_impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,9 +82,7 @@ class LocalSpec:
     update_impl: str = "tree"       # tree | fused | fused_interpret
 
     def __post_init__(self):
-        if self.update_impl not in UPDATE_IMPLS:
-            raise ValueError(f"unknown update_impl {self.update_impl!r} "
-                             f"(choose from {UPDATE_IMPLS})")
+        validate_update_impl(self.update_impl)
 
 
 def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
@@ -78,6 +98,168 @@ def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
     sim_g = cos(z, z_glob) / temperature
     sim_p = cos(z, z_prev) / temperature
     return jnp.mean(-sim_g + jax.nn.logsumexp(jnp.stack([sim_g, sim_p]), axis=0))
+
+
+# ---------------------------------------------------------------------------
+# FlatParamOps — the canonical flat-buffer representation of one task
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatParamOps:
+    """Bundle a packing plan with how to run the fused kernels on its
+    buffers.  This is the *representation object* of the flat-first
+    path: the engine carries params / momentum / server moments as the
+    buffer dicts this produces, and every update stage goes through the
+    dict-level methods below (one blocked kernel per bucket).
+
+    The host flavor wraps a 1-D :class:`repro.utils.flatten.FlatView`
+    and calls the kernels directly; the pod flavor
+    (``repro.fl.pod.ShardedFlatOps``) swaps the view for a
+    ShardedFlatView and overrides :meth:`_run` to execute each kernel
+    shard-locally under ``shard_map`` — same math, mesh-resident
+    buffers.
+    """
+    view: Any                       # FlatView | ShardedFlatView
+    interpret: bool
+
+    # -- representation -----------------------------------------------------
+
+    def flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        return self.view.flatten(tree)
+
+    def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+        return self.view.unflatten(bufs)
+
+    def zeros(self, dtype=None) -> Dict[str, jnp.ndarray]:
+        return self.view.zeros(dtype)
+
+    def place(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Commit freshly packed buffers to their home placement AND
+        guarantee they do not alias the caller's arrays — flatten is a
+        NO-OP for a bucket holding exactly one 1-D leaf (concatenate of
+        one array returns the operand), and the engine donates its
+        carries, which would delete the caller's leaf.  Host: copy
+        (same cost as the tree path's place_params); pod: device_put
+        with the per-bucket shardings, copying any passthrough."""
+        return jax.tree_util.tree_map(jnp.array, bufs)
+
+    def shardings(self):
+        """Per-bucket placement for jit in/out shardings (host: None)."""
+        return None
+
+    def stacked_flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        return self.view.flatten_stacked(tree)
+
+    def stacked_unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+        return self.view.unflatten_stacked(bufs)
+
+    # -- kernel execution ---------------------------------------------------
+
+    def _run(self, name: str, fn: Callable, bufs, scalars) -> Tuple:
+        """Run ``fn(*1-D buffers, *traced scalars) -> tuple of 1-D
+        buffers`` for bucket ``name``.  Subclasses reroute this through
+        shard_map; ``n_out`` only matters there."""
+        del name
+        return fn(*bufs, *scalars)
+
+    def grad_sqsum(self, g_bufs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Σ‖g‖² over every bucket — the global clip norm is one
+        reduction per bucket (sharded buffers reduce over the mesh)."""
+        return sum(jnp.vdot(g, g) for g in g_bufs.values())
+
+    def local_step(self, p_bufs, g_bufs, m_bufs, c_bufs, clip_scale,
+                   step_size, *, weight_decay: float, momentum: float):
+        """The fused client step tail over every bucket.  Returns
+        ``(p_bufs, m_bufs)`` (``m_bufs`` empty when momentum is off)."""
+        has_m, has_c = bool(momentum), c_bufs is not None
+        interpret = self.interpret
+
+        def fn(*a):
+            it = iter(a)
+            p1, g1 = next(it), next(it)
+            m1 = next(it) if has_m else None
+            c1 = next(it) if has_c else None
+            cs, ss = next(it), next(it)
+            pn, mn = ops.fused_local_step(
+                p1, g1, m1, c1, cs, ss, weight_decay=weight_decay,
+                momentum=momentum, interpret=interpret)
+            return (pn, mn) if has_m else (pn,)
+
+        new_p, new_m = {}, {}
+        for name, p in p_bufs.items():
+            bufs = [p, g_bufs[name]]
+            if has_m:
+                bufs.append(m_bufs[name])
+            if has_c:
+                bufs.append(c_bufs[name])
+            outs = self._run(name, fn, bufs, (clip_scale, step_size))
+            new_p[name] = outs[0]
+            if has_m:
+                new_m[name] = outs[1]
+        return new_p, new_m
+
+    def weighted_delta(self, p_bufs, stacked_bufs, wbar):
+        """Host FedAvg aggregation: the vmapped local outputs arrive as
+        already-stacked ``(K, N)`` buffers — no re-concatenate."""
+        return {name: ops.fused_weighted_delta(
+            stacked_bufs[name], p, wbar, interpret=self.interpret)
+            for name, p in p_bufs.items()}
+
+    def delta_accum(self, delta_bufs, w_bufs, p_bufs, coeff):
+        """One client's contribution to the pod's running f32 delta."""
+        interpret = self.interpret
+
+        def fn(d1, w1, p1, c1):
+            return (ops.fused_delta_accum(d1, w1, p1, c1,
+                                          interpret=interpret),)
+
+        return {name: self._run(name, fn,
+                                [d, w_bufs[name], p_bufs[name]], (coeff,))[0]
+                for name, d in delta_bufs.items()}
+
+    def apply_delta(self, p_bufs, delta_bufs):
+        """p ← cast(p₃₂ + delta) per bucket (server_opt="none")."""
+        new_p, _ = self.server_update(p_bufs, delta_bufs, (), (1.0,),
+                                      opt="none")
+        return new_p
+
+    def server_update(self, p_bufs, delta_bufs, moments, scalars, *,
+                      opt: str, beta: float = 0.9, b1: float = 0.9,
+                      b2: float = 0.99):
+        """Server optimizer over every bucket.  ``moments`` is a tuple
+        of buffer dicts mirroring ``p_bufs`` (() for "none", (m,) for
+        momentum, (mu, nu) for adam); ``scalars`` the traced scalars the
+        kernel expects.  Returns ``(p_bufs, new_moments)``."""
+        interpret = self.interpret
+        n_m = len(moments)
+
+        def fn(*a):
+            it = iter(a)
+            p1, d1 = next(it), next(it)
+            ms = tuple(next(it) for _ in range(n_m))
+            sc = tuple(it)
+            pn, new = ops.fused_server_update(
+                p1, d1, ms, sc, opt=opt, beta=beta, b1=b1, b2=b2,
+                interpret=interpret)
+            return (pn,) + tuple(new)
+
+        new_p = {}
+        new_ms: Tuple[Dict, ...] = tuple({} for _ in range(n_m))
+        for name, p in p_bufs.items():
+            bufs = [p, delta_bufs[name]] + [m[name] for m in moments]
+            outs = self._run(name, fn, bufs, tuple(scalars))
+            new_p[name] = outs[0]
+            for i in range(n_m):
+                new_ms[i][name] = outs[1 + i]
+        return new_p, new_ms
+
+
+@functools.lru_cache(maxsize=64)
+def host_flat_ops(task: Task, interpret: bool) -> FlatParamOps:
+    """The host backend's FlatParamOps for one task (cached — Task is a
+    frozen dataclass)."""
+    p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    return FlatParamOps(view=FlatView.of(p_specs), interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -108,38 +290,38 @@ def tree_step_tail(spec: LocalSpec, params: Pytree, grads: Pytree,
     return params, mom
 
 
-def fused_step_tail(spec: LocalSpec, p_bufs: Dict, g_bufs: Dict,
-                    m_bufs: Dict, c_bufs: Optional[Dict], lr_scale, *,
-                    interpret: bool):
-    """The same tail over FlatView buffers: the global clip norm is ONE
-    reduction per dtype bucket and the rest is one fused kernel per
-    bucket — O(1) ops per step regardless of tree depth."""
+def fused_step_tail(spec: LocalSpec, fops: FlatParamOps, p_bufs: Dict,
+                    g_bufs: Dict, m_bufs: Dict, c_bufs: Optional[Dict],
+                    lr_scale):
+    """The same tail over flat buffers: the global clip norm is ONE
+    reduction per bucket and the rest is one fused kernel per bucket —
+    O(1) ops per step regardless of tree depth."""
     if spec.grad_clip:
-        sq = sum(jnp.vdot(g, g) for g in g_bufs.values())
+        sq = fops.grad_sqsum(g_bufs)
         clip_scale = jnp.minimum(
             1.0, spec.grad_clip / (jnp.sqrt(sq) + 1e-12)).astype(jnp.float32)
     else:
         clip_scale = jnp.float32(1.0)
     step_size = spec.lr * lr_scale
-    new_p, new_m = {}, {}
-    for name, p in p_bufs.items():
-        pn, mn = ops.fused_local_step(
-            p, g_bufs[name],
-            m_bufs[name] if spec.momentum else None,
-            c_bufs[name] if c_bufs is not None else None,
-            clip_scale, step_size,
-            weight_decay=spec.weight_decay, momentum=spec.momentum,
-            interpret=interpret)
-        new_p[name] = pn
-        if spec.momentum:
-            new_m[name] = mn
-    return new_p, new_m
+    return fops.local_step(p_bufs, g_bufs, m_bufs, c_bufs, clip_scale,
+                           step_size, weight_decay=spec.weight_decay,
+                           momentum=spec.momentum)
 
 
-def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
-    """Build ``local(key, w_start, extras, cx, cy, lr_scale) -> (w_end, aux)``.
+def make_local_fn(task: Task, spec: LocalSpec,
+                  flat_ops: Optional[FlatParamOps] = None) -> Callable:
+    """Build the per-client local-training function.
 
-    extras (algorithm context, zero-size pytrees when unused):
+    tree impl : ``local(key, w_start, extras, cx, cy, lr_scale)
+                -> (w_end, aux)`` over parameter TREES.
+    fused impl: the SAME signature over flat buffer dicts — ``w_start``
+                and ``w_end`` are FlatParamOps buffers; the tree exists
+                only inside the loss closure (forward/backward
+                boundary).  ``flat_ops`` selects the buffer flavor and
+                defaults to the host FlatView ops for this task.
+
+    extras (algorithm context, zero-size pytrees when unused; always
+    TREES — they feed the loss at the forward boundary):
       w_global : anchor for fedprox / moon
       c_diff   : (c − c_i) correction for scaffold
       w_prev   : previous local model for moon
@@ -159,12 +341,13 @@ def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
                                                       spec.temperature)
         return base
 
-    grad_fn = jax.value_and_grad(loss_for_variant)
     fused = spec.update_impl != "tree"
-    interpret = ops.fused_interpret(spec.update_impl)
+    if fused and flat_ops is None:
+        flat_ops = host_flat_ops(task, ops.fused_interpret(spec.update_impl))
 
     def local_tree(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
                    cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
+        grad_fn = jax.value_and_grad(loss_for_variant)
         n_data = cx.shape[0]
         mom0 = tm.zeros_like(w_start) if spec.momentum else ()
         c_diff = extras["c_diff"] if spec.variant == "scaffold" else None
@@ -181,27 +364,33 @@ def make_local_fn(task: Task, spec: LocalSpec) -> Callable:
         (w_end, _), losses = jax.lax.scan(step, (w_start, mom0), keys)
         return w_end, {"loss": jnp.mean(losses)}
 
-    def local_fused(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
+    def local_fused(key: jax.Array, p_start: Dict, extras: Dict[str, Pytree],
                     cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
         n_data = cx.shape[0]
-        view = FlatView.of(w_start)
-        p0 = view.flatten(w_start)
-        m0 = view.zeros() if spec.momentum else {}
-        c_bufs = (view.flatten(extras["c_diff"])
+        m0 = flat_ops.zeros() if spec.momentum else {}
+        c_bufs = (flat_ops.flatten(extras["c_diff"])
                   if spec.variant == "scaffold" else None)
+
+        # differentiate w.r.t. the FLAT buffers: the tree materializes
+        # only here, inside the loss closure, so the backward's
+        # cotangents land directly in packed buffer form — the per-step
+        # pack copy of the PR-4 flow does not exist
+        def flat_loss(p_bufs, bx, by, rng):
+            return loss_for_variant(flat_ops.unflatten(p_bufs), extras,
+                                    bx, by, rng)
+
+        grad_fn = jax.value_and_grad(flat_loss)
 
         def step(carry, step_key):
             p_bufs, m_bufs = carry
-            params = view.unflatten(p_bufs)
             bidx = jax.random.randint(step_key, (spec.batch_size,), 0, n_data)
-            loss, grads = grad_fn(params, extras, cx[bidx], cy[bidx], step_key)
-            p_bufs, m_bufs = fused_step_tail(
-                spec, p_bufs, view.flatten(grads), m_bufs, c_bufs, lr_scale,
-                interpret=interpret)
+            loss, g_bufs = grad_fn(p_bufs, cx[bidx], cy[bidx], step_key)
+            p_bufs, m_bufs = fused_step_tail(spec, flat_ops, p_bufs, g_bufs,
+                                             m_bufs, c_bufs, lr_scale)
             return (p_bufs, m_bufs), loss
 
         keys = jax.random.split(key, spec.n_steps)
-        (p_end, _), losses = jax.lax.scan(step, (p0, m0), keys)
-        return view.unflatten(p_end), {"loss": jnp.mean(losses)}
+        (p_end, _), losses = jax.lax.scan(step, (p_start, m0), keys)
+        return p_end, {"loss": jnp.mean(losses)}
 
     return local_fused if fused else local_tree

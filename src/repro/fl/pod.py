@@ -31,13 +31,21 @@ host↔pod parity tests pin down.
 
 The delta accumulation (and the whole client step tail) has two
 implementations behind ``PodFLSpec.update_impl``: the per-leaf
-``tree_map`` algebra ("tree", the parity oracle, and the default — it
-preserves per-leaf FSDP×TP shardings) and the fused FlatView + Pallas
-path ("fused"/"fused_interpret": one contiguous f32 buffer per dtype,
-one blocked kernel per client — see repro.kernels.fused_update).  The
-fused path flattens the model, so it trades the per-leaf mesh layout
-for O(1) update kernels — the single-device / interpret fast path, not
-the multi-device default.
+``tree_map`` algebra ("tree", the parity oracle) and the FLAT-FIRST
+fused path ("fused"/"fused_interpret").  Fused no longer trades away
+the mesh layout: params ride the chunk as
+:class:`repro.utils.flatten.ShardedFlatView` buffers — leaves bucketed
+per (dtype × mesh-axis group) straight from the ``param_shardings``
+rules, each bucket a ``(n_shards, per_shard)`` buffer sharded over
+exactly its group's axes — so every device holds one contiguous local
+buffer per bucket and the fused kernels
+(repro.kernels.fused_update) run SHARD-LOCALLY under ``shard_map``
+(:class:`ShardedFlatOps`).  The FSDP×TP decomposition is preserved
+bit-for-bit (same tiles, packed), the donated chunk carries are the
+sharded buffers themselves, and the local step differentiates w.r.t.
+them (trees materialize only at the model's forward/backward
+boundary), so fused updates run under real multi-device layouts — the
+pod CLI defaults to ``--update-impl fused``.
 
 Server-side optimizers (``server_opt="momentum"|"adam"`` — FedAvgM /
 FedAdam) run at pod scale too: the optimizer moments mirror the param
@@ -56,10 +64,13 @@ backends.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 # canonical seed host-RNG stream offsets (P1 drew from seed+31, P2 from
 # seed+17) — imported, not re-declared, so host↔pod sampling="host"
@@ -76,13 +87,12 @@ from repro.fl.engine import (
     tree_rows,
     tree_set_rows,
 )
-from repro.fl.local import LocalSpec, make_local_fn
+from repro.fl.local import FlatParamOps, LocalSpec, make_local_fn
 from repro.fl.simulation import HOST_RNG_OFFSET_P2
 from repro.fl.task import Task
 from repro.kernels import ops
 from repro.sharding import rules
 from repro.utils import tree_math as tm
-from repro.utils.flatten import FlatView
 
 Pytree = Any
 
@@ -110,12 +120,16 @@ class PodFLSpec:
     server_opt: str = "none"        # none | momentum | adam
     server_lr: float = 1.0
     server_momentum: float = 0.9
-    # step-tail implementation: "tree" leaf-wise algebra (parity oracle)
-    # or the fused FlatView/Pallas path.  NOTE: the fused path packs the
-    # model into per-dtype 1-D buffers, which gives up the FSDP×TP
-    # layout of individual leaves — on a real multi-device mesh keep
-    # "tree"; "fused" is the single-device / interpret fast path.
+    # step-tail implementation: "tree" leaf-wise algebra (the parity
+    # oracle) or the fused flat-first path.  On the pod the fused
+    # buffers are ShardedFlatView buckets that preserve the FSDP×TP
+    # layout (kernels run shard-locally under shard_map), so "fused" is
+    # safe — and the CLI default — on real multi-device meshes.
     update_impl: str = "tree"       # tree | fused | fused_interpret
+
+    def __post_init__(self):
+        from repro.fl.local import validate_update_impl
+        validate_update_impl(self.update_impl)
 
     def local_spec(self, variant: Optional[str] = None) -> LocalSpec:
         return LocalSpec(
@@ -163,6 +177,82 @@ class ShardedClientStateStore:
 
 
 # ---------------------------------------------------------------------------
+# sharded flat ops — the pod's flat-first representation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFlatOps(FlatParamOps):
+    """FlatParamOps over ShardedFlatView buffers on a mesh.
+
+    Each bucket's ``(n_shards, per_shard)`` buffer is sharded over its
+    group's mesh axes, so a kernel over it is embarrassingly
+    shard-local: :meth:`_run` wraps every fused-kernel call in a
+    ``shard_map`` whose in/out specs are the bucket's
+    ``flat_buffer_pspec`` — each device runs the blocked Pallas pass on
+    its own contiguous ``(1, per_shard)`` tile with zero collectives
+    (the only cross-shard communication in the whole update path is the
+    global clip norm, a scalar psum XLA inserts for
+    :meth:`FlatParamOps.grad_sqsum`).
+    """
+    mesh: Any = None
+
+    def place(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        # device_put is a NO-OP (returns its operand) on matching
+        # placement, and the shard transform itself passes (1, N)-shaped
+        # unsharded leaves straight through — copy any passthrough so
+        # the engine's donated carries never delete a caller's array
+        # (same hazard as PodBackendMixin._put_unaliased)
+        placed = jax.device_put(bufs, self.shardings())
+        return jax.tree_util.tree_map(
+            lambda orig, out: jnp.copy(out) if out is orig else out,
+            bufs, placed)
+
+    def shardings(self) -> Dict[str, Any]:
+        return rules.flat_param_shardings(self.view, self.mesh)
+
+    def stacked_flatten(self, tree: Pytree):
+        raise NotImplementedError("the pod backend aggregates "
+                                  "sequentially — no stacked buffers")
+
+    def stacked_unflatten(self, bufs: Dict[str, jnp.ndarray]):
+        raise NotImplementedError("the pod backend aggregates "
+                                  "sequentially — no stacked buffers")
+
+    def weighted_delta(self, p_bufs, stacked_bufs, wbar):
+        raise NotImplementedError("the pod backend aggregates "
+                                  "sequentially — use delta_accum")
+
+    def _run(self, name: str, fn: Callable, bufs, scalars):
+        group = self.view.group_map[name]
+        bspec = rules.flat_buffer_pspec(group)
+        scalars = tuple(jnp.asarray(s, jnp.float32) if not hasattr(s, "dtype")
+                        else s for s in scalars)
+        local = [jax.ShapeDtypeStruct((group.size,), b.dtype) for b in bufs]
+        sc_specs = [jax.ShapeDtypeStruct(jnp.shape(s), s.dtype)
+                    for s in scalars]
+        n_out = len(jax.eval_shape(fn, *local, *sc_specs))
+
+        def body(*args):
+            bs, sc = args[:len(bufs)], args[len(bufs):]
+            outs = fn(*[b.reshape(-1) for b in bs], *sc)
+            return tuple(o.reshape(1, -1) for o in outs)
+
+        run = shard_map(body, mesh=self.mesh,
+                        in_specs=tuple([bspec] * len(bufs) +
+                                       [P()] * len(scalars)),
+                        out_specs=(bspec,) * n_out, check_rep=False)
+        return run(*bufs, *scalars)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_flat_ops(task: Task, mesh, layout: str,
+                      interpret: bool) -> ShardedFlatOps:
+    p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    return ShardedFlatOps(view=rules.sharded_flat_view(p_specs, mesh, layout),
+                          interpret=interpret, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
 # the pod backend (engine hooks shared by both strategies)
 # ---------------------------------------------------------------------------
 
@@ -170,6 +260,12 @@ class PodBackendMixin:
     """Engine backend hooks for a sharded mesh.  Subclasses are frozen
     strategy dataclasses providing ``mesh``, ``layout`` and
     ``clients_per_round`` fields."""
+
+    def flat_ops(self, task: Task):
+        if self.spec.update_impl == "tree":
+            return None
+        return _sharded_flat_ops(task, self.mesh, self.layout,
+                                 ops.fused_interpret(self.spec.update_impl))
 
     def n_selected(self, n_clients: int) -> int:
         if self.clients_per_round:
@@ -225,32 +321,52 @@ class PodBackendMixin:
     def place_server_state(self, state: Pytree, task: Task) -> Pytree:
         if not jax.tree_util.tree_leaves(state):
             return state
-        p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
-        return self._put_unaliased(state,
-                                   self.server_state_shardings(p_specs))
+        return self._put_unaliased(state, self.server_state_shardings(task))
 
     def state_shardings(self, p_specs: Pytree, n_clients: int) -> Dict:
         return {}
 
-    def server_state_shardings(self, p_specs: Pytree) -> Any:
-        """Placement for the server-optimizer ``OptState``.  The moment
-        trees mirror the param tree leaf-for-leaf, so the param
-        path-pattern rules apply verbatim (the OptState/AdamWState
-        wrappers only prefix the paths); the scalar step count falls
-        through every rule to replication."""
-        server = self.make_server_update()
+    def server_state_shardings(self, task: Task) -> Any:
+        """Placement for the server-optimizer ``OptState``.
+
+        Tree path: the moment trees mirror the param tree
+        leaf-for-leaf, so the param path-pattern rules apply verbatim
+        (the OptState/AdamWState wrappers only prefix the paths).
+        Fused path: the moments are flat buffer dicts keyed by bucket
+        name, so each moment buffer takes its bucket's
+        ``flat_buffer_pspec``.  The scalar step count replicates either
+        way."""
+        server = self.make_server_update(task)
         if server is None:
             return ()
-        state = jax.eval_shape(server[0], p_specs)
-        return rules.param_shardings(state, self.mesh, self.layout)
+        p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+        fops = self.flat_ops(task)
+        if fops is None:
+            state = jax.eval_shape(server[0], p_specs)
+            return rules.param_shardings(state, self.mesh, self.layout)
+        buf_specs = jax.eval_shape(fops.flatten, p_specs)
+        state = jax.eval_shape(server[0], buf_specs)
+        buf_sh = fops.shardings()
+        rep = rules.replicated(self.mesh)
+
+        def leaf_sh(path, leaf):
+            key = next((p.key for p in reversed(path)
+                        if hasattr(p, "key")), None)
+            return buf_sh.get(key, rep)
+
+        return jax.tree_util.tree_map_with_path(leaf_sh, state)
 
     def jit_chunk(self, chunk: Callable, task: Task,
                   n_clients: int) -> Callable:
         p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
-        p_sh = rules.param_shardings(p_specs, self.mesh, self.layout)
+        fops = self.flat_ops(task)
+        # flat-first: the params carry is the sharded buffer dict, so
+        # its in/out shardings are the per-bucket flat shardings
+        p_sh = fops.shardings() if fops is not None else \
+            rules.param_shardings(p_specs, self.mesh, self.layout)
         rep = rules.replicated(self.mesh)
         st_sh = self.state_shardings(p_specs, n_clients)
-        srv_sh = self.server_state_shardings(p_specs)
+        srv_sh = self.server_state_shardings(task)
         # chunk args: (key, params, algo_state, server_state, x_all,
         #              y_all, n_real, ids, lr_scales, eval_mask, ev_x,
         #              ev_y, ev_w); x/y and the eval stream keep the
@@ -281,7 +397,10 @@ class PodRelayStrategy(PodBackendMixin, RelayStrategy):
 
     def build_round(self, task: Task) -> Callable:
         inner = RelayStrategy.build_round(self, task)
-        p_sh = self._param_shardings(task)
+        fops = self.flat_ops(task)
+        # fused: the carry is the sharded buffer dict — pin the buckets
+        p_sh = fops.shardings() if fops is not None else \
+            self._param_shardings(task)
 
         def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
             params = jax.lax.with_sharding_constraint(params, p_sh)
@@ -330,12 +449,13 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
 
     def build_round(self, task: Task) -> Callable:
         spec = self.spec
-        local = make_local_fn(task, spec)
+        fops = self.flat_ops(task)
+        local = make_local_fn(task, spec, fops)
         algo = self.algorithm
         store = self.state_store
-        p_sh = self._param_shardings(task)
-        fused = spec.update_impl != "tree"
-        interpret = ops.fused_interpret(spec.update_impl)
+        fused = fops is not None
+        p_sh = fops.shardings() if fused else self._param_shardings(task)
+        unpack = fops.unflatten if fused else (lambda t: t)
 
         def pin(t):
             return jax.lax.with_sharding_constraint(t, p_sh)
@@ -350,25 +470,18 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             wsum = jnp.sum(w32)
 
             if fused:
-                # flat path: the f32 delta accumulator is one contiguous
-                # buffer per dtype bucket; each client's contribution and
-                # the final apply are ONE blocked kernel per bucket
-                view = FlatView.of(params)
-                p_bufs = view.flatten(params)
-                delta0 = view.zeros(jnp.float32)
+                # flat-first: params and the f32 delta accumulator are
+                # sharded buffer dicts; each client's contribution and
+                # the final apply run shard-locally, one blocked kernel
+                # per bucket (ShardedFlatOps)
+                delta0 = fops.zeros(jnp.float32)
 
                 def add_delta(delta, w_end, w_i):
-                    wb = view.flatten(w_end)
-                    return {k: ops.fused_delta_accum(
-                        delta[k], wb[k], p_bufs[k], w_i / wsum,
-                        interpret=interpret) for k in delta}
+                    return fops.delta_accum(delta, w_end, params,
+                                            w_i / wsum)
 
                 def apply_delta(params_, delta):
-                    base = view.flatten(params_)   # == p_bufs today (CSE'd)
-                    return view.unflatten({
-                        k: ops.fused_server_update(
-                            base[k], delta[k], (), (1.0,), opt="none",
-                            interpret=interpret)[0] for k in delta})
+                    return fops.apply_delta(params_, delta)
             else:
                 delta0 = jax.tree_util.tree_map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -386,9 +499,11 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                         params_, delta)
 
             if algo in ("fedavg", "fedprox"):
+                anchor = unpack(params) if algo == "fedprox" else None
+
                 def one_client(delta, inp):
                     k, cxi, cyi, w_i = inp
-                    extras = {"w_global": params} if algo == "fedprox" else {}
+                    extras = {"w_global": anchor} if algo == "fedprox" else {}
                     w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
                     return add_delta(delta, w_end, w_i), aux["loss"]
 
@@ -401,15 +516,17 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                 c, c_all = algo_state["c_global"], algo_state["c_clients"]
                 c_i = store.gather(c_all, ids)
                 denom = spec.n_steps * spec.lr * lr_scale
+                p_tree = unpack(params)
 
                 def one_client(delta, inp):
                     k, cxi, cyi, w_i, c_i_row = inp
                     extras = {"c_diff": tm.sub(c, c_i_row)}
                     w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
-                    # option II: c_i⁺ = c_i − c + (w − w_i)/(S·lr)
+                    # option II: c_i⁺ = c_i − c + (w − w_i)/(S·lr) — the
+                    # control-variate state stays tree-form
                     c_i_new = jax.tree_util.tree_map(
                         lambda ci, cg, p, we: ci - cg + (p - we) / denom,
-                        c_i_row, c, params, w_end)
+                        c_i_row, c, p_tree, unpack(w_end))
                     return add_delta(delta, w_end, w_i), \
                         (aux["loss"], c_i_new)
 
@@ -429,13 +546,14 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             if algo == "moon":
                 w_prev_all = algo_state["w_prev"]
                 w_prev = store.gather(w_prev_all, ids)
+                anchor = unpack(params)        # loop-invariant: hoist
 
                 def one_client(delta, inp):
                     k, cxi, cyi, w_i, w_prev_row = inp
-                    extras = {"w_global": params, "w_prev": w_prev_row}
+                    extras = {"w_global": anchor, "w_prev": w_prev_row}
                     w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
                     return add_delta(delta, w_end, w_i), \
-                        (aux["loss"], w_end)
+                        (aux["loss"], unpack(w_end))
 
                 delta, (losses, w_ends) = jax.lax.scan(
                     one_client, delta0, (keys, cx, cy, w32, w_prev))

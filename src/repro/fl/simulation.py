@@ -66,9 +66,14 @@ class FLConfig:
     chunk_size: int = 8             # rounds per XLA dispatch (engine)
     sampling: str = "device"        # device | host (seed-compatible)
     # step-tail/aggregation implementation: per-leaf tree algebra (the
-    # parity oracle) or the fused FlatView + Pallas path (repro.kernels
-    # .fused_update); "fused" auto-interprets off-TPU
+    # parity oracle) or the fused flat-first path (params/moments ride
+    # the engine as FlatView buffers, repro.kernels.fused_update);
+    # "fused" auto-interprets off-TPU
     update_impl: str = "tree"       # tree | fused | fused_interpret
+
+    def __post_init__(self):
+        from repro.fl.local import validate_update_impl
+        validate_update_impl(self.update_impl)
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -123,25 +128,51 @@ def make_round_fn(task: Task, cfg: FLConfig) -> Callable:
 
     signature: round_fn(key, params, x_all, y_all, ids, weights, lr_scale,
                         algo_state) -> (params, algo_state, metrics)
+    The params contract is TREES regardless of ``update_impl`` — on the
+    fused path this shim packs/unpacks at the boundary (the engine
+    proper carries flat buffers end to end instead).
     """
-    body = cfg.strategy().build_round(task)
+    strategy = cfg.strategy()
+    body = strategy.build_round(task)
+    fops = strategy.flat_ops(task)
 
     @jax.jit
     def round_fn(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+        if fops is not None:
+            params = fops.flatten(params)
         params, algo_state, loss = body(key, params, x_all, y_all, ids,
                                         weights, lr_scale, algo_state)
+        if fops is not None:
+            params = fops.unflatten(params)
         return params, algo_state, {"local_loss": loss}
 
     return round_fn
 
 
-def make_server_update(cfg: FLConfig):
+def make_server_update(cfg: FLConfig, task: Optional[Task] = None):
     """Server-side optimizer step; see AggregateStrategy.make_server_update.
-    Returns (init_fn, jitted_update_fn) or None for "none"."""
-    server = cfg.strategy().make_server_update()
+    Returns (init_fn, jitted_update_fn) or None for "none" — both speak
+    param TREES regardless of ``update_impl`` (on the fused path this
+    shim packs/unpacks and the OptState moments ride flat inside).
+    ``task`` is required on the fused path."""
+    strategy = cfg.strategy()
+    server = strategy.make_server_update(task)
     if server is None:
         return None
-    return server[0], jax.jit(server[1])
+    fops = strategy.flat_ops(task) if cfg.update_impl != "tree" else None
+    if fops is None:
+        return server[0], jax.jit(server[1])
+
+    def init(params):
+        return server[0](fops.flatten(params))
+
+    @jax.jit
+    def update(params, avg_params, state):
+        new_p, state = server[1](fops.flatten(params),
+                                 fops.flatten(avg_params), state)
+        return fops.unflatten(new_p), state
+
+    return init, update
 
 
 def init_server_state(task: Task, cfg: FLConfig, n_clients: int,

@@ -50,14 +50,20 @@ def ssd_with_state(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# fused FL-update kernels (repro.kernels.fused_update over FlatView buffers)
+# fused FL-update kernels (repro.kernels.fused_update over flat buffers)
 # ---------------------------------------------------------------------------
 #
-# The FL layers call these with ``interpret=fused_interpret(spec)`` so
-# ``update_impl="fused"`` lowers to Mosaic on TPU and transparently runs
-# the interpreter on the CPU container (where there is no Mosaic
-# backend); ``update_impl="fused_interpret"`` forces the interpreter
-# everywhere (parity tests, benchmarks).
+# The FL layers call these through a ``repro.fl.local.FlatParamOps``
+# (flat-first: one call per dtype/mesh-axis bucket) with
+# ``interpret=fused_interpret(spec)``, so ``update_impl="fused"`` lowers
+# to Mosaic on TPU and transparently runs the interpreter on the CPU
+# container (where there is no Mosaic backend);
+# ``update_impl="fused_interpret"`` forces the interpreter everywhere
+# (parity tests, benchmarks).  All wrappers take 1-D buffers: on the
+# pod, ``repro.fl.pod.ShardedFlatOps`` invokes them inside a
+# ``shard_map`` on each device's contiguous local shard, so the same
+# kernels serve single-host FlatView buffers and mesh-sharded
+# ShardedFlatView buckets unchanged.
 
 def fused_interpret(update_impl: str) -> bool:
     """interpret= flag for an ``update_impl`` value: explicit interpret

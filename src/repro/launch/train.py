@@ -312,12 +312,14 @@ def main(argv=None) -> int:
                     help="server step size; 1.0 suits momentum (FedAvgM), "
                          "adam wants ~0.01-0.1 (its update is sign-scale)")
     ap.add_argument("--server-momentum", type=float, default=0.9)
-    ap.add_argument("--update-impl", default="tree",
+    ap.add_argument("--update-impl", default="fused",
                     choices=("tree", "fused", "fused_interpret"),
-                    help="step-tail/aggregation implementation: per-leaf "
-                         "tree algebra (parity oracle) or the fused "
-                         "FlatView+Pallas kernels (repro.kernels."
-                         "fused_update; auto-interprets off-TPU)")
+                    help="step-tail/aggregation implementation: the fused "
+                         "flat-first path (default — ShardedFlatView "
+                         "buffers preserve the FSDP×TP layout and the "
+                         "kernels run shard-locally; auto-interprets "
+                         "off-TPU) or the per-leaf tree algebra (the "
+                         "parity oracle)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="in-program test-accuracy cadence "
                          "(0 = no evaluation; never splits a chunk)")

@@ -201,6 +201,41 @@ def replicated(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# sharded flat buffers (the pod's fused flat-first carries)
+# ---------------------------------------------------------------------------
+
+def sharded_flat_view(params_tree: Pytree, mesh: Mesh,
+                      layout: str = "fsdp_tp"):
+    """ShardedFlatView for ``params_tree`` under this mesh + layout:
+    leaves bucket per (dtype, mesh-axis group) straight from the
+    :func:`param_pspecs` rules, so packing preserves exactly the FSDP×TP
+    decomposition the per-leaf path would use — each device ends up with
+    one contiguous local buffer per bucket (see
+    repro.utils.flatten.ShardedFlatView)."""
+    from repro.utils.flatten import ShardedFlatView
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardedFlatView.of(params_tree,
+                              param_pspecs(params_tree, mesh, layout),
+                              axis_sizes)
+
+
+def flat_buffer_pspec(group) -> P:
+    """PartitionSpec for one ShardGroup's ``(n_shards, per_shard)``
+    buffer: the shard axis over the group's mesh axes, per-shard data
+    unsharded."""
+    if not group.axes:
+        return P(None, None)
+    entry = group.axes if len(group.axes) > 1 else group.axes[0]
+    return P(entry, None)
+
+
+def flat_param_shardings(view, mesh: Mesh) -> dict:
+    """NamedSharding per bucket for a ShardedFlatView's buffers."""
+    return {g.name: NamedSharding(mesh, flat_buffer_pspec(g))
+            for g in view.groups}
+
+
+# ---------------------------------------------------------------------------
 # federated batch / client-stack sharding (pod round programs)
 # ---------------------------------------------------------------------------
 

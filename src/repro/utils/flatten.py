@@ -26,6 +26,17 @@ stacks): buffers come out ``(K, total)`` with the same per-leaf offsets.
 
 FlatView is a frozen, hashable value (treedef + slot tuple), so it can
 key caches and ride static arguments.
+
+:class:`ShardedFlatView` is the mesh-aware sibling: leaves are bucketed
+per *(dtype, mesh-axis group)* — the group being the set of mesh axes
+their PartitionSpec shards them over — and each bucket packs into a
+``(n_shards, per_shard)`` buffer whose leading axis is sharded over
+exactly those axes.  Per-shard offsets are static, so every device holds
+one contiguous local buffer per bucket and the fused update kernels run
+shard-locally (see repro.fl.pod.ShardedFlatOps) without giving up the
+FSDP×TP layout.  The view itself is pure data movement
+(reshape/transpose), value-like and hashable; placement is the caller's
+job (repro.sharding.rules builds the views and NamedShardings).
 """
 from __future__ import annotations
 
@@ -141,3 +152,197 @@ class FlatView:
         params)."""
         return {name: jnp.zeros((size,), dtype or name)
                 for name, size in self.buffer_sizes.items()}
+
+
+# ---------------------------------------------------------------------------
+# sharded flat view — per-(dtype × mesh-axis-group) buffers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLeafSlot:
+    """One leaf's static slice of its bucket, PER SHARD."""
+    buffer: str                   # bucket name, e.g. "float32@data+model"
+    offset: int                   # element offset within each shard row
+    size: int                     # elements per shard for this leaf
+    shape: Tuple[int, ...]        # global (unsharded) leaf shape
+    # mesh axes tiling each dim, in the dim's tiling order (() = unsharded)
+    dim_axes: Tuple[Tuple[str, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardGroup:
+    """One bucket: all leaves of one dtype sharded over one axis set."""
+    name: str
+    dtype: str
+    axes: Tuple[str, ...]         # canonical (mesh) order; () = replicated
+    n_shards: int
+    size: int                     # elements per shard (bucket total)
+
+
+def _spec_entries(pspec, rank: int) -> Tuple[Tuple[str, ...], ...]:
+    """Normalize a PartitionSpec-like into per-dim axis-name tuples,
+    right-padded with () to the leaf rank."""
+    entries = tuple(pspec) if pspec is not None else ()
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(())
+        elif isinstance(e, str):
+            out.append((e,))
+        else:
+            out.append(tuple(e))
+    out += [()] * (rank - len(out))
+    return tuple(out[:rank])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFlatView:
+    """Static packing plan bucketing leaves per (dtype, mesh-axis group).
+
+    Each bucket's buffer is ``(n_shards, per_shard)``: axis 0 enumerates
+    the shards of the group's mesh axes in canonical (mesh-order)
+    row-major order, and every leaf owns the static per-shard slice
+    ``[offset, offset + size)`` of axis 1 — so sharding axis 0 over the
+    group's axes puts each leaf's local tile in one contiguous run of
+    the device-local buffer.  flatten/unflatten are pure
+    reshape/transpose data movement and work on tracers.
+    """
+    treedef: Any
+    slots: Tuple[ShardedLeafSlot, ...]
+    groups: Tuple[ShardGroup, ...]
+    axis_sizes: Tuple[Tuple[str, int], ...]   # canonical order, all axes
+
+    @classmethod
+    def of(cls, tree: Pytree, pspecs: Pytree,
+           axis_sizes: Dict[str, int]) -> "ShardedFlatView":
+        """Build a view from leaf shapes/dtypes plus a matching
+        PartitionSpec tree (e.g. repro.sharding.rules.param_pspecs).
+
+        ``axis_sizes`` maps mesh axis name -> size, in canonical mesh
+        order; size-1 axes never shard anything and are dropped, so the
+        same rules produce bit-identical single-device views.
+        """
+        from jax.sharding import PartitionSpec
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        spec_leaves, _ = jax.tree_util.tree_flatten(
+            pspecs, is_leaf=lambda x: x is None or
+            isinstance(x, PartitionSpec))
+        if len(spec_leaves) != len(leaves):
+            raise ValueError(
+                f"pspec tree has {len(spec_leaves)} leaves for a "
+                f"{len(leaves)}-leaf param tree")
+        order = tuple(axis_sizes)
+        cursor: Dict[str, int] = {}
+        meta: Dict[str, Tuple[str, Tuple[str, ...], int]] = {}
+        slots = []
+        for leaf, pspec in zip(leaves, spec_leaves):
+            shape = tuple(leaf.shape)
+            dtype = jnp.dtype(leaf.dtype).name
+            dim_axes = tuple(
+                tuple(a for a in entry if axis_sizes.get(a, 1) > 1)
+                for entry in _spec_entries(pspec, len(shape)))
+            used = [a for entry in dim_axes for a in entry]
+            if len(set(used)) != len(used):
+                raise ValueError(f"mesh axis repeated in spec {pspec}")
+            for dim, entry in zip(shape, dim_axes):
+                n = math.prod(axis_sizes[a] for a in entry)
+                if n > 1 and dim % n != 0:
+                    raise ValueError(
+                        f"dim {dim} not divisible by axes {entry} ({n})")
+            axes = tuple(a for a in order if a in used)
+            n_shards = math.prod(axis_sizes[a] for a in axes)
+            name = dtype + ("@" + "+".join(axes) if axes else "")
+            size = int(math.prod(shape)) // max(n_shards, 1)
+            off = cursor.get(name, 0)
+            slots.append(ShardedLeafSlot(buffer=name, offset=off, size=size,
+                                         shape=shape, dim_axes=dim_axes))
+            cursor[name] = off + size
+            meta[name] = (dtype, axes, n_shards)
+        groups = tuple(ShardGroup(name=name, dtype=m[0], axes=m[1],
+                                  n_shards=m[2], size=cursor[name])
+                       for name, m in meta.items())
+        return cls(treedef=treedef, slots=tuple(slots), groups=groups,
+                   axis_sizes=tuple((a, int(axis_sizes[a])) for a in order))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def group_map(self) -> Dict[str, ShardGroup]:
+        return {g.name: g for g in self.groups}
+
+    @property
+    def buffer_shapes(self) -> Dict[str, Tuple[int, int]]:
+        return {g.name: (g.n_shards, g.size) for g in self.groups}
+
+    @property
+    def total_size(self) -> int:
+        return sum(g.n_shards * g.size for g in self.groups)
+
+    def _axis_size(self, name: str) -> int:
+        return dict(self.axis_sizes)[name]
+
+    # -- per-leaf shard transform ------------------------------------------
+
+    def _perm_info(self, slot: ShardedLeafSlot):
+        """(expanded shape, factor->front permutation, n_shards) for one
+        leaf: every sharded dim splits into its axis factors, and the
+        factors move to the front in canonical (mesh) order."""
+        order = [a for a, _ in self.axis_sizes]
+        expanded, factor_pos = [], {}
+        for dim, entry in zip(slot.shape, slot.dim_axes):
+            for a in entry:
+                factor_pos[a] = len(expanded)
+                expanded.append(self._axis_size(a))
+                dim //= self._axis_size(a)
+            expanded.append(dim)
+        block_pos = [i for i in range(len(expanded))
+                     if i not in factor_pos.values()]
+        perm = [factor_pos[a] for a in order if a in factor_pos] + block_pos
+        n_shards = math.prod(self._axis_size(a) for a in factor_pos)
+        return expanded, perm, n_shards
+
+    def _leaf_to_shards(self, leaf: jnp.ndarray,
+                        slot: ShardedLeafSlot) -> jnp.ndarray:
+        """(global leaf) -> (n_shards, per_shard) rows, shard-major in
+        canonical axis order."""
+        expanded, perm, n_shards = self._perm_info(slot)
+        out = jnp.asarray(leaf).reshape(expanded).transpose(perm)
+        return out.reshape(n_shards, slot.size)
+
+    def _shards_to_leaf(self, rows: jnp.ndarray,
+                        slot: ShardedLeafSlot) -> jnp.ndarray:
+        expanded, perm, _ = self._perm_info(slot)
+        inv = [perm.index(i) for i in range(len(perm))]
+        mid = rows.reshape([expanded[i] for i in perm])
+        return mid.transpose(inv).reshape(slot.shape)
+
+    # -- pack / unpack ------------------------------------------------------
+
+    def _check(self, tree: Pytree) -> list:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(f"tree structure mismatch: {treedef} != "
+                             f"{self.treedef}")
+        return leaves
+
+    def flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        """Pack ``tree`` into ``{bucket: (n_shards, per_shard)}``."""
+        leaves = self._check(tree)
+        parts: Dict[str, list] = {}
+        for slot, leaf in zip(self.slots, leaves):
+            parts.setdefault(slot.buffer, []).append(
+                self._leaf_to_shards(leaf, slot))
+        return {name: jnp.concatenate(rows, axis=1)
+                for name, rows in parts.items()}
+
+    def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+        leaves = [self._shards_to_leaf(
+            bufs[s.buffer][:, s.offset:s.offset + s.size], s)
+            for s in self.slots]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def zeros(self, dtype=None) -> Dict[str, jnp.ndarray]:
+        """Zero buffers with this view's shapes; ``dtype`` overrides the
+        per-bucket dtype (e.g. the pod's f32 delta accumulator)."""
+        return {g.name: jnp.zeros((g.n_shards, g.size), dtype or g.dtype)
+                for g in self.groups}

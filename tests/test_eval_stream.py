@@ -213,8 +213,10 @@ def test_pod_server_state_shards_like_params(lm_setup):
     assert specs.inner.mu["blk"]["norm"]["scale"] == P(None)
 
     # and the strategy-level hook wires those rules to a real mesh
+    # (keyed by task since the fused path builds a flat OptState)
+    task, _ = lm_setup
     strat = PodAggregateStrategy(
         spec=LocalSpec(n_steps=1, batch_size=2, lr=0.01),
         mesh=make_host_mesh(), clients_per_round=2, server_opt="adam")
-    sh = strat.server_state_shardings(p_specs)
+    sh = strat.server_state_shardings(task)
     assert jax.tree_util.tree_leaves(sh)          # non-empty placement tree

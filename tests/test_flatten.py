@@ -1,19 +1,26 @@
-"""FlatView pack/unpack tests — deterministic invariants plus hypothesis
-property sweeps.
+"""FlatView / ShardedFlatView pack/unpack tests — deterministic
+invariants plus hypothesis property sweeps.
 
 The fused update path is only correct if flatten/unflatten is a perfect
 bijection over arbitrary parameter pytrees — mixed dtypes, scalar
-leaves, empty subtrees, any nesting.  The deterministic tests below
-always run; the hypothesis sweeps (random tree shapes/dtypes/nesting)
-skip cleanly when the optional dev dep is absent
-(requirements-dev.txt), same policy as tests/test_properties.py.
+leaves, empty subtrees, any nesting.  For ShardedFlatView the bijection
+must additionally commute with the mesh decomposition: leaves bucket
+per (dtype × mesh-axis group), per-shard offsets are static, and
+device_put with the bucket shardings round-trips exactly.  The
+deterministic tests below always run; the hypothesis sweeps (random
+tree shapes/dtypes/nesting/pspecs) skip cleanly when the optional dev
+dep is absent (requirements-dev.txt), same policy as
+tests/test_properties.py.
 """
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
 
-from repro.utils.flatten import FlatView
+from repro.utils.flatten import FlatView, ShardedFlatView
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -139,6 +146,125 @@ def test_view_is_hashable_and_stable():
 
 
 # ---------------------------------------------------------------------------
+# ShardedFlatView — deterministic invariants
+# ---------------------------------------------------------------------------
+
+AXIS_SIZES = {"pod": 1, "data": 2, "model": 2}
+
+SHARDED_TREE = {
+    "embed": jnp.arange(48, dtype=jnp.float32).reshape(8, 6),
+    "wo": {"w": jnp.arange(24, dtype=jnp.bfloat16).reshape(4, 6),
+           "b": jnp.arange(6, dtype=jnp.float32)},
+    "gate": jnp.arange(32, dtype=jnp.float32).reshape(4, 8),
+    "scale": jnp.float32(2.0),
+}
+SHARDED_PSPECS = {
+    "embed": P("model", "data"),
+    "wo": {"w": P("model", "data"), "b": P(None)},
+    "gate": P("data", "model"),
+    "scale": P(),
+}
+
+
+def _sharded_view():
+    return ShardedFlatView.of(SHARDED_TREE, SHARDED_PSPECS, AXIS_SIZES)
+
+
+def test_sharded_roundtrip_and_buckets():
+    view = _sharded_view()
+    bufs = view.flatten(SHARDED_TREE)
+    # leaves bucket per (dtype, mesh-axis group); size-1 axes drop out
+    assert set(bufs) == {"float32@data+model", "bfloat16@data+model",
+                         "float32"}
+    assert view.buffer_shapes == {"float32@data+model": (4, 20),
+                                  "bfloat16@data+model": (4, 6),
+                                  "float32": (1, 7)}
+    _assert_trees_equal(view.unflatten(bufs), SHARDED_TREE)
+
+
+def test_sharded_offsets_are_static_and_contiguous():
+    view = _sharded_view()
+    cursor = {}
+    for s in view.slots:
+        assert s.offset == cursor.get(s.buffer, 0)
+        n_shards = view.group_map[s.buffer].n_shards
+        assert s.size * n_shards == int(np.prod(s.shape, dtype=np.int64))
+        cursor[s.buffer] = s.offset + s.size
+    assert cursor == {g.name: g.size for g in view.groups}
+
+
+def test_sharded_rows_are_the_device_tiles():
+    """Row k of a bucket must be exactly the tile device k would hold
+    under the leaf's NamedSharding — shard-major in canonical (mesh)
+    axis order, so sharding axis 0 over (data, model) is a no-comms
+    relabel of the per-leaf layout."""
+    view = _sharded_view()
+    bufs = view.flatten(SHARDED_TREE)
+    emb = np.arange(48, dtype=np.float32).reshape(8, 6)
+    for di in range(2):
+        for mi in range(2):
+            tile = emb[mi * 4:(mi + 1) * 4, di * 3:(di + 1) * 3].reshape(-1)
+            np.testing.assert_array_equal(
+                np.asarray(bufs["float32@data+model"][di * 2 + mi, :12]),
+                tile)
+
+
+def test_sharded_roundtrip_under_named_sharding():
+    """device_put with the bucket shardings (n_shards axis over the
+    group's axes) then unflatten reproduces the tree exactly."""
+    from jax.sharding import Mesh, NamedSharding
+    from repro.sharding.rules import flat_buffer_pspec
+
+    n = jax.device_count()
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1, n),
+                ("pod", "data", "model"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    view = ShardedFlatView.of(SHARDED_TREE, SHARDED_PSPECS, sizes)
+    bufs = view.flatten(SHARDED_TREE)
+    placed = {g.name: jax.device_put(
+        bufs[g.name], NamedSharding(mesh, flat_buffer_pspec(g)))
+        for g in view.groups}
+    _assert_trees_equal(view.unflatten(placed), SHARDED_TREE)
+
+
+def test_sharded_divisibility_rejected():
+    with pytest.raises(ValueError, match="divisible"):
+        ShardedFlatView.of({"w": jnp.zeros((3, 4))}, {"w": P("data", None)},
+                           AXIS_SIZES)
+
+
+def test_sharded_zeros_and_dtype_override():
+    view = _sharded_view()
+    z = view.zeros()
+    assert z["bfloat16@data+model"].dtype == jnp.bfloat16
+    z32 = view.zeros(jnp.float32)
+    assert all(b.dtype == jnp.float32 for b in z32.values())
+    assert {k: b.shape for k, b in z32.items()} == view.buffer_shapes
+
+
+def test_sharded_view_hashable_and_jit_compatible():
+    assert hash(_sharded_view()) == hash(_sharded_view())
+
+    @jax.jit
+    def roundtrip(tree):
+        v = ShardedFlatView.of(tree, SHARDED_PSPECS, AXIS_SIZES)
+        return v.unflatten(v.flatten(tree))
+
+    _assert_trees_equal(roundtrip(SHARDED_TREE), SHARDED_TREE)
+
+
+def test_sharded_single_device_collapses_to_one_bucket_per_dtype():
+    """All axes size 1 → no sharding survives, one (1, total) bucket
+    per dtype — the host-mesh degeneration the parity tests rely on."""
+    view = ShardedFlatView.of(SHARDED_TREE, SHARDED_PSPECS,
+                              {"pod": 1, "data": 1, "model": 1})
+    assert set(view.buffer_shapes) == {"float32", "bfloat16"}
+    assert all(shape[0] == 1 for shape in view.buffer_shapes.values())
+    _assert_trees_equal(view.unflatten(view.flatten(SHARDED_TREE)),
+                        SHARDED_TREE)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis property sweeps (optional dev dep)
 # ---------------------------------------------------------------------------
 
@@ -206,3 +332,61 @@ if HAVE_HYPOTHESIS:
             assert s.size == int(np.prod(s.shape, dtype=np.int64))
             cursor[s.buffer] = s.offset + s.size
         assert cursor == view.buffer_sizes
+
+    # -- ShardedFlatView sweeps --------------------------------------------
+
+    SWEEP_AXES = {"data": 2, "model": 3}
+
+    def _random_pspecs(tree, seed):
+        """A valid pspec tree for ``tree``: per dim, maybe shard over an
+        unused axis that divides it (mirrors the rules' degradation)."""
+        rng = np.random.default_rng(seed)
+        entries = [None, "data", "model", ("data", "model")]
+
+        def leaf_spec(leaf):
+            used, spec = set(), []
+            for dim in leaf.shape:
+                e = entries[rng.integers(0, len(entries))]
+                axes = (e,) if isinstance(e, str) else (e or ())
+                n = int(np.prod([SWEEP_AXES[a] for a in axes] or [1]))
+                if e is None or used & set(axes) or dim % n or dim < n:
+                    spec.append(None)
+                else:
+                    used |= set(axes)
+                    spec.append(e)
+            return P(*spec)
+
+        return jax.tree_util.tree_map(leaf_spec, tree)
+
+    @given(tree=pytrees(), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=40, deadline=None)
+    def test_sharded_roundtrip_sweep(tree, seed):
+        pspecs = _random_pspecs(tree, seed)
+        view = ShardedFlatView.of(tree, pspecs, SWEEP_AXES)
+        bufs = view.flatten(tree)
+        for g in view.groups:
+            buf = bufs[g.name]
+            assert buf.shape == (g.n_shards, g.size)
+            assert jnp.dtype(buf.dtype).name == g.dtype
+            assert g.n_shards == int(np.prod(
+                [SWEEP_AXES[a] for a in g.axes] or [1]))
+        _assert_trees_equal(view.unflatten(bufs), tree)
+
+    @given(tree=pytrees(), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=25, deadline=None)
+    def test_sharded_slot_invariants_sweep(tree, seed):
+        """Per-shard offsets are static and contiguous per bucket, and
+        every leaf's per-shard size × n_shards recovers its element
+        count (no padding, no overlap)."""
+        view = ShardedFlatView.of(tree, _random_pspecs(tree, seed),
+                                  SWEEP_AXES)
+        cursor = {}
+        for s in view.slots:
+            assert s.offset == cursor.get(s.buffer, 0)
+            n_shards = view.group_map[s.buffer].n_shards
+            assert s.size * n_shards == int(np.prod(s.shape,
+                                                    dtype=np.int64))
+            cursor[s.buffer] = s.offset + s.size
+        assert cursor == {g.name: g.size for g in view.groups}
+        assert view.total_size == sum(
+            int(np.prod(s.shape, dtype=np.int64)) for s in view.slots)

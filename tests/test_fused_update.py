@@ -1,4 +1,4 @@
-"""Fused flat-buffer update path vs the tree parity oracle.
+"""Flat-first fused update path vs the tree parity oracle.
 
 ``update_impl="fused_interpret"`` routes the client step tail, the
 FedAvg aggregation and the server optimizers through the FlatView +
@@ -8,16 +8,25 @@ tests pin numerical parity at three levels:
 
   - the step tail alone (fused_step_tail vs tree_step_tail, all term
     combinations incl. clip / correction / decay / momentum);
+  - the flat-grad local contract (value_and_grad w.r.t. the buffers
+    emits packed gradients identical to packing the tree gradients);
   - full host-engine runs for all four variants and both server
-    optimizers;
+    optimizers (flat chunk carries + flat OptState);
   - full pod-backend runs (sequential fused delta accumulation +
-    fused server moments).
+    fused server moments over ShardedFlatOps);
+  - (slow) a 16-fake-device subprocess run pinning fused == tree under
+    a REAL sharded FSDP×TP layout, with the carry buckets actually
+    sharded over their mesh-axis groups.
 
 Adam comparisons carry the looser tolerance documented in
 tests/test_eval_stream.py: its sign-like normalization amplifies fp
 reduction-order differences on near-zero pseudo-gradient elements.
 """
 import dataclasses as dc
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +35,12 @@ import pytest
 
 from repro.data.synthetic import DATASETS, make_synthetic_tokenlm
 from repro.fl.engine import RoundSchedule, run_rounds
-from repro.fl.local import LocalSpec, fused_step_tail, tree_step_tail
+from repro.fl.local import (
+    FlatParamOps,
+    LocalSpec,
+    fused_step_tail,
+    tree_step_tail,
+)
 from repro.fl.simulation import HOST_RNG_OFFSET_P2, FLConfig, run_federated
 from repro.fl.task import lm_task, vision_task
 from repro.utils.flatten import FlatView
@@ -74,11 +88,11 @@ def test_step_tail_matches_tree(grad_clip, momentum, weight_decay, with_c):
     want_p, want_m = tree_step_tail(spec, params, grads, mom, c, lr_scale)
 
     view = FlatView.of(params)
+    fops = FlatParamOps(view=view, interpret=True)
     m_bufs = view.flatten(mom) if momentum else {}
     got_p, got_m = fused_step_tail(
-        spec, view.flatten(params), view.flatten(grads), m_bufs,
-        view.flatten(c) if c is not None else None, lr_scale,
-        interpret=True)
+        spec, fops, view.flatten(params), view.flatten(grads), m_bufs,
+        view.flatten(c) if c is not None else None, lr_scale)
     _assert_tree_close(view.unflatten(got_p), want_p, 1e-6)
     if momentum:
         _assert_tree_close(view.unflatten(got_m), want_m, 1e-6)
@@ -150,6 +164,75 @@ def test_bad_update_impl_rejected():
         LocalSpec(n_steps=1, batch_size=1, lr=0.1, update_impl="magic")
 
 
+@pytest.mark.parametrize("make_config", [
+    lambda: FLConfig(update_impl="fusde"),
+    lambda: __import__("repro.core.cyclic", fromlist=["CyclicConfig"])
+    .CyclicConfig(update_impl="magic"),
+    lambda: __import__("repro.fl.pod", fromlist=["PodFLSpec"])
+    .PodFLSpec(update_impl="Fused"),
+])
+def test_bad_update_impl_rejected_at_config_time(make_config):
+    """A typo'd update_impl fails at CONFIG construction with the
+    allowed values spelled out — not deep inside the engine."""
+    with pytest.raises(ValueError, match=r"tree.*fused.*fused_interpret"):
+        make_config()
+
+
+def test_flat_place_never_aliases_the_callers_arrays():
+    """flatten is a NO-OP for a bucket holding exactly one 1-D leaf
+    (concatenate of one array returns the operand) — place() must copy
+    such passthroughs, or the engine's donated carries would delete the
+    caller's params (the P1→P2 handoff regression class)."""
+    tree = {"v": jnp.arange(5, dtype=jnp.float32)}
+    view = FlatView.of(tree)
+    fops = FlatParamOps(view=view, interpret=True)
+    bufs = view.flatten(tree)
+    assert bufs["float32"] is tree["v"]          # the hazard is real
+    placed = fops.place(bufs)
+    assert placed["float32"] is not tree["v"]    # place de-aliases
+
+    # pod flavor: (1, N)-shaped unsharded leaves pass straight through
+    # the shard transform AND device_put on matching placement
+    from jax.sharding import PartitionSpec as P
+    from repro.fl.pod import ShardedFlatOps
+    from repro.launch.mesh import make_host_mesh
+    from repro.utils.flatten import ShardedFlatView
+
+    mesh = make_host_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tree2 = {"row": jnp.arange(6, dtype=jnp.float32).reshape(1, 6)}
+    sview = ShardedFlatView.of(tree2, {"row": P()}, sizes)
+    sops = ShardedFlatOps(view=sview, interpret=True, mesh=mesh)
+    placed2 = sops.place(sview.flatten(tree2))
+    assert placed2["float32"] is not tree2["row"]
+
+
+def test_flat_local_emits_packed_gradients(vision_setup):
+    """The flat-grad contract: the fused local fn takes/returns flat
+    buffers, and the params it trains match the tree local bit-for-bit
+    tolerance — i.e. d(loss∘unflatten)/d(bufs) == flatten(dloss/dtree)."""
+    from repro.fl.local import host_flat_ops, make_local_fn
+
+    task, data = vision_setup
+    spec = LocalSpec(n_steps=3, batch_size=8, lr=0.05, momentum=0.9,
+                     weight_decay=1e-4, grad_clip=1.0)
+    params = task.init(jax.random.PRNGKey(SEED))
+    x_all, y_all, _ = data.device_arrays()
+    key = jax.random.PRNGKey(7)
+
+    w_tree, aux_tree = make_local_fn(task, spec)(
+        key, params, {}, x_all[1], y_all[1], jnp.float32(1.0))
+
+    fspec = dc.replace(spec, update_impl="fused_interpret")
+    fops = host_flat_ops(task, True)
+    p_end, aux_flat = make_local_fn(task, fspec)(
+        key, fops.flatten(params), {}, x_all[1], y_all[1], jnp.float32(1.0))
+    assert set(p_end) == set(fops.flatten(params))     # flat in, flat out
+    np.testing.assert_allclose(float(aux_tree["loss"]),
+                               float(aux_flat["loss"]), atol=1e-5, rtol=1e-5)
+    _assert_tree_close(fops.unflatten(p_end), w_tree, 2e-5)
+
+
 # ---------------------------------------------------------------------------
 # pod backend: fused sequential delta accumulation + server moments
 # ---------------------------------------------------------------------------
@@ -197,3 +280,90 @@ def test_pod_fused_matches_tree(lm_setup, algorithm, server_opt, server_lr,
                                [h["local_loss"] for h in fused.history],
                                atol=1e-5, rtol=1e-5)
     _assert_tree_close(tree.params, fused.params, tol)
+
+
+# ---------------------------------------------------------------------------
+# multi-device: fused == tree under a REAL sharded FSDP×TP layout
+# ---------------------------------------------------------------------------
+
+_SHARDED_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import dataclasses as dc
+    import jax
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.data.synthetic import make_synthetic_tokenlm
+    from repro.fl.engine import RoundSchedule, run_rounds
+    from repro.fl.local import LocalSpec
+    from repro.fl.pod import PodAggregateStrategy, PodRelayStrategy
+    from repro.fl.simulation import HOST_RNG_OFFSET_P2
+    from repro.fl.task import lm_task
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    cfg = get_reduced("qwen1.5-0.5b")
+    task = lm_task(cfg)
+    data = make_synthetic_tokenlm(n_clients=8, seq_len=16,
+                                  n_seq_per_client=8,
+                                  vocab=cfg.vocab_size, beta=0.5, seed=0)
+    sched = lambda: RoundSchedule(rounds=2, lr_decay=1.0, eval_every=2,
+                                  eval_batch=8, seed=0, chunk_size=2,
+                                  sampling="host",
+                                  host_rng_offset=HOST_RNG_OFFSET_P2)
+    spec = LocalSpec(n_steps=2, batch_size=8, lr=0.01, momentum=0.9)
+    mk = lambda s: PodAggregateStrategy(
+        spec=s, algorithm="fedavg", mesh=mesh, clients_per_round=2,
+        server_opt="adam", server_lr=0.02)
+    fspec = dc.replace(spec, update_impl="fused_interpret")
+
+    # the carry buckets really shard over their mesh-axis groups
+    fops = mk(fspec).flat_ops(task)
+    sh = fops.shardings()
+    sharded = [n for n, s in sh.items() if any(ax is not None
+                                               for ax in s.spec)]
+    assert sharded, ("no sharded bucket", {n: s.spec for n, s in sh.items()})
+    bufs = fops.place(fops.flatten(task.init(jax.random.PRNGKey(0))))
+    for name in sharded:
+        spec0 = bufs[name].sharding.spec
+        assert spec0 and spec0[0] is not None, (name, spec0)
+
+    tree = run_rounds(task, data, mk(spec), sched())
+    fused = run_rounds(task, data, mk(fspec), sched())
+    np.testing.assert_allclose([h["local_loss"] for h in tree.history],
+                               [h["local_loss"] for h in fused.history],
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(tree.history[-1]["acc"],
+                               fused.history[-1]["acc"], atol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(tree.params),
+                    jax.tree_util.tree_leaves(fused.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-2, rtol=1e-2)
+
+    # P1 relay parity on the same mesh (flat relay carry)
+    mkr = lambda s: PodRelayStrategy(spec=s, mesh=mesh, clients_per_round=2)
+    rsched = lambda: RoundSchedule(rounds=2, lr_decay=1.0, eval_every=0,
+                                   seed=0, chunk_size=2, sampling="host",
+                                   host_rng_offset=31)
+    rt = run_rounds(task, data, mkr(spec), rsched())
+    rf = run_rounds(task, data, mkr(fspec), rsched())
+    np.testing.assert_allclose([h["local_loss"] for h in rt.history],
+                               [h["local_loss"] for h in rf.history],
+                               atol=1e-5, rtol=1e-5)
+    print("FUSED_SHARDED_PARITY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pod_fused_sharded_layout_parity_subprocess():
+    """fused == tree on the pod backend under a 4×4 FSDP×TP mesh: the
+    flat-first carries shard per mesh-axis bucket (no more fused/sharded
+    mutual exclusion) and both aggregate + relay rounds agree with the
+    tree oracle, in-program eval included."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_PARITY_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "FUSED_SHARDED_PARITY_OK" in out.stdout
