@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused
+.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -26,3 +26,6 @@ bench-pod:       ## pod-backend dispatch benchmark (chunked vs per-round)
 
 bench-fused:     ## fused flat-buffer update kernels vs tree_math
 	$(PY) -m benchmarks.perf_fused_update
+
+bench-store:     ## client-state store scaling (dense vs sparse)
+	$(PY) -m benchmarks.perf_client_store

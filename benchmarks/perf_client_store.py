@@ -1,0 +1,211 @@
+"""Client-state store scaling: dense population tables vs the
+participation-indexed sparse store.
+
+Stateful FL algorithms (scaffold, moon) keep per-client state.  The
+dense ``DenseClientStateStore`` materializes it as ``(n_clients, …)``
+stacks — O(population) device memory, which caps single-host simulation
+around 10^5 clients for even a toy model.  The sparse
+``SparseClientStateStore`` keeps a bounded ``(capacity, …)`` active-set
+table plus O(n_clients) int32 residency indices, spilling evicted rows
+to host memory — so device state scales with *participation*
+(``capacity`` ≳ chunk_size × K) instead of population.
+
+This benchmark sweeps n_clients ∈ {1e3, 1e4} (quick) ∪ {1e5, 1e6}
+(full) at fixed K=64 on a scaffold mlp sim and reports, per population:
+
+  state_mb   : actual bytes held by the c_clients store after a run
+               (dense: the stack; sparse: table + residency indices)
+  rounds/s   : end-to-end engine throughput, eval off, host sampling
+
+Dense rows above the device-state budget (1 GiB) are *gated*: reported
+analytically, not run — that infeasibility is the point.  At full
+scale the 10^6-client sparse row therefore runs where dense cannot.
+
+Regression gates (exit 1):
+  1. the sparse active-set table is byte-identical across populations —
+     memory O(capacity), not O(n_clients);
+  2. at the largest population, sparse total state (table + indices)
+     is ≥10× below the dense analytic requirement;
+  3. sparse throughput at the largest population stays within 2× of
+     dense at ITS largest feasible population (residency management
+     must not dominate the round loop).
+
+    PYTHONPATH=src python -m benchmarks.perf_client_store
+    PYTHONPATH=src python -m benchmarks.perf_client_store --scale full
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result, time_best_of
+from repro.data.federated import FederatedDataset
+from repro.fl.engine import (
+    AggregateStrategy,
+    RoundSchedule,
+    SparseClientStateStore,
+    run_rounds,
+)
+from repro.fl.local import LocalSpec
+from repro.fl.task import vision_task
+
+POPULATIONS = {"quick": (1_000, 10_000),
+               "full": (1_000, 10_000, 100_000, 1_000_000)}
+IMG = 4                       # 4×4×1 synthetic images: data stays small
+PER_CLIENT = 2                # samples per client
+D_HIDDEN = 128                # ≈3.5k params → dense scaffold state crosses
+                              # the 1 GiB budget between 1e4 and 1e5 clients
+DENSE_BUDGET_BYTES = 1 << 30
+
+
+def _make_data(n_clients: int, seed: int) -> FederatedDataset:
+    """Hand-built dataset — from_arrays' Dirichlet partition is O(n²)-ish
+    bookkeeping and pointless at 10^6 synthetic clients."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(
+        (n_clients, PER_CLIENT, IMG, IMG, 1), dtype=np.float32)
+    y = rng.integers(0, 10, size=(n_clients, PER_CLIENT)).astype(np.int32)
+    return FederatedDataset(
+        x=x, y=y, n_real=np.full((n_clients,), PER_CLIENT, np.int32),
+        test_x=x[0], test_y=y[0], n_classes=10,
+        name=f"store-bench-{n_clients}")
+
+
+def _state_row_bytes(task) -> int:
+    """Per-client scaffold state (a zeros_like-params row), in bytes."""
+    shapes = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def _store_bytes(store_state) -> Dict[str, int]:
+    if isinstance(store_state, dict) and "table" in store_state:
+        table = sum(l.nbytes for l in
+                    jax.tree_util.tree_leaves(store_state["table"]))
+        index = sum(store_state[k].nbytes
+                    for k in ("slot_of", "owner", "stamp"))
+        return {"table": table, "index": index, "total": table + index}
+    total = sum(l.nbytes for l in jax.tree_util.tree_leaves(store_state))
+    return {"table": total, "index": 0, "total": total}
+
+
+def _bench_one(task, data, store, *, clients_per_round: int, rounds: int,
+               repeats: int, seed: int) -> Dict:
+    spec = LocalSpec(n_steps=2, batch_size=PER_CLIENT, lr=0.05,
+                     variant="scaffold")
+    kwargs = {"state_store": store} if store is not None else {}
+    # fixed K at any population: participation = K / n
+    strat = AggregateStrategy(spec=spec, algorithm="scaffold",
+                              participation=clients_per_round / data.n_clients,
+                              **kwargs)
+    assert strat.n_selected(data.n_clients) == clients_per_round
+    sched = RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                          seed=seed, chunk_size=2, sampling="host",
+                          host_rng_offset=17)
+    res = run_rounds(task, data, strat, sched)          # compile + warm
+    secs = time_best_of(
+        lambda: jax.block_until_ready(jax.tree_util.tree_leaves(
+            run_rounds(task, data, strat, sched).params)), repeats)
+    bytes_ = _store_bytes(res.algo_state["c_clients"])
+    assert np.isfinite(res.history[-1]["local_loss"])
+    return {"secs": secs, "rounds_per_sec": rounds / secs, **bytes_}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=("quick", "full"))
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients-per-round", type=int, default=64)
+    ap.add_argument("--capacity", type=int, default=256,
+                    help="sparse active-set slots; must cover one dispatch "
+                    "(chunk_size × K distinct clients)")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.capacity < 2 * args.clients_per_round:
+        ap.error("--capacity must cover one dispatch (2 chunked rounds × K)")
+
+    task = vision_task("mlp", in_ch=1,
+                       seed_kwargs={"img": IMG, "d_hidden": D_HIDDEN})
+    row_bytes = _state_row_bytes(task)
+    print(f"[perf_client_store] scaffold row = {row_bytes} B/client, "
+          f"K={args.clients_per_round}, capacity={args.capacity}, "
+          f"dense budget = {DENSE_BUDGET_BYTES >> 20} MiB", flush=True)
+
+    rows: List[Dict] = []
+    for n in POPULATIONS[args.scale]:
+        data = _make_data(n, args.seed)
+        bench = dict(clients_per_round=args.clients_per_round,
+                     rounds=args.rounds, repeats=args.repeats,
+                     seed=args.seed)
+
+        dense_analytic = n * row_bytes
+        if dense_analytic <= DENSE_BUDGET_BYTES:
+            r = _bench_one(task, data, None, **bench)
+            rows.append({"store": "dense", "n_clients": n, "gated": False,
+                         "state_mb": round(r["total"] / 2**20, 2),
+                         "rounds_per_sec": round(r["rounds_per_sec"], 2)})
+        else:
+            rows.append({"store": "dense", "n_clients": n, "gated": True,
+                         "state_mb": round(dense_analytic / 2**20, 2),
+                         "rounds_per_sec": None})
+
+        r = _bench_one(task, data,
+                       SparseClientStateStore(capacity=args.capacity),
+                       **bench)
+        rows.append({"store": "sparse", "n_clients": n, "gated": False,
+                     "state_mb": round(r["total"] / 2**20, 2),
+                     "table_mb": round(r["table"] / 2**20, 2),
+                     "index_mb": round(r["index"] / 2**20, 2),
+                     "rounds_per_sec": round(r["rounds_per_sec"], 2)})
+        for row in rows[-2:]:
+            tag = "GATED (analytic)" if row["gated"] else \
+                f"{row['rounds_per_sec']:8.2f} rounds/s"
+            print(f"  {row['store']:6s} n={row['n_clients']:>9,d} "
+                  f"state={row['state_mb']:10.2f} MB  {tag}", flush=True)
+
+    print()
+    print(fmt_table(rows, ["store", "n_clients", "gated", "state_mb",
+                           "table_mb", "index_mb", "rounds_per_sec"]))
+    save_result(f"perf_client_store_{args.scale}",
+                {"config": vars(args), "row_bytes": row_bytes, "rows": rows})
+
+    # --- regression gates -------------------------------------------------
+    ok = True
+    sparse = [r for r in rows if r["store"] == "sparse"]
+    dense_run = [r for r in rows if r["store"] == "dense" and not r["gated"]]
+    dense_all = [r for r in rows if r["store"] == "dense"]
+
+    tables = {r["table_mb"] for r in sparse}
+    if len(tables) != 1:
+        print(f"[perf_client_store] REGRESSION: sparse table bytes vary "
+              f"with population {sorted(tables)} — the active set is no "
+              "longer O(capacity)", file=sys.stderr)
+        ok = False
+
+    big_sparse = max(sparse, key=lambda r: r["n_clients"])
+    big_dense = max(dense_all, key=lambda r: r["n_clients"])
+    if big_sparse["state_mb"] * 10 > big_dense["state_mb"]:
+        print(f"[perf_client_store] REGRESSION: sparse state "
+              f"{big_sparse['state_mb']} MB not ≥10× under dense "
+              f"{big_dense['state_mb']} MB at n={big_dense['n_clients']:,d}",
+              file=sys.stderr)
+        ok = False
+
+    ref = max(dense_run, key=lambda r: r["n_clients"])
+    if big_sparse["rounds_per_sec"] < 0.5 * ref["rounds_per_sec"]:
+        print(f"[perf_client_store] REGRESSION: sparse at "
+              f"n={big_sparse['n_clients']:,d} runs "
+              f"{big_sparse['rounds_per_sec']} rounds/s — more than 2× "
+              f"slower than dense at n={ref['n_clients']:,d} "
+              f"({ref['rounds_per_sec']} rounds/s)", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -93,16 +93,37 @@ ClientStateStore contract
 -------------------------
 Per-client algorithm state (SCAFFOLD control variates, Moon previous
 local models) lives behind a ``ClientStateStore`` so its residency is a
-backend decision, not an algorithm decision:
+backend decision, not an algorithm decision.  The state is an opaque
+pytree owned by the store; the round body only ever sees the K selected
+rows, which makes the stores representation-agnostic — the same store
+holds tree rows on the tree path and flat ``(N,)`` buffer-dict rows on
+the fused path:
 
-  init(template, n_clients)     -> stacked ``(n_clients, ...)`` state
+  init(template, n_clients)     -> the store's state pytree (eager,
+                                   once per engine run)
   gather(state, ids)            -> the selected K rows (inside jit)
-  shardings(p_specs, n, mesh)   -> placement tree for jit in_shardings
   scatter(state, ids, rows)     -> state with rows written back
+  population(state)             -> n_clients (the K/N scaffold fraction
+                                   must count the population, not the
+                                   store's physical rows)
+  shardings(template, n, mesh)  -> placement pytree for jit
+                                   in_shardings (None on the host)
+  needs_host_ids                -> class attr; True if the store must
+                                   see the NEXT dispatch's client ids
+                                   before the chunk runs
+  prepare_chunk(state, ids)     -> host-side residency step run between
+                                   dispatches when ``needs_host_ids``
+                                   (no-op for dense stores)
 
 ``DenseClientStateStore`` keeps the dense host stacks (seed semantics);
-``repro.fl.pod.ShardedClientStateStore`` shards the leading client axis
-over the mesh ``data`` axis so scaffold/moon run at pod scale without a
+``SparseClientStateStore`` is the participation-indexed store — a
+bounded ``(capacity, ...)`` active-set table plus an id→slot index,
+with LRU eviction and host-spilled cold rows, so state memory scales
+with *participation* (capacity) instead of population and million-client
+populations fit where the dense stacks OOM.
+``repro.fl.pod.ShardedClientStateStore`` /
+``ShardedSparseClientStateStore`` shard the leading row axis over the
+mesh ``data`` axis so scaffold/moon run at pod scale without a
 replicated (n_clients, model) blow-up.
 """
 from __future__ import annotations
@@ -189,9 +210,12 @@ def unpack_server_state(fops: FlatParamOps, state: Any) -> Any:
 class DenseClientStateStore:
     """Per-client state as dense host stacks — the seed representation.
 
-    All three ops are jit-traceable; ``init`` runs eagerly once per
-    engine run.  See the module docstring for the full contract.
+    gather/scatter are jit-traceable; ``init`` runs eagerly once per
+    engine run.  See the module docstring for the full contract.  This
+    store is the parity oracle for :class:`SparseClientStateStore`.
     """
+
+    needs_host_ids = False
 
     def init(self, template: Pytree, n_clients: int) -> Pytree:
         return stack_copies(template, n_clients)
@@ -202,11 +226,185 @@ class DenseClientStateStore:
     def scatter(self, state: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
         return tree_set_rows(state, ids, rows)
 
-    def shardings(self, p_specs: Pytree, n_clients: int, mesh) -> Any:
+    def population(self, state: Pytree) -> int:
+        return jax.tree_util.tree_leaves(state)[0].shape[0]
+
+    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
+        return state                    # dense rows are always resident
+
+    def shardings(self, template: Pytree, n_clients: int, mesh) -> Any:
         return None                     # host: no placement constraint
 
 
 DENSE_STORE = DenseClientStateStore()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SparseClientStateStore:
+    """Participation-indexed per-client state: a bounded active-set
+    table instead of a dense population stack.
+
+    The state pytree is ``{"table", "slot_of", "owner", "stamp"}``:
+    ``table`` stacks ``capacity`` rows of the per-client template,
+    ``slot_of`` is the ``(n_clients,)`` id→slot index (−1 = cold),
+    ``owner``/``stamp`` the ``(capacity,)`` slot→id back-map and LRU
+    clock.  gather/scatter run inside jit over *slots* — O(capacity)
+    device memory however large the population — while residency is
+    managed eagerly between dispatches by :meth:`prepare_chunk`: the
+    engine replays the upcoming chunk's client ids on the host
+    (``needs_host_ids``), cold participants are faulted in (evicting
+    the least-recently-used non-participating slots), and evicted live
+    rows spill to host memory via ``jax.device_put`` to the CPU device
+    (``spill=False`` drops them instead — a documented *forgetful*
+    mode that trades parity for zero host traffic).
+
+    ``capacity`` must cover the distinct participants of one dispatch
+    (chunk_size × K in the worst case); prepare_chunk raises otherwise.
+    Eager members (the spill dict, the refill template) make this store
+    identity-hashed (``eq=False``), which is exactly what the chunk
+    cache wants — two stores are two cache entries.
+    """
+
+    capacity: int
+    spill: bool = True
+    _cold: dict = dataclasses.field(default_factory=dict, repr=False)
+    _meta: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    needs_host_ids = True
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError("SparseClientStateStore capacity must be >= 1")
+
+    def init(self, template: Pytree, n_clients: int) -> Pytree:
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self._cold.clear()
+        self._meta["treedef"] = treedef
+        self._meta["template"] = [np.asarray(leaf) for leaf in leaves]
+        cap = max(1, min(self.capacity, n_clients))
+        return {
+            "table": stack_copies(template, cap),
+            "slot_of": jnp.full((n_clients,), -1, jnp.int32),
+            "owner": jnp.full((cap,), -1, jnp.int32),
+            "stamp": jnp.zeros((cap,), jnp.int32),
+        }
+
+    def gather(self, state: Pytree, ids: jnp.ndarray) -> Pytree:
+        # residency is a precondition: prepare_chunk ran for these ids
+        return tree_rows(state["table"], state["slot_of"][ids])
+
+    def scatter(self, state: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
+        slots = state["slot_of"][ids]
+        return dict(state, table=tree_set_rows(state["table"], slots, rows))
+
+    def population(self, state: Pytree) -> int:
+        return state["slot_of"].shape[0]
+
+    def shardings(self, template: Pytree, n_clients: int, mesh) -> Any:
+        return None                     # host flavor: no constraint
+
+    # -- host-side residency (eager, between dispatches) --------------------
+
+    def _spill_rows(self, table: Pytree, victims, evicted) -> None:
+        live = evicted >= 0
+        if not np.any(live):
+            return
+        rows = tree_rows(table, jnp.asarray(victims[live]))
+        if self.spill:
+            try:                        # cold rows live on the CPU device
+                rows = jax.device_put(rows, jax.devices("cpu")[0])
+            except RuntimeError:
+                pass                    # no CPU device: plain host arrays
+            row_leaves = [np.asarray(leaf)
+                          for leaf in jax.tree_util.tree_leaves(rows)]
+            for j, cid in enumerate(evicted[live]):
+                self._cold[int(cid)] = [leaf[j] for leaf in row_leaves]
+
+    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
+        ids = np.unique(np.asarray(ids_block))
+        slot_of = state["slot_of"]
+        slots_ids = np.asarray(slot_of[jnp.asarray(ids)])  # O(block) gather
+        owner = np.asarray(state["owner"]).copy()
+        stamp = np.asarray(state["stamp"]).copy()
+        cap = owner.shape[0]
+        miss = ids[slots_ids < 0]
+        table = state["table"]
+        if miss.size:
+            resident = slots_ids[slots_ids >= 0]
+            cand = np.setdiff1d(np.arange(cap), resident)
+            # free slots first, then coldest-first among the owned ones
+            order = np.argsort(np.where(owner[cand] < 0, -1, stamp[cand]),
+                               kind="stable")
+            cand = cand[order]
+            if miss.size > cand.size:
+                raise ValueError(
+                    f"store capacity {cap} cannot hold the {ids.size} "
+                    f"distinct clients of the next dispatch "
+                    f"({miss.size} cold, {cand.size} evictable slots) — "
+                    f"raise --store-capacity above chunk_size × K")
+            victims = cand[:miss.size]
+            evicted = owner[victims]
+            self._spill_rows(table, victims, evicted)
+            # refill: spilled row if the client was seen before, else the
+            # init template
+            tmpl = self._meta["template"]
+            fill = [self._cold.pop(int(cid), tmpl) for cid in miss]
+            stacked = [np.stack([row[i] for row in fill])
+                       for i in range(len(tmpl))]
+            rows_tree = jax.tree_util.tree_unflatten(
+                self._meta["treedef"], [jnp.asarray(s) for s in stacked])
+            table = tree_set_rows(table, jnp.asarray(victims), rows_tree)
+            gone = evicted[evicted >= 0]
+            if gone.size:
+                slot_of = slot_of.at[jnp.asarray(gone)].set(-1)
+            slot_of = slot_of.at[jnp.asarray(miss)].set(
+                jnp.asarray(victims, jnp.int32))
+            owner[victims] = miss
+        # touch every participant's slot so the LRU order tracks rounds
+        stamp[np.asarray(slot_of[jnp.asarray(ids)])] = int(stamp.max()) + 1
+        return {"table": table, "slot_of": slot_of,
+                "owner": jnp.asarray(owner), "stamp": jnp.asarray(stamp)}
+
+    # -- debugging / parity helper ------------------------------------------
+
+    def to_dense(self, state: Pytree) -> Pytree:
+        """Materialize the full ``(n_clients, ...)`` stack (hot rows from
+        the table, cold rows from the spill dict, template otherwise) —
+        test/debug only; defeats the point at scale."""
+        slot_of = np.asarray(state["slot_of"])
+        n = slot_of.shape[0]
+        tmpl = self._meta["template"]
+        table_leaves = [np.asarray(leaf) for leaf
+                        in jax.tree_util.tree_leaves(state["table"])]
+        out = [np.broadcast_to(leaf, (n,) + leaf.shape).copy()
+               for leaf in tmpl]
+        for cid in range(n):
+            slot = slot_of[cid]
+            row = table_leaves if slot >= 0 else self._cold.get(cid)
+            if row is None:
+                continue
+            for i in range(len(out)):
+                out[i][cid] = row[i][slot] if slot >= 0 else row[i]
+        return jax.tree_util.tree_unflatten(
+            self._meta["treedef"], [jnp.asarray(o) for o in out])
+
+
+def _replay_device_sampling(key, n_clients: int, K: int, R: int) -> np.ndarray:
+    """Replay the chunk's in-program client draws on the host: the chunk
+    derives round r's selection key by the fixed split recurrence below
+    (see ``_cached_chunk_fn.one_round``), and threefry is deterministic,
+    so the replay is bit-identical to what the next dispatch will draw.
+    Sparse stores use this under ``sampling="device"`` to fault rows in
+    *before* the chunk runs — residency only, the program itself still
+    draws its ids in-program, unchanged.  Costs O(R · n_clients) host
+    work per chunk; prefer ``sampling="host"`` at very large n_clients.
+    """
+    out = []
+    for _ in range(R):
+        key, rk = jax.random.split(key)
+        k_sel, _ = jax.random.split(rk)
+        out.append(np.asarray(jax.random.permutation(k_sel, n_clients)[:K]))
+    return np.stack(out)
 
 
 class HostBackend:
@@ -233,6 +431,12 @@ class HostBackend:
 
     def place_server_state(self, state: Pytree, task: Task) -> Pytree:
         return state
+
+    def prepare_chunk_state(self, algo_state: Dict, ids_block) -> Dict:
+        """Hook run before every chunk dispatch when the strategy's
+        store needs host-side residency management (see the
+        ClientStateStore contract); the default is a no-op."""
+        return algo_state
 
     def jit_chunk(self, chunk: Callable, task: Task,
                   n_clients: int) -> Callable:
@@ -308,14 +512,30 @@ class AggregateStrategy(HostBackend):
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
 
+    # the store key each algorithm keeps its per-client rows under
+    _STORE_KEYS = {"scaffold": "c_clients", "moon": "w_prev"}
+
     def init_state(self, task: Task, params: Pytree, n_clients: int) -> Dict:
+        # flat-first: ``params`` arrive as the engine's placed flat
+        # buffers, so the per-client state is flat too — the store is
+        # representation-agnostic and the round bodies below run the
+        # scaffold/moon state algebra directly on the (K, N) row buffers
+        fops = self.flat_ops(task)
         if self.algorithm == "scaffold":
-            zeros = tm.zeros_like(params)
+            zeros = fops.zeros() if fops is not None else tm.zeros_like(params)
             return {"c_global": zeros,
                     "c_clients": self.state_store.init(zeros, n_clients)}
         if self.algorithm == "moon":
             return {"w_prev": self.state_store.init(params, n_clients)}
         return {}
+
+    def prepare_chunk_state(self, algo_state: Dict, ids_block) -> Dict:
+        store = self.state_store
+        key = self._STORE_KEYS.get(self.algorithm)
+        if key is None or not getattr(store, "needs_host_ids", False):
+            return algo_state
+        return dict(algo_state,
+                    **{key: store.prepare_chunk(algo_state[key], ids_block)})
 
     def make_server_update(self, task: Optional[Task] = None
                            ) -> Optional[Tuple[Callable, Callable]]:
@@ -431,27 +651,42 @@ class AggregateStrategy(HostBackend):
             if algo == "scaffold":
                 c, c_all = algo_state["c_global"], algo_state["c_clients"]
                 c_i = store.gather(c_all, ids)
-                # per-client extras carry (c − c_i) with a leading K axis
-                c_diff = jax.tree_util.tree_map(
-                    lambda g, l: jnp.broadcast_to(g[None], l.shape) - l, c, c_i)
-                extras = {"c_diff": c_diff}
-                w_locals, aux = jax.vmap(
-                    local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None))(
-                    keys, params, extras, cx, cy, lr_scale)
-                # the control-variate algebra stays tree-form (the state
-                # store holds trees); only the aggregation is flat
-                w_trees = stacked_unpack(w_locals)
-                p_tree = unpack(params)
                 # control-variate update (option II):
                 # c_i⁺ = c_i − c + (w−w_i)/(S·lr)
                 denom = spec.n_steps * spec.lr * lr_scale
-                c_i_new = jax.tree_util.tree_map(
-                    lambda ci, cg, w, wl: ci - cg[None] + (w[None] - wl) / denom,
-                    c_i, c, p_tree, w_trees)
+                if fops is not None:
+                    # FLAT per-client state: c and the gathered (K, N)
+                    # rows are buffer dicts, the whole control-variate
+                    # algebra runs on the stacked buffers — no
+                    # per-client unflatten anywhere in the round
+                    c_diff = jax.tree_util.tree_map(
+                        lambda g, l: g[None] - l, c, c_i)
+                    w_locals, aux = jax.vmap(
+                        local, in_axes=(0, None, {"c_diff_flat": 0}, 0, 0,
+                                        None))(
+                        keys, params, {"c_diff_flat": c_diff}, cx, cy,
+                        lr_scale)
+                    c_i_new = jax.tree_util.tree_map(
+                        lambda ci, cg, p, wl: ci - cg[None] +
+                        (p[None] - wl) / denom,
+                        c_i, c, params, w_locals)
+                else:
+                    # per-client extras carry (c − c_i) with a leading K axis
+                    c_diff = jax.tree_util.tree_map(
+                        lambda g, l: jnp.broadcast_to(g[None], l.shape) - l,
+                        c, c_i)
+                    extras = {"c_diff": c_diff}
+                    w_locals, aux = jax.vmap(
+                        local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None))(
+                        keys, params, extras, cx, cy, lr_scale)
+                    c_i_new = jax.tree_util.tree_map(
+                        lambda ci, cg, w, wl: ci - cg[None] +
+                        (w[None] - wl) / denom,
+                        c_i, c, params, w_locals)
                 new_params = aggregate(params, w_locals, weights)
-                # c ← c + (K/N)·mean_i(c_i⁺ − c_i)
-                n_clients = jax.tree_util.tree_leaves(c_all)[0].shape[0]
-                frac = K / n_clients
+                # c ← c + (K/N)·mean_i(c_i⁺ − c_i); N is the POPULATION
+                # (the sparse store's physical table is only capacity rows)
+                frac = K / store.population(c_all)
                 c_new = jax.tree_util.tree_map(
                     lambda cg, new, old: cg + frac * jnp.mean(new - old, axis=0),
                     c, c_i_new, c_i)
@@ -461,15 +696,17 @@ class AggregateStrategy(HostBackend):
 
             if algo == "moon":
                 w_prev_all = algo_state["w_prev"]
-                w_prev = store.gather(w_prev_all, ids)
+                # flat path: rows gather/scatter as raw (K, N) buffers —
+                # ONE stacked unflatten at the loss boundary (extras are
+                # trees), zero per-client packing on the way back
+                w_prev = stacked_unpack(store.gather(w_prev_all, ids))
                 extras = {"w_global": unpack(params), "w_prev": w_prev}
                 w_locals, aux = jax.vmap(
                     local,
                     in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
                 new_params = aggregate(params, w_locals, weights)
-                state = {"w_prev": store.scatter(w_prev_all, ids,
-                                                 stacked_unpack(w_locals))}
+                state = {"w_prev": store.scatter(w_prev_all, ids, w_locals)}
                 return new_params, state, jnp.mean(aux["loss"])
 
             raise ValueError(f"unknown algorithm {algo!r}")
@@ -725,12 +962,14 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
         # backend hook: copy (host) or device_put with shardings (pod) so
         # the donated carries never invalidate the caller's init_params
         params = strategy.place_params(params)
+    else:
+        # pack + place FIRST: init_state sees the engine's working
+        # representation, so per-client state initializes flat too
+        params = fops.place(fops.flatten(params))
 
     n_clients = data.n_clients
     K = strategy.n_selected(n_clients)
     algo_state = strategy.init_state(task, params, n_clients)
-    if fops is not None:
-        params = fops.place(fops.flatten(params))
     server = strategy.make_server_update(task)
     server_state = server[0](params) if server is not None else ()
     server_state = strategy.place_server_state(server_state, task)
@@ -754,6 +993,11 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     # per-round switch decisions need per-round dispatch
     chunk = 1 if switch_policy is not None else max(1, schedule.chunk_size)
 
+    # sparse stores manage residency on the host between dispatches: they
+    # must see each chunk's client ids before the chunk runs
+    store = getattr(strategy, "state_store", None)
+    sparse_residency = bool(getattr(store, "needs_host_ids", False))
+
     history: List[Dict[str, float]] = []
     rnd = 0
     dispatches = 0
@@ -764,6 +1008,15 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
             ids = jnp.asarray(np.stack([
                 host_rng.choice(n_clients, size=K, replace=False)
                 for _ in range(R)]))
+        if sparse_residency and algo_state:
+            # host sampling: the ids are already known; device sampling:
+            # replay the chunk's in-program draw (bit-identical threefry
+            # recurrence) — residency only, the program still samples
+            # in-program unchanged
+            ids_block = (np.asarray(ids) if ids is not None else
+                         _replay_device_sampling(key, n_clients, K, R))
+            algo_state = strategy.prepare_chunk_state(
+                algo_state, ids_block.reshape(-1))
         lr_scales = jnp.asarray(
             [schedule.lr_decay ** (rnd + j) for j in range(R)], jnp.float32)
         # the eval cadence is a host-computed mask over GLOBAL round
@@ -803,6 +1056,9 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     if fops is not None:                # EngineResult speaks trees
         params = fops.unflatten(params)
         server_state = unpack_server_state(fops, server_state)
+        # algo_state stays in the carried representation (flat row
+        # buffers / sparse store tables) — materializing an
+        # (n_clients, model) tree here would defeat the sparse store
     return EngineResult(params=params, history=history,
                         algo_state=algo_state, server_state=server_state,
                         dispatches=dispatches)

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.fl.task import Task
 from repro.kernels import ops
+from repro.kernels.fused_update import GRID_ALIGN
 from repro.utils import tree_math as tm
 from repro.utils.flatten import FlatView
 
@@ -130,18 +131,48 @@ class FlatParamOps:
     def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
         return self.view.unflatten(bufs)
 
+    @staticmethod
+    def _pad_len(n: int) -> int:
+        """Next GRID_ALIGN multiple ≥ n — the buffer length at which the
+        kernel wrappers' per-call row pad degenerates to a reshape."""
+        return -(-n // GRID_ALIGN) * GRID_ALIGN if n else 0
+
+    @property
+    def padded_sizes(self) -> Dict[str, int]:
+        """Per-bucket carried length: logical size rounded up to the
+        kernel grid, so every kernel call over a carried buffer hits the
+        pad==0 fast path."""
+        return {name: self._pad_len(size)
+                for name, size in self.view.buffer_sizes.items()}
+
+    def pad(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Right-pad each buffer's last axis up to the next GRID_ALIGN
+        multiple (no-op on already-padded buffers).  Pad lanes start —
+        and, by the kernel invariant, stay — zero, and unflatten reads
+        only the logical prefix, so padded buffers flow through every
+        dict-level op unchanged."""
+        def _p(b):
+            target = self._pad_len(b.shape[-1])
+            if target == b.shape[-1]:
+                return b
+            widths = [(0, 0)] * (b.ndim - 1) + [(0, target - b.shape[-1])]
+            return jnp.pad(b, widths)
+        return {name: _p(b) for name, b in bufs.items()}
+
     def zeros(self, dtype=None) -> Dict[str, jnp.ndarray]:
-        return self.view.zeros(dtype)
+        return self.pad(self.view.zeros(dtype))
 
     def place(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
         """Commit freshly packed buffers to their home placement AND
         guarantee they do not alias the caller's arrays — flatten is a
         NO-OP for a bucket holding exactly one 1-D leaf (concatenate of
         one array returns the operand), and the engine donates its
-        carries, which would delete the caller's leaf.  Host: copy
-        (same cost as the tree path's place_params); pod: device_put
-        with the per-bucket shardings, copying any passthrough."""
-        return jax.tree_util.tree_map(jnp.array, bufs)
+        carries, which would delete the caller's leaf.  Placement also
+        pads to the kernel grid: carries enter the chunk pre-padded and
+        every later kernel call skips its pad copy.  Host: copy (same
+        cost as the tree path's place_params); pod: device_put with the
+        per-bucket shardings, copying any passthrough."""
+        return jax.tree_util.tree_map(jnp.array, self.pad(bufs))
 
     def shardings(self):
         """Per-bucket placement for jit in/out shardings (host: None)."""
@@ -367,9 +398,18 @@ def make_local_fn(task: Task, spec: LocalSpec,
     def local_fused(key: jax.Array, p_start: Dict, extras: Dict[str, Pytree],
                     cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
         n_data = cx.shape[0]
-        m0 = flat_ops.zeros() if spec.momentum else {}
-        c_bufs = (flat_ops.flatten(extras["c_diff"])
-                  if spec.variant == "scaffold" else None)
+        # momentum mirrors the incoming buffers exactly (padded or not),
+        # so the scan carry is shape-consistent however p_start arrived
+        m0 = ({name: jnp.zeros_like(b) for name, b in p_start.items()}
+              if spec.momentum else {})
+        if spec.variant != "scaffold":
+            c_bufs = None
+        elif "c_diff_flat" in extras:
+            # flat-state store: the correction is already a buffer dict
+            # in carry layout — no per-client flatten
+            c_bufs = extras["c_diff_flat"]
+        else:
+            c_bufs = flat_ops.pad(flat_ops.flatten(extras["c_diff"]))
 
         # differentiate w.r.t. the FLAT buffers: the tree materializes
         # only here, inside the loss closure, so the backward's

@@ -21,13 +21,27 @@ the same key derivation, on-device client sampling and chunked
     inside the program and scattered back — scaffold/moon at pod scale
     without replicating an (n_clients, model) tensor.
 
-P2 aggregation differs from the host backend in schedule only: clients
-run *sequentially* (``lax.scan``) accumulating a weighted f32 delta —
-at LLM scale a per-client parameter copy per vmap lane is exactly what
-does not fit, so peak memory is ~2×params independent of K, and the
-delta accumulation IS the FedAvg all-reduce on the mesh.  The math is
-identical to the host vmap+weighted-mean path, which is what the
-host↔pod parity tests pin down.
+P2 aggregation differs from the host backend in schedule only.  The
+default topology runs clients *sequentially* (``lax.scan``)
+accumulating a weighted f32 delta — at LLM scale a per-client parameter
+copy per vmap lane is exactly what does not fit, so peak memory is
+~2×params independent of K, and the delta accumulation IS the FedAvg
+all-reduce on the mesh.  ``aggregation="hierarchical"`` trades memory
+back for critical path: clients group into ``n_pods`` pods (default:
+the mesh ``data``-axis size), each pod accumulates a shard-local
+partial delta over its own clients (one vmap lane per pod), and a
+single cross-pod combine — one per-bucket sum over the lane partials —
+produces the global delta, cutting the aggregation critical path from
+O(K) to O(K/n_pods) local runs (see PodAggregateStrategy).  Either way
+the math is identical to the host vmap+weighted-mean path up to
+summation order, which is what the host↔pod parity tests pin down.
+
+Per-client algorithm state scales past dense populations the same way
+the host engine does: ``PodFLConfig(store="sparse")`` swaps the dense
+``ShardedClientStateStore`` for ``ShardedSparseClientStateStore`` — the
+participation-indexed ``(capacity, ...)`` active-set table of
+repro.fl.engine with its row axis sharded over the mesh ``data`` axis,
+LRU residency managed on the host between chunk dispatches.
 
 The delta accumulation (and the whole client step tail) has two
 implementations behind ``PodFLSpec.update_impl``: the per-leaf
@@ -82,6 +96,7 @@ from repro.fl.engine import (
     AggregateStrategy,
     RelayStrategy,
     RoundSchedule,
+    SparseClientStateStore,
     run_rounds,
     stack_copies,
     tree_rows,
@@ -167,13 +182,62 @@ class ShardedClientStateStore:
         out = tree_set_rows(state, ids, rows)
         return jax.lax.with_sharding_constraint(out, self._shardings(out))
 
-    def shardings(self, p_specs: Pytree, n_clients: int, mesh=None) -> Pytree:
+    needs_host_ids = False
+
+    def population(self, state: Pytree) -> int:
+        return jax.tree_util.tree_leaves(state)[0].shape[0]
+
+    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
+        return state
+
+    def shardings(self, template: Pytree, n_clients: int, mesh=None) -> Pytree:
         mesh = mesh or self.mesh
         return jax.tree_util.tree_map(
             lambda leaf: jax.sharding.NamedSharding(
                 mesh, rules.client_axis_pspec(mesh, len(leaf.shape) + 1,
                                               n_clients)),
-            p_specs)
+            template)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedSparseClientStateStore(SparseClientStateStore):
+    """The participation-indexed store on a mesh: the active-set table
+    shards its ``capacity`` row axis over the mesh ``data`` axis (same
+    policy as the dense sharded store, applied to slots instead of
+    clients); the id→slot index and the LRU bookkeeping replicate —
+    they are O(n_clients)·int32 and O(capacity), negligible next to one
+    model row.  Residency (:meth:`prepare_chunk`) still runs eagerly on
+    the host between dispatches; the rebuilt state re-pins itself so
+    the donated chunk carry keeps the mesh layout."""
+    mesh: Any = None
+
+    def _state_shardings(self, state: Pytree) -> Pytree:
+        rep = rules.replicated(self.mesh)
+        return {"table": rules.client_axis_shardings(state["table"], self.mesh),
+                "slot_of": rep, "owner": rep, "stamp": rep}
+
+    def init(self, template: Pytree, n_clients: int) -> Pytree:
+        state = super().init(template, n_clients)
+        return jax.device_put(state, self._state_shardings(state))
+
+    def scatter(self, state: Pytree, ids: jnp.ndarray, rows: Pytree) -> Pytree:
+        out = super().scatter(state, ids, rows)
+        return jax.lax.with_sharding_constraint(
+            out, self._state_shardings(out))
+
+    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
+        new = super().prepare_chunk(state, ids_block)
+        return jax.device_put(new, self._state_shardings(new))
+
+    def shardings(self, template: Pytree, n_clients: int, mesh=None) -> Pytree:
+        mesh = mesh or self.mesh
+        cap = max(1, min(self.capacity, n_clients))
+        rep = rules.replicated(mesh)
+        table = jax.tree_util.tree_map(
+            lambda leaf: jax.sharding.NamedSharding(
+                mesh, rules.client_axis_pspec(mesh, len(leaf.shape) + 1, cap)),
+            template)
+        return {"table": table, "slot_of": rep, "owner": rep, "stamp": rep}
 
 
 # ---------------------------------------------------------------------------
@@ -197,11 +261,14 @@ class ShardedFlatOps(FlatParamOps):
     mesh: Any = None
 
     def place(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        # pad each bucket's per-shard axis to the kernel grid (so the
+        # shard-local kernel calls skip their pad copy), then device_put.
         # device_put is a NO-OP (returns its operand) on matching
         # placement, and the shard transform itself passes (1, N)-shaped
         # unsharded leaves straight through — copy any passthrough so
         # the engine's donated carries never delete a caller's array
         # (same hazard as PodBackendMixin._put_unaliased)
+        bufs = self.pad(bufs)
         placed = jax.device_put(bufs, self.shardings())
         return jax.tree_util.tree_map(
             lambda orig, out: jnp.copy(out) if out is orig else out,
@@ -227,7 +294,9 @@ class ShardedFlatOps(FlatParamOps):
         bspec = rules.flat_buffer_pspec(group)
         scalars = tuple(jnp.asarray(s, jnp.float32) if not hasattr(s, "dtype")
                         else s for s in scalars)
-        local = [jax.ShapeDtypeStruct((group.size,), b.dtype) for b in bufs]
+        # per-shard length from the buffer itself, not group.size — the
+        # carried buffers are pre-padded to the kernel grid
+        local = [jax.ShapeDtypeStruct((b.shape[-1],), b.dtype) for b in bufs]
         sc_specs = [jax.ShapeDtypeStruct(jnp.shape(s), s.dtype)
                     for s in scalars]
         n_out = len(jax.eval_shape(fn, *local, *sc_specs))
@@ -323,7 +392,8 @@ class PodBackendMixin:
             return state
         return self._put_unaliased(state, self.server_state_shardings(task))
 
-    def state_shardings(self, p_specs: Pytree, n_clients: int) -> Dict:
+    def state_shardings(self, task: Task, p_specs: Pytree,
+                        n_clients: int) -> Dict:
         return {}
 
     def server_state_shardings(self, task: Task) -> Any:
@@ -365,7 +435,7 @@ class PodBackendMixin:
         p_sh = fops.shardings() if fops is not None else \
             rules.param_shardings(p_specs, self.mesh, self.layout)
         rep = rules.replicated(self.mesh)
-        st_sh = self.state_shardings(p_specs, n_clients)
+        st_sh = self.state_shardings(task, p_specs, n_clients)
         srv_sh = self.server_state_shardings(task)
         # chunk args: (key, params, algo_state, server_state, x_all,
         #              y_all, n_real, ids, lr_scales, eval_mask, ev_x,
@@ -412,37 +482,79 @@ class PodRelayStrategy(PodBackendMixin, RelayStrategy):
         return body
 
 
+POD_AGGREGATIONS = ("sequential", "hierarchical")
+
+
 @dataclasses.dataclass(frozen=True)
 class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
-    """P2 on the mesh: sequential client scan + weighted f32 delta
-    accumulation (peak memory independent of K), algorithm state behind
-    a data-axis-sharded ClientStateStore, server-side optimizers
-    (``server_opt="momentum"|"adam"``) with param-sharded moments.
-    Numerically matches the host vmap backend round-for-round."""
+    """P2 on the mesh: client scan + weighted f32 delta accumulation,
+    algorithm state behind a data-axis-sharded ClientStateStore,
+    server-side optimizers (``server_opt="momentum"|"adam"``) with
+    param-sharded moments.  Numerically matches the host vmap backend
+    round-for-round.
+
+    Two aggregation topologies:
+
+      sequential   : one ``lax.scan`` over all K clients accumulating
+                     the delta — peak memory ~2×params independent of
+                     K, aggregation critical path O(K).
+      hierarchical : TWO-LEVEL — clients are grouped into ``n_pods``
+                     (default: the mesh ``data``-axis size) pods; an
+                     outer scan of K/G steps runs G clients at a time
+                     (one vmap lane per pod), each lane accumulating
+                     its own shard-local partial ``fused_delta_accum``,
+                     and ONE cross-pod combine (a per-bucket sum over
+                     the G lane partials, which lowers to a psum when
+                     the lane axis is device-sharded) produces the
+                     global weighted delta.  Critical path O(K/G) local
+                     runs + one combine, at the cost of G× the f32
+                     delta buffers and G× the lane activations — the
+                     lanes are deliberately left unsharded so they
+                     never conflict with the bucket axes.  Summation
+                     order differs from sequential (per-pod partials,
+                     then one sum), so results match up to float
+                     reassociation.
+    """
     mesh: Any = None
     layout: str = "fsdp_tp"
     clients_per_round: Optional[int] = None
+    aggregation: str = "sequential"     # sequential | hierarchical
+    n_pods: Optional[int] = None        # None: mesh data-axis size
 
     def __post_init__(self):
         if self.mesh is None:
             raise ValueError("PodAggregateStrategy requires a mesh")
         if self.algorithm not in POD_ALGORITHMS:
             raise ValueError(f"unknown pod algorithm {self.algorithm!r}")
+        if self.aggregation not in POD_AGGREGATIONS:
+            raise ValueError(f"unknown aggregation {self.aggregation!r} "
+                             f"(choose from {POD_AGGREGATIONS})")
         if self.state_store is DENSE_STORE:
             object.__setattr__(self, "state_store",
                                ShardedClientStateStore(self.mesh))
 
-    def state_shardings(self, p_specs: Pytree, n_clients: int) -> Dict:
+    def _n_pods(self) -> int:
+        if self.n_pods:
+            return int(self.n_pods)
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return max(1, sizes.get(rules.DATA, 1))
+
+    def state_shardings(self, task: Task, p_specs: Pytree,
+                        n_clients: int) -> Dict:
         store = self.state_store
         if not hasattr(store, "shardings"):
             return {}
-        stacked = store.shardings(p_specs, n_clients, self.mesh)
+        fops = self.flat_ops(task)
+        # the store rows mirror the engine's carried representation:
+        # flat bucket dicts on the fused path, param trees otherwise
+        template = jax.eval_shape(fops.zeros) if fops is not None else p_specs
+        stacked = store.shardings(template, n_clients, self.mesh)
         if stacked is None:
             return {}
         if self.algorithm == "scaffold":
-            return {"c_global": rules.param_shardings(p_specs, self.mesh,
-                                                      self.layout),
-                    "c_clients": stacked}
+            c_sh = fops.shardings() if fops is not None else \
+                rules.param_shardings(p_specs, self.mesh, self.layout)
+            return {"c_global": c_sh, "c_clients": stacked}
         if self.algorithm == "moon":
             return {"w_prev": stacked}
         return {}
@@ -456,6 +568,7 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         fused = fops is not None
         p_sh = fops.shardings() if fused else self._param_shardings(task)
         unpack = fops.unflatten if fused else (lambda t: t)
+        G = self._n_pods() if self.aggregation == "hierarchical" else 1
 
         def pin(t):
             return jax.lax.with_sharding_constraint(t, p_sh)
@@ -474,7 +587,8 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                 # sharded buffer dicts; each client's contribution and
                 # the final apply run shard-locally, one blocked kernel
                 # per bucket (ShardedFlatOps)
-                delta0 = fops.zeros(jnp.float32)
+                def zeros_delta():
+                    return fops.zeros(jnp.float32)
 
                 def add_delta(delta, w_end, w_i):
                     return fops.delta_accum(delta, w_end, params,
@@ -483,8 +597,9 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                 def apply_delta(params_, delta):
                     return fops.apply_delta(params_, delta)
             else:
-                delta0 = jax.tree_util.tree_map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                def zeros_delta():
+                    return jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
                 def add_delta(delta, w_end, w_i):
                     # the running weighted delta sum IS the FedAvg all-reduce
@@ -498,70 +613,132 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                         lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
                         params_, delta)
 
+            # -- per-algorithm client step -------------------------------
+            # client(k, cxi, cyi, row) -> (w_end, out, loss): ``row`` is
+            # this client's state-store row (() when stateless), ``out``
+            # the row to scatter back (() when none).  The aggregation
+            # topologies below are generic over it.
             if algo in ("fedavg", "fedprox"):
                 anchor = unpack(params) if algo == "fedprox" else None
+                rows = ()
 
-                def one_client(delta, inp):
-                    k, cxi, cyi, w_i = inp
+                def client(k, cxi, cyi, row):
                     extras = {"w_global": anchor} if algo == "fedprox" else {}
                     w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
-                    return add_delta(delta, w_end, w_i), aux["loss"]
+                    return w_end, (), aux["loss"]
 
-                delta, losses = jax.lax.scan(one_client, delta0,
-                                             (keys, cx, cy, w32))
-                return pin(apply_delta(params, delta)), algo_state, \
-                    jnp.mean(losses)
+            elif algo == "scaffold":
+                c, c_all = algo_state["c_global"], algo_state["c_clients"]
+                rows = store.gather(c_all, ids)
+                denom = spec.n_steps * spec.lr * lr_scale
+                if fused:
+                    # FLAT per-client state: the correction and the
+                    # option-II control-variate update run directly on
+                    # the row buffers — no per-client unflatten at all
+                    def client(k, cxi, cyi, c_i_row):
+                        c_diff = jax.tree_util.tree_map(
+                            lambda g, l: g - l, c, c_i_row)
+                        w_end, aux = local(k, params, {"c_diff_flat": c_diff},
+                                           cxi, cyi, lr_scale)
+                        c_i_new = jax.tree_util.tree_map(
+                            lambda ci, cg, p, we: ci - cg + (p - we) / denom,
+                            c_i_row, c, params, w_end)
+                        return w_end, c_i_new, aux["loss"]
+                else:
+                    def client(k, cxi, cyi, c_i_row):
+                        extras = {"c_diff": tm.sub(c, c_i_row)}
+                        w_end, aux = local(k, params, extras, cxi, cyi,
+                                           lr_scale)
+                        # option II: c_i⁺ = c_i − c + (w − w_i)/(S·lr)
+                        c_i_new = jax.tree_util.tree_map(
+                            lambda ci, cg, p, we: ci - cg + (p - we) / denom,
+                            c_i_row, c, params, w_end)
+                        return w_end, c_i_new, aux["loss"]
+
+            elif algo == "moon":
+                w_prev_all = algo_state["w_prev"]
+                rows = store.gather(w_prev_all, ids)
+                anchor = unpack(params)        # loop-invariant: hoist
+                if fused:
+                    # rows are flat buffers; the tree materializes once
+                    # per client at the loss boundary, and the local
+                    # output scatters back as raw buffers
+                    def client(k, cxi, cyi, w_prev_row):
+                        extras = {"w_global": anchor,
+                                  "w_prev": fops.unflatten(w_prev_row)}
+                        w_end, aux = local(k, params, extras, cxi, cyi,
+                                           lr_scale)
+                        return w_end, w_end, aux["loss"]
+                else:
+                    def client(k, cxi, cyi, w_prev_row):
+                        extras = {"w_global": anchor, "w_prev": w_prev_row}
+                        w_end, aux = local(k, params, extras, cxi, cyi,
+                                           lr_scale)
+                        return w_end, w_end, aux["loss"]
+
+            else:
+                raise ValueError(f"unknown algorithm {algo!r}")
+
+            # -- aggregation topology ------------------------------------
+            if G > 1:
+                if K % G:
+                    raise ValueError(
+                        f"hierarchical aggregation needs clients_per_round "
+                        f"divisible by n_pods (K={K}, n_pods={G})")
+                S = K // G
+
+                def resh(t):
+                    return jax.tree_util.tree_map(
+                        lambda a: a.reshape((S, G) + a.shape[1:]), t)
+
+                vclient = jax.vmap(client, in_axes=(0, 0, 0, 0))
+                vadd = jax.vmap(add_delta, in_axes=(0, 0, 0))
+                delta0 = jax.tree_util.tree_map(
+                    lambda d: jnp.zeros((G,) + d.shape, d.dtype),
+                    zeros_delta())
+
+                def one_step(delta_g, inp):
+                    k_g, cx_g, cy_g, w_g, row_g = inp
+                    w_end_g, out_g, loss_g = vclient(k_g, cx_g, cy_g, row_g)
+                    return vadd(delta_g, w_end_g, w_g), (out_g, loss_g)
+
+                delta_g, (outs, losses) = jax.lax.scan(
+                    one_step, delta0, resh((keys, cx, cy, w32, rows)))
+                # the single cross-pod combine: one reduction per bucket
+                # over the G pod partials (a psum when the lane axis is
+                # device-sharded)
+                delta = jax.tree_util.tree_map(
+                    lambda d: jnp.sum(d, axis=0), delta_g)
+                # (S, G, ...) lane outputs fold back to client order —
+                # client j ran as step j//G, lane j%G
+                outs = jax.tree_util.tree_map(
+                    lambda a: a.reshape((K,) + a.shape[2:]), outs)
+                losses = losses.reshape(K)
+            else:
+                def one_client(delta, inp):
+                    k, cxi, cyi, w_i, row = inp
+                    w_end, out, loss = client(k, cxi, cyi, row)
+                    return add_delta(delta, w_end, w_i), (out, loss)
+
+                delta, (outs, losses) = jax.lax.scan(
+                    one_client, zeros_delta(), (keys, cx, cy, w32, rows))
+
+            new_params = pin(apply_delta(params, delta))
 
             if algo == "scaffold":
-                c, c_all = algo_state["c_global"], algo_state["c_clients"]
-                c_i = store.gather(c_all, ids)
-                denom = spec.n_steps * spec.lr * lr_scale
-                p_tree = unpack(params)
-
-                def one_client(delta, inp):
-                    k, cxi, cyi, w_i, c_i_row = inp
-                    extras = {"c_diff": tm.sub(c, c_i_row)}
-                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
-                    # option II: c_i⁺ = c_i − c + (w − w_i)/(S·lr) — the
-                    # control-variate state stays tree-form
-                    c_i_new = jax.tree_util.tree_map(
-                        lambda ci, cg, p, we: ci - cg + (p - we) / denom,
-                        c_i_row, c, p_tree, unpack(w_end))
-                    return add_delta(delta, w_end, w_i), \
-                        (aux["loss"], c_i_new)
-
-                delta, (losses, c_i_new) = jax.lax.scan(
-                    one_client, delta0, (keys, cx, cy, w32, c_i))
-                new_params = apply_delta(params, delta)
-                n_cl = jax.tree_util.tree_leaves(c_all)[0].shape[0]
-                frac = K / n_cl
+                # c ← c + (K/N)·mean_i(c_i⁺ − c_i); N is the population
+                frac = K / store.population(c_all)
                 c_new = jax.tree_util.tree_map(
                     lambda cg, new, old: cg + frac * jnp.mean(new - old,
                                                               axis=0),
-                    c, c_i_new, c_i)
+                    c, outs, rows)
                 state = {"c_global": c_new,
-                         "c_clients": store.scatter(c_all, ids, c_i_new)}
-                return pin(new_params), state, jnp.mean(losses)
-
-            if algo == "moon":
-                w_prev_all = algo_state["w_prev"]
-                w_prev = store.gather(w_prev_all, ids)
-                anchor = unpack(params)        # loop-invariant: hoist
-
-                def one_client(delta, inp):
-                    k, cxi, cyi, w_i, w_prev_row = inp
-                    extras = {"w_global": anchor, "w_prev": w_prev_row}
-                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
-                    return add_delta(delta, w_end, w_i), \
-                        (aux["loss"], unpack(w_end))
-
-                delta, (losses, w_ends) = jax.lax.scan(
-                    one_client, delta0, (keys, cx, cy, w32, w_prev))
-                state = {"w_prev": store.scatter(w_prev_all, ids, w_ends)}
-                return pin(apply_delta(params, delta)), state, \
-                    jnp.mean(losses)
-
-            raise ValueError(f"unknown algorithm {algo!r}")
+                         "c_clients": store.scatter(c_all, ids, outs)}
+            elif algo == "moon":
+                state = {"w_prev": store.scatter(w_prev_all, ids, outs)}
+            else:
+                state = algo_state
+            return new_params, state, jnp.mean(losses)
 
         return body
 
@@ -612,14 +789,26 @@ class PodFLConfig:
     seed: int = 0
     chunk_size: int = 4
     sampling: str = "device"
+    aggregation: str = "sequential"     # sequential | hierarchical
+    n_pods: Optional[int] = None
+    store: str = "dense"                # dense | sparse
+    store_capacity: int = 1024          # sparse active-set rows
 
     def strategy(self) -> PodAggregateStrategy:
+        kwargs = {}
+        if self.store == "sparse":
+            kwargs["state_store"] = ShardedSparseClientStateStore(
+                capacity=self.store_capacity, mesh=self.mesh)
+        elif self.store != "dense":
+            raise ValueError(f"unknown store {self.store!r} "
+                             f"(choose from ('dense', 'sparse'))")
         return PodAggregateStrategy(
             spec=self.spec.local_spec(), algorithm=self.spec.algorithm,
             server_opt=self.spec.server_opt, server_lr=self.spec.server_lr,
             server_momentum=self.spec.server_momentum,
             mesh=self.mesh, layout=self.layout,
-            clients_per_round=self.clients_per_round)
+            clients_per_round=self.clients_per_round,
+            aggregation=self.aggregation, n_pods=self.n_pods, **kwargs)
 
     def schedule(self) -> RoundSchedule:
         return RoundSchedule(

@@ -34,9 +34,14 @@ disabled terms cost nothing.
 Buffers are 1-D; the wrappers pad to a (rows, 128) grid of
 ``block_rows``-row tiles and strip the pad on return — pad lanes stay
 zero through every op above, so chaining kernels over padded buffers is
-safe.  This container is CPU-only: the kernels are validated in
-interpret mode against the tree_math oracles (tests/test_fused_update);
-on TPU the same code lowers to Mosaic.
+safe.  Callers that carry buffers across many kernel calls (the
+engine's FlatParamOps chunk carries) pre-pad them to ``GRID_ALIGN``
+(one 8-sublane × 128-lane tile) once at placement time: ``_pad_rows``
+then degenerates to a reshape on every call, so the interpret/CPU path
+pays zero pad copies per operand per step, and the trailing ``[:n]``
+strip is a no-op slice XLA folds.  This container is CPU-only: the
+kernels are validated in interpret mode against the tree_math oracles
+(tests/test_fused_update); on TPU the same code lowers to Mosaic.
 """
 from __future__ import annotations
 
@@ -50,6 +55,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 DEFAULT_BLOCK_ROWS = 512        # 512×128 f32 = 256 KB per operand tile
+# one (8, 128) sublane×lane tile — buffers whose length is a multiple of
+# this hit the pad==0 fast path in _pad_rows on the one-block interpret
+# grid (FlatParamOps pre-pads its carried buffers to this alignment)
+GRID_ALIGN = 8 * LANES
 
 
 def _grid_rows(n: int, block_rows: int, interpret: bool) -> Tuple[int, int]:

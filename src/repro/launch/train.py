@@ -229,7 +229,11 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                      verbose: bool = False,
                      chunk_size: int = 4,
                      sampling: str = "device",
-                     layout: str = "fsdp_tp") -> PodTrainResult:
+                     layout: str = "fsdp_tp",
+                     aggregation: str = "sequential",
+                     n_pods: Optional[int] = None,
+                     store: str = "dense",
+                     store_capacity: int = 1024) -> PodTrainResult:
     """CyclicFL end-to-end on the pod backend: a declarative P1→P2 phase
     schedule through the shared round engine — no hand-rolled loops.
 
@@ -255,6 +259,10 @@ def run_pod_training(cfg: TransformerConfig, data, *,
     common = dict(mesh=mesh, clients_per_round=clients_per_round, spec=spec,
                   layout=layout, chunk_size=chunk_size, sampling=sampling,
                   eval_every=eval_every, eval_batch=eval_batch)
+    # P2-only knobs: aggregation topology and the client-state store
+    # (P1 relays the model and keeps no per-client state)
+    fl_extra = dict(aggregation=aggregation, n_pods=n_pods, store=store,
+                    store_capacity=store_capacity)
     phases = []
     if cyclic_rounds > 0:
         phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
@@ -270,7 +278,7 @@ def run_pod_training(cfg: TransformerConfig, data, *,
         from repro.fl.pod import HOST_RNG_OFFSET_P2
         p2_seed = seed + HOST_RNG_OFFSET_P2 if phases else seed
         phases.append(Phase("P2", PodFLConfig(rounds=fl_rounds, seed=p2_seed,
-                                              **common),
+                                              **common, **fl_extra),
                             eval_fn=eval_fn))
     if not phases:
         return PodTrainResult(params=init_lm(jax.random.PRNGKey(seed), cfg),
@@ -295,7 +303,8 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--cyclic-rounds", type=int, default=2)
-    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--clients", "--n-clients", dest="clients", type=int,
+                    default=16, help="population size N (synthetic shards)")
     ap.add_argument("--clients-per-round", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=8)
     ap.add_argument("--batch", type=int, default=8,
@@ -328,6 +337,23 @@ def main(argv=None) -> int:
     ap.add_argument("--sampling", default="device",
                     choices=("device", "host"))
     ap.add_argument("--layout", default="fsdp_tp", choices=rules.LAYOUTS)
+    ap.add_argument("--aggregation", default="sequential",
+                    choices=("sequential", "hierarchical"),
+                    help="P2 topology: one scan over all K clients, or "
+                         "two-level — per-pod partial deltas + one "
+                         "cross-pod combine (pods default to the mesh "
+                         "data-axis size; see --n-pods)")
+    ap.add_argument("--n-pods", type=int, default=None,
+                    help="pod count for --aggregation hierarchical "
+                         "(must divide clients-per-round)")
+    ap.add_argument("--store", default="dense", choices=("dense", "sparse"),
+                    help="per-client state store: dense (n_clients, ...) "
+                         "stacks or the participation-indexed sparse "
+                         "active-set table (O(capacity) memory)")
+    ap.add_argument("--store-capacity", type=int, default=1024,
+                    help="sparse store rows; must cover the distinct "
+                         "participants of one dispatch "
+                         "(chunk-size x clients-per-round)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -351,7 +377,9 @@ def main(argv=None) -> int:
         clients_per_round=args.clients_per_round, spec=spec,
         seed=args.seed, verbose=True, chunk_size=args.chunk_size,
         eval_every=args.eval_every,
-        sampling=args.sampling, layout=args.layout)
+        sampling=args.sampling, layout=args.layout,
+        aggregation=args.aggregation, n_pods=args.n_pods,
+        store=args.store, store_capacity=args.store_capacity)
     first = res.history[0]["loss"]
     last = res.history[-1]["loss"]
     print(f"[train] {args.arch}: loss {first:.4f} -> {last:.4f} "

@@ -1,0 +1,288 @@
+"""SparseClientStateStore tests: the participation-indexed active-set
+table against its dense oracle.
+
+  - store-level gather/scatter round-trips over random id sequences with
+    capacity < n_clients (hypothesis sweeps + a seeded long-run), with
+    eviction → host spill → refill of cold clients across dispatches;
+  - spill=False is the documented *forgetful* mode (evicted rows revert
+    to the init template);
+  - capacity smaller than one dispatch's distinct participants raises;
+  - engine parity: sparse == dense for scaffold and moon on host (tree
+    AND fused paths, host AND replayed device sampling) and on the pod
+    backend, with capacity forcing evictions/refills across chunks;
+  - hierarchical (two-level) pod aggregation matches the sequential
+    scan within float reassociation tolerance, on both impls.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.federated import FederatedDataset
+from repro.fl.engine import (
+    DENSE_STORE,
+    AggregateStrategy,
+    DenseClientStateStore,
+    RoundSchedule,
+    SparseClientStateStore,
+    run_rounds,
+)
+from repro.fl.local import LocalSpec
+from repro.fl.pod import (
+    PodAggregateStrategy,
+    ShardedSparseClientStateStore,
+)
+from repro.fl.task import vision_task
+from repro.launch.mesh import make_host_mesh
+
+SEED = 0
+N_CLIENTS = 8
+CAPACITY = 4            # < N_CLIENTS and < chunk×K distinct worst case? no:
+                        # chunk=2 × K=2 → ≤4 distinct per dispatch — tight fit
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = vision_task("mlp", in_ch=1, seed_kwargs={"img": 8, "d_hidden": 16})
+    rng = np.random.default_rng(SEED)
+    per = 16
+    x = rng.normal(size=(N_CLIENTS, per, 8, 8, 1)).astype(np.float32)
+    y = rng.integers(0, 10, size=(N_CLIENTS, per)).astype(np.int32)
+    data = FederatedDataset(x=x, y=y,
+                            n_real=np.full((N_CLIENTS,), per, np.int32),
+                            test_x=x[0], test_y=y[0], n_classes=10,
+                            name="store-test")
+    return task, data
+
+
+def _template():
+    return {"a": jnp.arange(3, dtype=jnp.float32),
+            "b": jnp.zeros((2, 2), jnp.float32)}
+
+
+def _rows_for(ids, scale):
+    """Deterministic per-client rows so scatter payloads are recognizable."""
+    ids = np.asarray(ids, np.float32)
+    return {"a": jnp.asarray(scale * ids[:, None] + np.arange(3)[None, :],
+                             jnp.float32),
+            "b": jnp.asarray(np.broadcast_to(
+                (scale * ids)[:, None, None], (len(ids), 2, 2))
+                .astype(np.float32))}
+
+
+def _drive(store, dispatches, n_clients):
+    """Replay a sequence of dispatches through a store AND a dense dict
+    reference; every dispatch gathers (checking residency brought the
+    right rows in), rewrites the rows, and scatters back."""
+    state = store.init(_template(), n_clients)
+    reference = {}
+    for t, ids in enumerate(dispatches):
+        ids = np.asarray(sorted(ids), np.int32)
+        if ids.size == 0:
+            continue
+        state = store.prepare_chunk(state, ids)
+        got = store.gather(state, jnp.asarray(ids))
+        for j, cid in enumerate(ids):
+            want = reference.get(int(cid))
+            if want is None:
+                want = jax.tree_util.tree_map(np.asarray, _template())
+            np.testing.assert_array_equal(np.asarray(got["a"][j]), want["a"])
+            np.testing.assert_array_equal(np.asarray(got["b"][j]), want["b"])
+        rows = _rows_for(ids, scale=float(t + 1))
+        state = store.scatter(state, jnp.asarray(ids), rows)
+        for j, cid in enumerate(ids):
+            reference[int(cid)] = {"a": np.asarray(rows["a"][j]),
+                                   "b": np.asarray(rows["b"][j])}
+    return state, reference
+
+
+def _check_dense_view(store, state, reference, n_clients):
+    dense = store.to_dense(state)
+    tmpl = jax.tree_util.tree_map(np.asarray, _template())
+    for cid in range(n_clients):
+        want = reference.get(cid, tmpl)
+        np.testing.assert_array_equal(np.asarray(dense["a"][cid]), want["a"])
+        np.testing.assert_array_equal(np.asarray(dense["b"][cid]), want["b"])
+
+
+def test_gather_scatter_roundtrip_with_eviction_refill():
+    """A client written in dispatch 0, evicted while others run, must
+    come back with its written row (host spill) in a later dispatch."""
+    store = SparseClientStateStore(capacity=3)
+    dispatches = [[0, 1, 2], [3, 4, 5], [6, 7, 3], [0, 1, 5], [2, 4, 6]]
+    state, reference = _drive(store, dispatches, n_clients=8)
+    _check_dense_view(store, state, reference, n_clients=8)
+
+
+def test_forgetful_mode_drops_evicted_rows():
+    store = SparseClientStateStore(capacity=2, spill=False)
+    state = store.init(_template(), 6)
+    state = store.prepare_chunk(state, np.array([0, 1]))
+    state = store.scatter(state, jnp.array([0, 1]), _rows_for([0, 1], 9.0))
+    state = store.prepare_chunk(state, np.array([2, 3]))   # evicts 0 and 1
+    state = store.prepare_chunk(state, np.array([0]))      # 0 refaults...
+    got = store.gather(state, jnp.array([0]))
+    tmpl = _template()                                     # ...as the template
+    np.testing.assert_array_equal(np.asarray(got["a"][0]),
+                                  np.asarray(tmpl["a"]))
+
+
+def test_capacity_must_cover_one_dispatch():
+    store = SparseClientStateStore(capacity=2)
+    state = store.init(_template(), 8)
+    with pytest.raises(ValueError, match="capacity"):
+        store.prepare_chunk(state, np.array([0, 1, 2]))
+
+
+def test_population_reports_n_clients_not_capacity():
+    sparse = SparseClientStateStore(capacity=3)
+    state = sparse.init(_template(), 11)
+    assert sparse.population(state) == 11
+    dense_state = DENSE_STORE.init(_template(), 11)
+    assert DENSE_STORE.population(dense_state) == 11
+
+
+def test_hypothesis_random_id_sequences():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(st.lists(
+        st.sets(st.integers(min_value=0, max_value=9),
+                min_size=0, max_size=4),
+        min_size=1, max_size=8))
+    def run(dispatches):
+        store = SparseClientStateStore(capacity=4)
+        state, reference = _drive(store, dispatches, n_clients=10)
+        _check_dense_view(store, state, reference, n_clients=10)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# engine parity: sparse == dense
+# ---------------------------------------------------------------------------
+
+def _sched(sampling, rounds=6, chunk=2):
+    return RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                         seed=SEED, chunk_size=chunk, sampling=sampling,
+                         host_rng_offset=17)
+
+
+def _host_run(task, data, algo, impl, store):
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05, variant=algo,
+                     update_impl=impl)
+    strat = AggregateStrategy(spec=spec, algorithm=algo, participation=0.25,
+                              state_store=store)
+    return run_rounds(task, data, strat, _sched("host"))
+
+
+def _assert_same(res_a, res_b, atol=0.0):
+    np.testing.assert_allclose(
+        [h["local_loss"] for h in res_a.history],
+        [h["local_loss"] for h in res_b.history], atol=atol, rtol=0)
+    for a, b in zip(jax.tree_util.tree_leaves(res_a.params),
+                    jax.tree_util.tree_leaves(res_b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=atol, rtol=0)
+
+
+@pytest.mark.parametrize("algo", ["scaffold", "moon"])
+@pytest.mark.parametrize("impl", ["tree", "fused_interpret"])
+def test_host_sparse_matches_dense(setup, algo, impl):
+    """Bitwise: residency management must be invisible to the math.
+    capacity=4 with chunk=2 × K=2 drives eviction + spill-refill of
+    revisited clients across the 3 dispatches."""
+    task, data = setup
+    dense = _host_run(task, data, algo, impl, DenseClientStateStore())
+    sparse = _host_run(task, data, algo, impl,
+                       SparseClientStateStore(capacity=CAPACITY))
+    _assert_same(dense, sparse, atol=0.0)
+
+
+@pytest.mark.parametrize("impl", ["tree", "fused_interpret"])
+def test_device_sampling_replay_matches_dense(setup, impl):
+    """sampling="device": the store's host-side replay of the in-program
+    threefry draw faults the right rows in — still bitwise."""
+    task, data = setup
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05, variant="scaffold",
+                     update_impl=impl)
+
+    def run(store):
+        strat = AggregateStrategy(spec=spec, algorithm="scaffold",
+                                  participation=0.25, state_store=store)
+        return run_rounds(task, data, strat, _sched("device", rounds=4))
+
+    _assert_same(run(DenseClientStateStore()),
+                 run(SparseClientStateStore(capacity=CAPACITY)), atol=0.0)
+
+
+@pytest.mark.parametrize("algo", ["scaffold", "moon"])
+def test_pod_sparse_matches_dense(setup, algo):
+    task, data = setup
+    mesh = make_host_mesh()
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05, variant=algo,
+                     update_impl="fused_interpret")
+
+    def run(store):
+        kwargs = {"state_store": store} if store is not None else {}
+        strat = PodAggregateStrategy(spec=spec, algorithm=algo, mesh=mesh,
+                                     clients_per_round=2, **kwargs)
+        return run_rounds(task, data, strat, _sched("host"))
+
+    sparse = ShardedSparseClientStateStore(capacity=CAPACITY, mesh=mesh)
+    _assert_same(run(None), run(sparse), atol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (two-level) aggregation == sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["tree", "fused_interpret"])
+def test_pod_hierarchical_matches_sequential(setup, impl):
+    """n_pods=2 on a 1-device mesh: per-pod partials + one cross-pod
+    combine reassociate the weighted sum — equal within fp tolerance."""
+    task, data = setup
+    mesh = make_host_mesh()
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05, variant="scaffold",
+                     update_impl=impl)
+
+    def run(aggregation):
+        strat = PodAggregateStrategy(
+            spec=spec, algorithm="scaffold", mesh=mesh, clients_per_round=4,
+            aggregation=aggregation, n_pods=2,
+            state_store=ShardedSparseClientStateStore(capacity=N_CLIENTS,
+                                                      mesh=mesh))
+        return run_rounds(task, data, strat, _sched("host", rounds=3))
+
+    _assert_same(run("sequential"), run("hierarchical"), atol=2e-5)
+
+
+def test_hierarchical_requires_divisible_pods(setup):
+    task, data = setup
+    mesh = make_host_mesh()
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05)
+    strat = PodAggregateStrategy(spec=spec, algorithm="fedavg", mesh=mesh,
+                                 clients_per_round=3,
+                                 aggregation="hierarchical", n_pods=2)
+    with pytest.raises(ValueError, match="divisible"):
+        run_rounds(task, data, strat, _sched("host", rounds=1, chunk=1))
+
+
+def test_unknown_aggregation_rejected():
+    mesh = make_host_mesh()
+    with pytest.raises(ValueError, match="aggregation"):
+        PodAggregateStrategy(spec=LocalSpec(n_steps=1, batch_size=2, lr=0.1),
+                             mesh=mesh, aggregation="tiered")
+
+
+def test_sparse_store_is_identity_hashed():
+    """Mutable spill members force identity semantics — two stores must
+    be two chunk-cache entries."""
+    a = SparseClientStateStore(capacity=4)
+    b = SparseClientStateStore(capacity=4)
+    assert hash(a) != hash(b) or a is b
+    assert a != b
+    assert dataclasses.is_dataclass(a)

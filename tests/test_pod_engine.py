@@ -405,3 +405,68 @@ def test_pod_scaffold_shards_client_state_subprocess():
                          timeout=420)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "POD_SUBPROCESS_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# multi-device: hierarchical two-level combine on a real 4×4 mesh
+# ---------------------------------------------------------------------------
+
+_HIER_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.data.synthetic import make_synthetic_tokenlm
+    from repro.fl.engine import RoundSchedule, run_rounds
+    from repro.fl.local import LocalSpec
+    from repro.fl.pod import PodAggregateStrategy, ShardedSparseClientStateStore
+    from repro.fl.task import lm_task
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    cfg = get_reduced("qwen1.5-0.5b")
+    task = lm_task(cfg)
+    data = make_synthetic_tokenlm(n_clients=8, seq_len=16,
+                                  n_seq_per_client=8,
+                                  vocab=cfg.vocab_size, beta=0.5, seed=0)
+    sched = RoundSchedule(rounds=2, eval_every=0, seed=0, chunk_size=2,
+                          sampling="host", host_rng_offset=17)
+
+    def run(aggregation, store=None):
+        kw = {"state_store": store} if store is not None else {}
+        strat = PodAggregateStrategy(
+            spec=LocalSpec(n_steps=2, batch_size=8, lr=0.05,
+                           variant="scaffold"),
+            algorithm="scaffold", mesh=mesh, clients_per_round=4,
+            aggregation=aggregation, **kw)
+        return run_rounds(task, data, strat, sched)
+
+    seq = run("sequential")
+    hier = run("hierarchical",                       # G=4 from the data axis
+               ShardedSparseClientStateStore(capacity=8, mesh=mesh))
+    # two-level combine only reassociates the weighted sum
+    for a, b in zip(jax.tree_util.tree_leaves(seq.params),
+                    jax.tree_util.tree_leaves(hier.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=0)
+    np.testing.assert_allclose(
+        [h["local_loss"] for h in seq.history],
+        [h["local_loss"] for h in hier.history], atol=5e-5, rtol=0)
+    # sparse table is data-sharded at its bounded capacity, not n_clients
+    table = jax.tree_util.tree_leaves(hier.algo_state["c_clients"]["table"])[0]
+    assert table.shape[0] == 8, table.shape
+    spec = table.sharding.spec
+    assert spec and spec[0] == "data", ("sparse table not data-sharded", spec)
+    print("POD_HIER_SUBPROCESS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pod_hierarchical_combine_16dev_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _HIER_SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "POD_HIER_SUBPROCESS_OK" in out.stdout
