@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store
+.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store bench-pipeline
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -29,3 +29,6 @@ bench-fused:     ## fused flat-buffer update kernels vs tree_math
 
 bench-store:     ## client-state store scaling (dense vs sparse)
 	$(PY) -m benchmarks.perf_client_store
+
+bench-pipeline:  ## overlapped round pipeline vs synchronous (sparse store)
+	$(PY) -m benchmarks.perf_pipeline

@@ -112,7 +112,9 @@ def _bench_one(task, data, store, *, clients_per_round: int, rounds: int,
             run_rounds(task, data, strat, sched).params)), repeats)
     bytes_ = _store_bytes(res.algo_state["c_clients"])
     assert np.isfinite(res.history[-1]["local_loss"])
-    return {"secs": secs, "rounds_per_sec": rounds / secs, **bytes_}
+    timing = {k: round(v, 2) for k, v in (res.timing or {}).items()}
+    return {"secs": secs, "rounds_per_sec": rounds / secs,
+            "timing": timing, **bytes_}
 
 
 def main(argv=None) -> int:
@@ -161,12 +163,18 @@ def main(argv=None) -> int:
                      "state_mb": round(r["total"] / 2**20, 2),
                      "table_mb": round(r["table"] / 2**20, 2),
                      "index_mb": round(r["index"] / 2**20, 2),
-                     "rounds_per_sec": round(r["rounds_per_sec"], 2)})
+                     "rounds_per_sec": round(r["rounds_per_sec"], 2),
+                     "timing": r["timing"]})
         for row in rows[-2:]:
             tag = "GATED (analytic)" if row["gated"] else \
                 f"{row['rounds_per_sec']:8.2f} rounds/s"
             print(f"  {row['store']:6s} n={row['n_clients']:>9,d} "
                   f"state={row['state_mb']:10.2f} MB  {tag}", flush=True)
+        # where the sparse round time goes (EngineResult.timing, last run)
+        t = rows[-1]["timing"]
+        if t:
+            print("         " + "  ".join(f"{k}={t[k]}" for k in sorted(t)),
+                  flush=True)
 
     print()
     print(fmt_table(rows, ["store", "n_clients", "gated", "state_mb",

@@ -1,0 +1,153 @@
+"""Overlapped round pipeline: ``RoundSchedule(overlap=True)`` vs the
+synchronous path on the sparse client-state store.
+
+With ``overlap=False`` every dispatch serializes host residency
+planning (eviction choice, spill gather, refill ``device_put``) against
+device compute.  With ``overlap=True`` the engine stages chunk N+1's
+residency while dispatch N runs: ``stage_chunk`` plans on numpy mirrors
+of the slot indices and enqueues one stacked non-blocking transfer from
+a pinned staging buffer; ``commit_chunk`` splices the staged rows
+against the latest table right before dispatch.  Both paths consume the
+identical host-rng stream, so results are bitwise equal — this
+benchmark measures the throughput side and gates on it.
+
+Reported per population (scaffold mlp, K=64, host sampling, eval off):
+
+  rounds/s (sync / overlap), overlap speedup, and the pipeline timing
+  breakdown from ``EngineResult.timing`` (host-residency ms, staged
+  transfer ms, dispatch-enqueue ms, device-wait ms).
+
+Regression gates (exit 1):
+  1. dispatch counts are exact — ceil(rounds / chunk) for BOTH modes
+     (the pipeline must not split or merge chunks);
+  2. overlap throughput ≥ 0.9× sync at every population (staging off
+     the critical path can't cost more than measurement noise);
+  3. final params bitwise equal between the two modes.
+
+    PYTHONPATH=src python -m benchmarks.perf_pipeline
+    PYTHONPATH=src python -m benchmarks.perf_pipeline --scale full
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result, time_best_of
+from benchmarks.perf_client_store import _make_data
+from repro.fl.engine import (
+    AggregateStrategy,
+    RoundSchedule,
+    SparseClientStateStore,
+    run_rounds,
+)
+from repro.fl.local import LocalSpec
+from repro.fl.task import vision_task
+
+POPULATIONS = {"quick": (10_000,), "full": (100_000, 1_000_000)}
+IMG = 4
+D_HIDDEN = 128
+PER_CLIENT = 2
+
+TIMING_KEYS = ("host_residency_ms", "staged_transfer_ms",
+               "dispatch_enqueue_ms", "device_wait_ms")
+
+
+def _bench_one(task, data, *, overlap: bool, capacity: int,
+               clients_per_round: int, rounds: int, chunk: int,
+               repeats: int, seed: int) -> Dict:
+    spec = LocalSpec(n_steps=2, batch_size=PER_CLIENT, lr=0.05,
+                     variant="scaffold")
+    strat = AggregateStrategy(
+        spec=spec, algorithm="scaffold",
+        participation=clients_per_round / data.n_clients,
+        state_store=SparseClientStateStore(capacity=capacity))
+    sched = RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                          seed=seed, chunk_size=chunk, sampling="host",
+                          host_rng_offset=17, overlap=overlap)
+    res = run_rounds(task, data, strat, sched)          # compile + warm
+    secs = time_best_of(
+        lambda: jax.block_until_ready(jax.tree_util.tree_leaves(
+            run_rounds(task, data, strat, sched).params)), repeats)
+    assert np.isfinite(res.history[-1]["local_loss"])
+    return {"secs": secs, "rounds_per_sec": rounds / secs,
+            "dispatches": res.dispatches,
+            "timing": dict(res.timing or {}),
+            "params": jax.tree_util.tree_map(np.asarray, res.params)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=("quick", "full"))
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=2)
+    ap.add_argument("--clients-per-round", type=int, default=64)
+    ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    task = vision_task("mlp", in_ch=1,
+                       seed_kwargs={"img": IMG, "d_hidden": D_HIDDEN})
+    want_dispatches = math.ceil(args.rounds / args.chunk)
+    print(f"[perf_pipeline] K={args.clients_per_round}, "
+          f"capacity={args.capacity}, rounds={args.rounds}, "
+          f"chunk={args.chunk} → {want_dispatches} dispatches", flush=True)
+
+    ok = True
+    rows: List[Dict] = []
+    for n in POPULATIONS[args.scale]:
+        data = _make_data(n, args.seed)
+        bench = dict(capacity=args.capacity,
+                     clients_per_round=args.clients_per_round,
+                     rounds=args.rounds, chunk=args.chunk,
+                     repeats=args.repeats, seed=args.seed)
+        sync = _bench_one(task, data, overlap=False, **bench)
+        ovl = _bench_one(task, data, overlap=True, **bench)
+
+        speedup = ovl["rounds_per_sec"] / sync["rounds_per_sec"]
+        for mode, r in (("sync", sync), ("overlap", ovl)):
+            rows.append({"mode": mode, "n_clients": n,
+                         "rounds_per_sec": round(r["rounds_per_sec"], 2),
+                         "dispatches": r["dispatches"],
+                         **{k: round(r["timing"].get(k, 0.0), 2)
+                            for k in TIMING_KEYS}})
+        print(f"  n={n:>9,d}  sync {sync['rounds_per_sec']:7.2f} r/s  "
+              f"overlap {ovl['rounds_per_sec']:7.2f} r/s  "
+              f"({speedup:.2f}x)", flush=True)
+
+        # --- gates --------------------------------------------------------
+        for mode, r in (("sync", sync), ("overlap", ovl)):
+            if r["dispatches"] != want_dispatches:
+                print(f"[perf_pipeline] REGRESSION: {mode} at n={n:,d} ran "
+                      f"{r['dispatches']} dispatches, want {want_dispatches}",
+                      file=sys.stderr)
+                ok = False
+        if speedup < 0.9:
+            print(f"[perf_pipeline] REGRESSION: overlap at n={n:,d} is "
+                  f"{speedup:.2f}x sync — staging is on the critical path",
+                  file=sys.stderr)
+            ok = False
+        for a, b in zip(jax.tree_util.tree_leaves(sync["params"]),
+                        jax.tree_util.tree_leaves(ovl["params"])):
+            if not np.array_equal(a, b):
+                print(f"[perf_pipeline] REGRESSION: overlap != sync params "
+                      f"at n={n:,d} (bitwise)", file=sys.stderr)
+                ok = False
+                break
+
+    print()
+    print(fmt_table(rows, ["mode", "n_clients", "rounds_per_sec",
+                           "dispatches", *TIMING_KEYS]))
+    save_result(f"perf_pipeline_{args.scale}",
+                {"config": vars(args), "want_dispatches": want_dispatches,
+                 "rows": rows})
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

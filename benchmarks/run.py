@@ -16,8 +16,8 @@ import time
 
 from benchmarks import (
     fig5_switch_point, fig7_landscape, perf_client_store, perf_fused_update,
-    perf_pod_round, perf_round_engine, roofline_report, table1_accuracy,
-    table2_compat, table3_convergence, table4_comm,
+    perf_pipeline, perf_pod_round, perf_round_engine, roofline_report,
+    table1_accuracy, table2_compat, table3_convergence, table4_comm,
 )
 
 BENCHES = {
@@ -25,6 +25,7 @@ BENCHES = {
     "perf_pod": lambda scale: perf_pod_round.main(["--scale", scale]),
     "perf_fused": lambda scale: perf_fused_update.main(["--scale", scale]),
     "perf_store": lambda scale: perf_client_store.main(["--scale", scale]),
+    "perf_pipeline": lambda scale: perf_pipeline.main(["--scale", scale]),
     "table1": lambda scale: table1_accuracy.main(["--scale", scale,
                                                   "--betas", "0.1,0.5"]),
     "table2": lambda scale: table2_compat.main(["--scale", scale]),

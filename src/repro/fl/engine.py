@@ -130,6 +130,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -239,6 +240,26 @@ class DenseClientStateStore:
 DENSE_STORE = DenseClientStateStore()
 
 
+class _SpillBlock:
+    """One dispatch's stacked evicted rows, parked on the CPU device by a
+    single (async) batched transfer at commit time; materialized to numpy
+    lazily on first refault — by which point the dispatch that produced
+    the source table has long drained, so the asarray never stalls the
+    pipeline."""
+
+    __slots__ = ("rows", "_np")
+
+    def __init__(self, rows):
+        self.rows = rows                # list of (n_evicted, ...) leaves
+        self._np = None
+
+    def leaves(self):
+        if self._np is None:
+            self._np = [np.asarray(leaf) for leaf in self.rows]
+            self.rows = None            # drop the device handles
+        return self._np
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class SparseClientStateStore:
     """Participation-indexed per-client state: a bounded active-set
@@ -250,19 +271,34 @@ class SparseClientStateStore:
     ``owner``/``stamp`` the ``(capacity,)`` slot→id back-map and LRU
     clock.  gather/scatter run inside jit over *slots* — O(capacity)
     device memory however large the population — while residency is
-    managed eagerly between dispatches by :meth:`prepare_chunk`: the
-    engine replays the upcoming chunk's client ids on the host
-    (``needs_host_ids``), cold participants are faulted in (evicting
-    the least-recently-used non-participating slots), and evicted live
-    rows spill to host memory via ``jax.device_put`` to the CPU device
-    (``spill=False`` drops them instead — a documented *forgetful*
-    mode that trades parity for zero host traffic).
+    managed eagerly between dispatches in two halves:
+
+      stage_chunk(ids_block) -> staged   (host planning + async H2D)
+      commit_chunk(state, staged) -> state  (device-side splice, enqueued)
+
+    :meth:`stage_chunk` plans against HOST MIRRORS of the residency
+    index (kept in ``_meta``), so it never reads — and never blocks
+    on — the device carries of an in-flight dispatch: the engine's
+    overlapped loop stages dispatch N+1 while dispatch N is still
+    executing.  Cold participants fault in from the spill dict (evicting
+    the least-recently-used non-participating slots); the refill rows
+    are stacked into a reused pinned staging buffer and shipped as ONE
+    ``jax.device_put`` per template leaf, without ``block_until_ready``.
+    :meth:`commit_chunk` then enqueues one batched spill gather of the
+    evicted live rows (reading the LATEST table, so rows written by the
+    previous dispatch spill with their updates, async-copied to the CPU
+    device) and splices the staged rows plus the index updates in —
+    pure functional device ops, nothing blocks.  ``prepare_chunk``
+    composes the two for the synchronous path, so the classic contract
+    is unchanged; ``spill=False`` drops evicted rows instead — a
+    documented *forgetful* mode that trades parity for zero host
+    traffic.
 
     ``capacity`` must cover the distinct participants of one dispatch
-    (chunk_size × K in the worst case); prepare_chunk raises otherwise.
-    Eager members (the spill dict, the refill template) make this store
-    identity-hashed (``eq=False``), which is exactly what the chunk
-    cache wants — two stores are two cache entries.
+    (chunk_size × K in the worst case); stage_chunk raises otherwise.
+    Eager members (the spill dict, the mirrors, the staging buffers)
+    make this store identity-hashed (``eq=False``), which is exactly
+    what the chunk cache wants — two stores are two cache entries.
     """
 
     capacity: int
@@ -279,9 +315,16 @@ class SparseClientStateStore:
     def init(self, template: Pytree, n_clients: int) -> Pytree:
         leaves, treedef = jax.tree_util.tree_flatten(template)
         self._cold.clear()
+        cap = max(1, min(self.capacity, n_clients))
         self._meta["treedef"] = treedef
         self._meta["template"] = [np.asarray(leaf) for leaf in leaves]
-        cap = max(1, min(self.capacity, n_clients))
+        # host mirrors of the residency index: stage_chunk plans against
+        # these, so planning never synchronizes with the device
+        self._meta["slot_of"] = np.full((n_clients,), -1, np.int32)
+        self._meta["owner"] = np.full((cap,), -1, np.int32)
+        self._meta["stamp"] = np.zeros((cap,), np.int32)
+        self._meta["stage_bufs"] = None
+        self._meta["transfer_ms"] = 0.0
         return {
             "table": stack_copies(template, cap),
             "slot_of": jnp.full((n_clients,), -1, jnp.int32),
@@ -303,32 +346,61 @@ class SparseClientStateStore:
     def shardings(self, template: Pytree, n_clients: int, mesh) -> Any:
         return None                     # host flavor: no constraint
 
+    @property
+    def staged_transfer_ms(self) -> float:
+        """Cumulative wall time spent enqueueing refill transfers."""
+        return float(self._meta.get("transfer_ms", 0.0))
+
     # -- host-side residency (eager, between dispatches) --------------------
 
-    def _spill_rows(self, table: Pytree, victims, evicted) -> None:
-        live = evicted >= 0
-        if not np.any(live):
-            return
-        rows = tree_rows(table, jnp.asarray(victims[live]))
-        if self.spill:
-            try:                        # cold rows live on the CPU device
-                rows = jax.device_put(rows, jax.devices("cpu")[0])
-            except RuntimeError:
-                pass                    # no CPU device: plain host arrays
-            row_leaves = [np.asarray(leaf)
-                          for leaf in jax.tree_util.tree_leaves(rows)]
-            for j, cid in enumerate(evicted[live]):
-                self._cold[int(cid)] = [leaf[j] for leaf in row_leaves]
+    def _pop_cold(self, cid: int):
+        row = self._cold.pop(cid, None)
+        if isinstance(row, tuple):      # lazy ref into a spill block
+            block, j = row
+            return [leaf[j] for leaf in block.leaves()]
+        return row
 
-    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
+    def _cold_row(self, cid: int):
+        row = self._cold.get(cid)
+        if isinstance(row, tuple):
+            block, j = row
+            return [leaf[j] for leaf in block.leaves()]
+        return row
+
+    def _stage_rows(self, fill):
+        """Stack the refill rows into a pinned staging buffer (grown
+        geometrically, reused across dispatches — safe because at most
+        one staged plan exists at a time and ``jax.device_put`` copies
+        out of numpy before returning)."""
+        tmpl = self._meta["template"]
+        if not tmpl:
+            return []
+        n = len(fill)
+        bufs = self._meta.get("stage_bufs")
+        if bufs is None or bufs[0].shape[0] < n:
+            rows_cap = max(n, 2 * (bufs[0].shape[0] if bufs else 4))
+            bufs = [np.empty((rows_cap,) + t.shape, t.dtype) for t in tmpl]
+            self._meta["stage_bufs"] = bufs
+        for j, row in enumerate(fill):
+            for i in range(len(tmpl)):
+                bufs[i][j] = row[i]
+        return [buf[:n] for buf in bufs]
+
+    def _refill_placement(self, victims: np.ndarray):
+        return None                     # host flavor: default device
+
+    def stage_chunk(self, ids_block) -> Dict[str, Any]:
+        """Plan residency for the NEXT dispatch and start its refill
+        transfer — host work only, against the mirror index, so it can
+        run while the previous dispatch is still executing on device."""
         ids = np.unique(np.asarray(ids_block))
-        slot_of = state["slot_of"]
-        slots_ids = np.asarray(slot_of[jnp.asarray(ids)])  # O(block) gather
-        owner = np.asarray(state["owner"]).copy()
-        stamp = np.asarray(state["stamp"]).copy()
+        slot_of = self._meta["slot_of"]
+        owner = self._meta["owner"]
+        stamp = self._meta["stamp"]
         cap = owner.shape[0]
+        slots_ids = slot_of[ids]
         miss = ids[slots_ids < 0]
-        table = state["table"]
+        staged: Dict[str, Any] = {"victims": None}
         if miss.size:
             resident = slots_ids[slots_ids >= 0]
             cand = np.setdiff1d(np.arange(cap), resident)
@@ -342,28 +414,75 @@ class SparseClientStateStore:
                     f"distinct clients of the next dispatch "
                     f"({miss.size} cold, {cand.size} evictable slots) — "
                     f"raise --store-capacity above chunk_size × K")
-            victims = cand[:miss.size]
-            evicted = owner[victims]
-            self._spill_rows(table, victims, evicted)
-            # refill: spilled row if the client was seen before, else the
-            # init template
+            # sorted victims keep the staged rows in slot order, so a
+            # sharded flavor can land each row on its owning shard
+            victims = np.sort(cand[:miss.size])
+            evicted = owner[victims].copy()
+            # refill: spilled row if the client was seen before, else
+            # the init template
             tmpl = self._meta["template"]
-            fill = [self._cold.pop(int(cid), tmpl) for cid in miss]
-            stacked = [np.stack([row[i] for row in fill])
-                       for i in range(len(tmpl))]
-            rows_tree = jax.tree_util.tree_unflatten(
-                self._meta["treedef"], [jnp.asarray(s) for s in stacked])
-            table = tree_set_rows(table, jnp.asarray(victims), rows_tree)
+            fill = [self._pop_cold(int(cid)) or tmpl for cid in miss]
+            rows_np = self._stage_rows(fill)
+            t0 = time.perf_counter()
+            placement = self._refill_placement(victims)
+            rows_dev = [jax.device_put(r) if placement is None
+                        else jax.device_put(r, s)
+                        for r, s in zip(rows_np, _broadcast(placement,
+                                                            len(rows_np)))]
+            self._meta["transfer_ms"] += (time.perf_counter() - t0) * 1e3
             gone = evicted[evicted >= 0]
+            slot_of[gone] = -1
+            slot_of[miss] = victims
+            owner[victims] = miss
+            staged.update(victims=victims, miss=miss, gone=gone,
+                          evicted=evicted, rows=rows_dev)
+        # touch every participant's slot so the LRU order tracks rounds
+        touch = int(stamp.max()) + 1
+        slots = slot_of[ids]
+        stamp[slots] = touch
+        staged.update(touch_slots=slots.copy(), touch_value=touch)
+        return staged
+
+    def commit_chunk(self, state: Pytree, staged: Dict[str, Any]) -> Pytree:
+        """Apply a staged plan to the device-side state.  Everything here
+        is an enqueued functional update on the carry handles — spilling
+        gathers from the LATEST table (the output of the dispatch that
+        last wrote it) in one stacked transfer, and the staged refill
+        rows splice in with one scatter — so committing on top of an
+        in-flight chunk's outputs just extends the device queue."""
+        table, slot_of = state["table"], state["slot_of"]
+        owner, stamp = state["owner"], state["stamp"]
+        victims = staged["victims"]
+        if victims is not None:
+            evicted = staged["evicted"]
+            live = evicted >= 0
+            if self.spill and np.any(live):
+                rows = tree_rows(table, jnp.asarray(victims[live]))
+                try:                    # cold rows park on the CPU device
+                    rows = jax.device_put(rows, jax.devices("cpu")[0])
+                except RuntimeError:
+                    pass                # no CPU device: plain device refs
+                block = _SpillBlock(jax.tree_util.tree_leaves(rows))
+                for j, cid in enumerate(evicted[live]):
+                    self._cold[int(cid)] = (block, j)
+            rows_tree = jax.tree_util.tree_unflatten(
+                self._meta["treedef"], [jnp.asarray(r)
+                                        for r in staged["rows"]])
+            table = tree_set_rows(table, jnp.asarray(victims), rows_tree)
+            gone = staged["gone"]
             if gone.size:
                 slot_of = slot_of.at[jnp.asarray(gone)].set(-1)
-            slot_of = slot_of.at[jnp.asarray(miss)].set(
+            slot_of = slot_of.at[jnp.asarray(staged["miss"])].set(
                 jnp.asarray(victims, jnp.int32))
-            owner[victims] = miss
-        # touch every participant's slot so the LRU order tracks rounds
-        stamp[np.asarray(slot_of[jnp.asarray(ids)])] = int(stamp.max()) + 1
+            owner = owner.at[jnp.asarray(victims)].set(
+                jnp.asarray(staged["miss"], jnp.int32))
+        stamp = stamp.at[jnp.asarray(staged["touch_slots"])].set(
+            jnp.int32(staged["touch_value"]))
         return {"table": table, "slot_of": slot_of,
-                "owner": jnp.asarray(owner), "stamp": jnp.asarray(stamp)}
+                "owner": owner, "stamp": stamp}
+
+    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
+        return self.commit_chunk(state, self.stage_chunk(ids_block))
 
     # -- debugging / parity helper ------------------------------------------
 
@@ -380,7 +499,7 @@ class SparseClientStateStore:
                for leaf in tmpl]
         for cid in range(n):
             slot = slot_of[cid]
-            row = table_leaves if slot >= 0 else self._cold.get(cid)
+            row = table_leaves if slot >= 0 else self._cold_row(cid)
             if row is None:
                 continue
             for i in range(len(out)):
@@ -389,7 +508,15 @@ class SparseClientStateStore:
             self._meta["treedef"], [jnp.asarray(o) for o in out])
 
 
-def _replay_device_sampling(key, n_clients: int, K: int, R: int) -> np.ndarray:
+def _broadcast(placement, n: int):
+    """Per-leaf placements for the staged refill transfer: a list is
+    taken as-is, anything else repeats for every leaf."""
+    if isinstance(placement, (list, tuple)):
+        return list(placement)
+    return [placement] * n
+
+
+def _replay_device_sampling(key, n_clients: int, K: int, R: int):
     """Replay the chunk's in-program client draws on the host: the chunk
     derives round r's selection key by the fixed split recurrence below
     (see ``_cached_chunk_fn.one_round``), and threefry is deterministic,
@@ -398,13 +525,17 @@ def _replay_device_sampling(key, n_clients: int, K: int, R: int) -> np.ndarray:
     *before* the chunk runs — residency only, the program itself still
     draws its ids in-program, unchanged.  Costs O(R · n_clients) host
     work per chunk; prefer ``sampling="host"`` at very large n_clients.
+
+    Returns ``(ids, key_after)`` — the advanced key lets the overlapped
+    loop replay chunk N+1's draws before chunk N's carried key exists as
+    anything but an in-flight device handle.
     """
     out = []
     for _ in range(R):
         key, rk = jax.random.split(key)
         k_sel, _ = jax.random.split(rk)
         out.append(np.asarray(jax.random.permutation(k_sel, n_clients)[:K]))
-    return np.stack(out)
+    return np.stack(out), key
 
 
 class HostBackend:
@@ -436,6 +567,19 @@ class HostBackend:
         """Hook run before every chunk dispatch when the strategy's
         store needs host-side residency management (see the
         ClientStateStore contract); the default is a no-op."""
+        return algo_state
+
+    def stage_chunk_state(self, ids_block) -> Any:
+        """First half of :meth:`prepare_chunk_state`: host planning +
+        async staging transfers only, no device-state reads — safe to
+        run while the previous dispatch is still executing.  Returns an
+        opaque token for :meth:`commit_chunk_state` (None = nothing to
+        do)."""
+        return None
+
+    def commit_chunk_state(self, algo_state: Dict, staged: Any) -> Dict:
+        """Second half: splice a staged plan into the (possibly still
+        in-flight) algo-state carry.  Must be enqueue-only."""
         return algo_state
 
     def jit_chunk(self, chunk: Callable, task: Task,
@@ -536,6 +680,28 @@ class AggregateStrategy(HostBackend):
             return algo_state
         return dict(algo_state,
                     **{key: store.prepare_chunk(algo_state[key], ids_block)})
+
+    def stage_chunk_state(self, ids_block) -> Any:
+        store = self.state_store
+        key = self._STORE_KEYS.get(self.algorithm)
+        if key is None or not getattr(store, "needs_host_ids", False):
+            return None
+        if hasattr(store, "stage_chunk"):
+            return ("staged", key, store.stage_chunk(ids_block))
+        # stores without a staged contract degrade gracefully: remember
+        # the ids and run the classic synchronous prepare at commit time
+        return ("ids", key, np.asarray(ids_block))
+
+    def commit_chunk_state(self, algo_state: Dict, staged: Any) -> Dict:
+        if staged is None:
+            return algo_state
+        tag, key, val = staged
+        store = self.state_store
+        if tag == "ids":
+            return dict(algo_state,
+                        **{key: store.prepare_chunk(algo_state[key], val)})
+        return dict(algo_state,
+                    **{key: store.commit_chunk(algo_state[key], val)})
 
     def make_server_update(self, task: Optional[Task] = None
                            ) -> Optional[Tuple[Callable, Callable]]:
@@ -808,6 +974,16 @@ class RoundSchedule:
     the final round — the same cadence as the seed drivers, but computed
     in-program from a per-round mask, so any ``eval_every`` composes
     with any ``chunk_size`` without splitting a dispatch.
+
+    ``overlap=True`` pipelines the chunk loop: while dispatch N runs on
+    device, the engine plans residency for dispatch N+1 (sampling
+    replay, LRU eviction plan) and stages its refill rows with
+    non-blocking transfers, so host residency cost hides behind device
+    compute.  Staging only re-orders HOST work (the device-side op
+    stream is identical), so overlapped == synchronous is bitwise; the
+    knob is a pure throughput trade and a no-op for dense stores.  It
+    is ignored (forced off) when a switch policy pins per-round
+    dispatch.
     """
     rounds: int
     lr_decay: float = 0.998
@@ -817,6 +993,7 @@ class RoundSchedule:
     chunk_size: int = 1
     sampling: str = "device"        # device | host
     host_rng_offset: int = 0
+    overlap: bool = False
 
     def __post_init__(self):
         if self.sampling not in ("device", "host"):
@@ -830,6 +1007,12 @@ class EngineResult:
     algo_state: Dict[str, Pytree]
     server_state: Any = None
     dispatches: int = 0             # chunk-program invocations this run
+    # wall-time breakdown of the chunk loop (totals over the run, ms):
+    # host_residency_ms = stage planning + staging-transfer enqueue,
+    # staged_transfer_ms = the device_put slice of that (store-reported),
+    # dispatch_enqueue_ms = commit + chunk_fn call overhead,
+    # device_wait_ms = blocking on the dispatched chunk's outputs
+    timing: Optional[Dict[str, float]] = None
 
 
 def make_chunk_fn(task: Task, strategy, schedule: RoundSchedule,
@@ -921,6 +1104,20 @@ def _cached_chunk_fn(task: Task, strategy, sampling: str,
     return strategy.jit_chunk(chunk, task, n_clients)
 
 
+@dataclasses.dataclass
+class _ChunkPlan:
+    """One dispatch's host-derived inputs, computable ahead of time so
+    the overlapped loop can plan chunk N+1 while chunk N executes."""
+    rnd: int
+    R: int
+    ids: Optional[jnp.ndarray]
+    ids_block: Optional[np.ndarray]
+    lr_scales: jnp.ndarray
+    eval_mask: Optional[jnp.ndarray]
+    do_eval: List[bool]
+    staged: Any = None
+
+
 def run_rounds(task: Task, data: FederatedDataset, strategy,
                schedule: RoundSchedule, *,
                init_params: Optional[Pytree] = None,
@@ -992,31 +1189,49 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     label = label or getattr(strategy, "name", phase)
     # per-round switch decisions need per-round dispatch
     chunk = 1 if switch_policy is not None else max(1, schedule.chunk_size)
+    # the overlapped pipeline pre-plans the NEXT chunk while the current
+    # one runs; a switch policy decides per round, so it forces sync
+    overlap = bool(getattr(schedule, "overlap", False)) \
+        and switch_policy is None
 
     # sparse stores manage residency on the host between dispatches: they
     # must see each chunk's client ids before the chunk runs
     store = getattr(strategy, "state_store", None)
-    sparse_residency = bool(getattr(store, "needs_host_ids", False))
+    sparse_residency = bool(getattr(store, "needs_host_ids", False)) \
+        and bool(algo_state)
+    # device sampling: the replay key advances on the host by the same
+    # split recurrence the program runs, so chunk N+1's draws are known
+    # before chunk N's carried key has materialized
+    replay_key = key
 
-    history: List[Dict[str, float]] = []
-    rnd = 0
-    dispatches = 0
-    while rnd < schedule.rounds:
+    timing = {"host_residency_ms": 0.0, "staged_transfer_ms": 0.0,
+              "dispatch_enqueue_ms": 0.0, "device_wait_ms": 0.0}
+    transfer_ms0 = float(getattr(store, "staged_transfer_ms", 0.0) or 0.0)
+
+    def make_plan(rnd: int) -> _ChunkPlan:
+        """Everything host-derived a dispatch needs: the round window,
+        sampled ids, residency id block, lr scales and the eval mask —
+        all pure functions of the (host) rng streams and the global
+        round index, so planning order == execution order keeps the
+        streams bit-identical whether or not the loop overlaps."""
+        nonlocal replay_key
         R = min(chunk, schedule.rounds - rnd)
         ids = None
         if host_rng is not None:
             ids = jnp.asarray(np.stack([
                 host_rng.choice(n_clients, size=K, replace=False)
                 for _ in range(R)]))
-        if sparse_residency and algo_state:
+        ids_block = None
+        if sparse_residency:
             # host sampling: the ids are already known; device sampling:
             # replay the chunk's in-program draw (bit-identical threefry
             # recurrence) — residency only, the program still samples
             # in-program unchanged
-            ids_block = (np.asarray(ids) if ids is not None else
-                         _replay_device_sampling(key, n_clients, K, R))
-            algo_state = strategy.prepare_chunk_state(
-                algo_state, ids_block.reshape(-1))
+            if ids is not None:
+                ids_block = np.asarray(ids)
+            else:
+                ids_block, replay_key = _replay_device_sampling(
+                    replay_key, n_clients, K, R)
         lr_scales = jnp.asarray(
             [schedule.lr_decay ** (rnd + j) for j in range(R)], jnp.float32)
         # the eval cadence is a host-computed mask over GLOBAL round
@@ -1027,31 +1242,67 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
             do_eval = [(rnd + j + 1) % schedule.eval_every == 0
                        or rnd + j + 1 == schedule.rounds for j in range(R)]
             eval_mask = jnp.asarray(do_eval)
+        return _ChunkPlan(rnd=rnd, R=R, ids=ids, ids_block=ids_block,
+                          lr_scales=lr_scales, eval_mask=eval_mask,
+                          do_eval=do_eval)
 
+    def stage(plan: _ChunkPlan) -> None:
+        if plan.ids_block is None:
+            return
+        t0 = time.perf_counter()
+        plan.staged = strategy.stage_chunk_state(plan.ids_block.reshape(-1))
+        timing["host_residency_ms"] += (time.perf_counter() - t0) * 1e3
+
+    history: List[Dict[str, float]] = []
+    dispatches = 0
+    plan = make_plan(0) if schedule.rounds > 0 else None
+    staged_plan = None
+    while plan is not None:
+        if staged_plan is not plan:     # sync path (or the first chunk)
+            stage(plan)
+        t0 = time.perf_counter()
+        algo_state = strategy.commit_chunk_state(algo_state, plan.staged)
         key, params, algo_state, server_state, losses, metrics = chunk_fn(
             key, params, algo_state, server_state, x_all, y_all, n_real,
-            ids, lr_scales, eval_mask, ev_x, ev_y, ev_w)
+            plan.ids, plan.lr_scales, plan.eval_mask, ev_x, ev_y, ev_w)
         dispatches += 1
-        losses = np.asarray(losses)
+        timing["dispatch_enqueue_ms"] += (time.perf_counter() - t0) * 1e3
+
+        nxt = None
+        if overlap and plan.rnd + plan.R < schedule.rounds:
+            # the pipeline: plan + stage chunk N+1 while chunk N runs
+            nxt = make_plan(plan.rnd + plan.R)
+            stage(nxt)
+            staged_plan = nxt
+
+        t0 = time.perf_counter()
+        losses = np.asarray(losses)     # blocks: the dispatch drains here
+        timing["device_wait_ms"] += (time.perf_counter() - t0) * 1e3
         metrics = np.asarray(metrics) if metrics is not None else None
 
+        rnd, R = plan.rnd, plan.R
         for j in range(R):
             if ledger is not None:
                 strategy.record(ledger, K, params)
             row = {"round": rnd + j, "local_loss": float(losses[j]),
                    "phase": phase}
-            if do_eval[j]:
+            if plan.do_eval[j]:
                 row["acc"] = float(metrics[j])
                 if verbose:
                     print(f"[{label}] round {rnd + j + 1}/{schedule.rounds} "
                           f"loss={row['local_loss']:.4f} acc={row['acc']:.4f}",
                           flush=True)
             history.append(row)
-        rnd += R
 
         if switch_policy is not None and switch_policy.should_switch(
-                rnd - 1, history):
+                rnd + R - 1, history):
             break
+        if not overlap:
+            nxt = (make_plan(rnd + R) if rnd + R < schedule.rounds else None)
+        plan = nxt
+
+    timing["staged_transfer_ms"] = \
+        float(getattr(store, "staged_transfer_ms", 0.0) or 0.0) - transfer_ms0
 
     if fops is not None:                # EngineResult speaks trees
         params = fops.unflatten(params)
@@ -1061,4 +1312,4 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
         # (n_clients, model) tree here would defeat the sparse store
     return EngineResult(params=params, history=history,
                         algo_state=algo_state, server_state=server_state,
-                        dispatches=dispatches)
+                        dispatches=dispatches, timing=timing)

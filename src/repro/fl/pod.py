@@ -83,6 +83,7 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -206,9 +207,13 @@ class ShardedSparseClientStateStore(SparseClientStateStore):
     policy as the dense sharded store, applied to slots instead of
     clients); the id→slot index and the LRU bookkeeping replicate —
     they are O(n_clients)·int32 and O(capacity), negligible next to one
-    model row.  Residency (:meth:`prepare_chunk`) still runs eagerly on
-    the host between dispatches; the rebuilt state re-pins itself so
-    the donated chunk carry keeps the mesh layout."""
+    model row.  Residency (stage/commit, see the base class) still runs
+    eagerly on the host between dispatches; the committed state re-pins
+    itself so the donated chunk carry keeps the mesh layout, and staged
+    refill rows land DIRECTLY on their owning data shard whenever the
+    eviction plan splits evenly across shards (the in-program scatter
+    pins the layout either way — placement is a transfer-cost
+    optimization, not a correctness requirement)."""
     mesh: Any = None
 
     def _state_shardings(self, state: Pytree) -> Pytree:
@@ -225,8 +230,28 @@ class ShardedSparseClientStateStore(SparseClientStateStore):
         return jax.lax.with_sharding_constraint(
             out, self._state_shardings(out))
 
-    def prepare_chunk(self, state: Pytree, ids_block) -> Pytree:
-        new = super().prepare_chunk(state, ids_block)
+    def _refill_placement(self, victims):
+        """Placement for the staged ``(n_miss, ...)`` refill rows: the
+        table's row axis shards over ``data`` in equal contiguous
+        blocks, and the staged victims are sorted, so when the per-shard
+        eviction counts are equal the row-sharded transfer puts every
+        row straight onto the shard that owns its destination slot.
+        Uneven plans fall back to replicated staging."""
+        if self.mesh is None:
+            return None
+        d = rules.mesh_axis_size(self.mesh, rules.DATA)
+        cap = self._meta["owner"].shape[0]
+        if d <= 1 or cap % d or victims.size % d:
+            return rules.replicated(self.mesh)
+        per_shard = cap // d
+        counts = np.bincount(victims // per_shard, minlength=d)
+        if not np.all(counts == victims.size // d):
+            return rules.replicated(self.mesh)
+        return jax.sharding.NamedSharding(
+            self.mesh, rules.client_axis_pspec(self.mesh, 1, victims.size))
+
+    def commit_chunk(self, state: Pytree, staged) -> Pytree:
+        new = super().commit_chunk(state, staged)
         return jax.device_put(new, self._state_shardings(new))
 
     def shardings(self, template: Pytree, n_clients: int, mesh=None) -> Pytree:
@@ -311,6 +336,68 @@ class ShardedFlatOps(FlatParamOps):
                                        [P()] * len(scalars)),
                         out_specs=(bspec,) * n_out, check_rep=False)
         return run(*bufs, *scalars)
+
+    # -- hierarchical lanes: shard-local partials + one psum combine --------
+    #
+    # The lane layout stacks the G pod accumulators into (G, n_shards,
+    # per_shard) buffers with the LANE axis sharded over the mesh `data`
+    # axis (rules.lane_axis_pspec): each data shard owns one pod's whole
+    # f32 partial, kept p-free (accum-only fused_delta_accum, so the
+    # `−(Σc)·p` term applies once AFTER the combine instead of per lane —
+    # that rewrite is what makes the partials independent of the
+    # FSDP-sharded params).  The cross-pod combine is then literally one
+    # jax.lax.psum over `data` per bucket — asserted on the lowered HLO
+    # in tests/test_pod_engine.py.
+
+    def lane_count(self) -> int:
+        """Pod lanes the mesh can host shard-locally (= |data| axis)."""
+        return rules.mesh_axis_size(self.mesh, rules.DATA)
+
+    def lane_zeros(self, G: int) -> Dict[str, jnp.ndarray]:
+        """Lane-stacked f32 zero accumulators, pinned to the lane
+        layout (lane axis over ``data``)."""
+        if G != self.lane_count():
+            raise ValueError(
+                f"lane layout needs n_pods == |data| axis "
+                f"({G} != {self.lane_count()})")
+        zeros = self.zeros(jnp.float32)
+        lane_sh = rules.lane_shardings(self.view, self.mesh)
+        return {name: jax.lax.with_sharding_constraint(
+                    jnp.zeros((G,) + b.shape, b.dtype), lane_sh[name])
+                for name, b in zeros.items()}
+
+    def lane_accum(self, acc_bufs, w_bufs, coeffs) -> Dict[str, jnp.ndarray]:
+        """``acc[g] += coeffs[g] · w[g]`` per lane, shard-local: each
+        data shard runs the blocked accum-only kernel on its own lane's
+        contiguous tile — zero collectives."""
+        interpret = self.interpret
+        coeffs = jnp.asarray(coeffs, jnp.float32)
+        lane_spec = rules.lane_axis_pspec()
+
+        def body(a_loc, w_loc, c_loc):
+            out = ops.fused_delta_accum(a_loc.reshape(-1), w_loc.reshape(-1),
+                                        None, c_loc[0], interpret=interpret)
+            return out.reshape(a_loc.shape)
+
+        run = shard_map(body, mesh=self.mesh,
+                        in_specs=(lane_spec, lane_spec, P(rules.DATA)),
+                        out_specs=lane_spec, check_rep=False)
+        return {name: run(acc, w_bufs[name], coeffs)
+                for name, acc in acc_bufs.items()}
+
+    def lane_combine(self, acc_bufs) -> Dict[str, jnp.ndarray]:
+        """The single cross-pod combine: one ``psum`` over the mesh
+        ``data`` axis per bucket (any same-shard lanes fold locally
+        first), returning the replicated ``(n_shards, per_shard)``
+        total."""
+        lane_spec = rules.lane_axis_pspec()
+
+        def body(a_loc):
+            return jax.lax.psum(jnp.sum(a_loc, axis=0), rules.DATA)
+
+        run = shard_map(body, mesh=self.mesh, in_specs=(lane_spec,),
+                        out_specs=P(None, None), check_rep=False)
+        return {name: run(acc) for name, acc in acc_bufs.items()}
 
 
 @functools.lru_cache(maxsize=32)
@@ -692,23 +779,51 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                         lambda a: a.reshape((S, G) + a.shape[1:]), t)
 
                 vclient = jax.vmap(client, in_axes=(0, 0, 0, 0))
-                vadd = jax.vmap(add_delta, in_axes=(0, 0, 0))
-                delta0 = jax.tree_util.tree_map(
-                    lambda d: jnp.zeros((G,) + d.shape, d.dtype),
-                    zeros_delta())
+                # the lane axis shards over the mesh `data` axis when the
+                # pod count matches it AND the carries are flat — each
+                # data shard then owns one pod's p-free partial
+                # (accum-only kernel) and the cross-pod combine lowers to
+                # ONE psum over `data` per bucket; otherwise (1-device
+                # test meshes, tree impl, mismatched n_pods) lanes stay
+                # unsharded and the combine is a local tree-sum
+                lane_psum = fused and G == fops.lane_count()
+                if lane_psum:
+                    def one_step(delta_g, inp):
+                        k_g, cx_g, cy_g, w_g, row_g = inp
+                        w_end_g, out_g, loss_g = vclient(k_g, cx_g, cy_g,
+                                                         row_g)
+                        return (fops.lane_accum(delta_g, w_end_g,
+                                                w_g / wsum),
+                                (out_g, loss_g))
 
-                def one_step(delta_g, inp):
-                    k_g, cx_g, cy_g, w_g, row_g = inp
-                    w_end_g, out_g, loss_g = vclient(k_g, cx_g, cy_g, row_g)
-                    return vadd(delta_g, w_end_g, w_g), (out_g, loss_g)
+                    delta_g, (outs, losses) = jax.lax.scan(
+                        one_step, fops.lane_zeros(G),
+                        resh((keys, cx, cy, w32, rows)))
+                    acc = fops.lane_combine(delta_g)
+                    acc = jax.lax.with_sharding_constraint(acc, p_sh)
+                    # A = Σᵢ cᵢ·wᵢ came back combined; the −(Σc)·p term
+                    # factors out exactly (Σᵢ wᵢ/wsum = 1), applied once
+                    delta = {name: acc[name] -
+                             params[name].astype(jnp.float32)
+                             for name in acc}
+                else:
+                    vadd = jax.vmap(add_delta, in_axes=(0, 0, 0))
+                    delta0 = jax.tree_util.tree_map(
+                        lambda d: jnp.zeros((G,) + d.shape, d.dtype),
+                        zeros_delta())
 
-                delta_g, (outs, losses) = jax.lax.scan(
-                    one_step, delta0, resh((keys, cx, cy, w32, rows)))
-                # the single cross-pod combine: one reduction per bucket
-                # over the G pod partials (a psum when the lane axis is
-                # device-sharded)
-                delta = jax.tree_util.tree_map(
-                    lambda d: jnp.sum(d, axis=0), delta_g)
+                    def one_step(delta_g, inp):
+                        k_g, cx_g, cy_g, w_g, row_g = inp
+                        w_end_g, out_g, loss_g = vclient(k_g, cx_g, cy_g,
+                                                         row_g)
+                        return vadd(delta_g, w_end_g, w_g), (out_g, loss_g)
+
+                    delta_g, (outs, losses) = jax.lax.scan(
+                        one_step, delta0, resh((keys, cx, cy, w32, rows)))
+                    # the single cross-pod combine: one reduction per
+                    # bucket over the G pod partials
+                    delta = jax.tree_util.tree_map(
+                        lambda d: jnp.sum(d, axis=0), delta_g)
                 # (S, G, ...) lane outputs fold back to client order —
                 # client j ran as step j//G, lane j%G
                 outs = jax.tree_util.tree_map(
@@ -793,6 +908,7 @@ class PodFLConfig:
     n_pods: Optional[int] = None
     store: str = "dense"                # dense | sparse
     store_capacity: int = 1024          # sparse active-set rows
+    overlap: bool = True                # pipeline residency behind compute
 
     def strategy(self) -> PodAggregateStrategy:
         kwargs = {}
@@ -815,7 +931,8 @@ class PodFLConfig:
             rounds=self.rounds, lr_decay=self.lr_decay,
             eval_every=self.eval_every, eval_batch=self.eval_batch,
             seed=self.seed, chunk_size=self.chunk_size,
-            sampling=self.sampling, host_rng_offset=HOST_RNG_OFFSET_P2)
+            sampling=self.sampling, host_rng_offset=HOST_RNG_OFFSET_P2,
+            overlap=self.overlap)
 
 
 def run_pod_rounds(task: Task, data: FederatedDataset, cfg,

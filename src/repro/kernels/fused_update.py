@@ -212,30 +212,44 @@ def _delta_accum_kernel(sc_ref, d_ref, w_ref, p_ref, o_ref):
         w_ref[...].astype(jnp.float32) - p_ref[...].astype(jnp.float32))
 
 
-def delta_accum(delta: jnp.ndarray, w_end: jnp.ndarray, p: jnp.ndarray,
-                coeff, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+def _weighted_accum_kernel(sc_ref, d_ref, w_ref, o_ref):
+    coeff = sc_ref[0]
+    o_ref[...] = d_ref[...] + coeff * w_ref[...].astype(jnp.float32)
+
+
+def delta_accum(delta: jnp.ndarray, w_end: jnp.ndarray,
+                p: Optional[jnp.ndarray], coeff, *,
+                block_rows: int = DEFAULT_BLOCK_ROWS,
                 interpret: bool = False) -> jnp.ndarray:
     """``delta + coeff·(w_end₃₂ − p₃₂)`` — one client's contribution to
-    the running f32 weighted-delta sum (the pod FedAvg all-reduce)."""
+    the running f32 weighted-delta sum (the pod FedAvg all-reduce).
+
+    ``p=None`` is the ACCUM-ONLY form ``delta + coeff·w_end₃₂``: the
+    hierarchical psum path keeps its per-lane partials p-free (the
+    ``−(Σcoeff)·p`` term factors out of the lane sums and is applied
+    once after the cross-pod combine), so the lane accumulator never
+    needs the params resident per lane."""
     n = delta.shape[-1]
     if n == 0:
         return delta
     rows_p, n_blocks = _grid_rows(n, block_rows, interpret)
     br = rows_p // n_blocks
     blk = pl.BlockSpec((br, LANES), lambda i, sc: (i, 0))
+    kernel = _delta_accum_kernel if p is not None else _weighted_accum_kernel
+    operands = [_pad_rows(delta, rows_p), _pad_rows(w_end, rows_p)]
+    if p is not None:
+        operands.append(_pad_rows(p, rows_p))
     out = pl.pallas_call(
-        _delta_accum_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(n_blocks,),
-            in_specs=[blk, blk, blk],
+            in_specs=[blk] * len(operands),
             out_specs=blk,
         ),
         out_shape=jax.ShapeDtypeStruct((rows_p, LANES), jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(coeff, jnp.float32).reshape(1),
-      _pad_rows(delta, rows_p), _pad_rows(w_end, rows_p),
-      _pad_rows(p, rows_p))
+    )(jnp.asarray(coeff, jnp.float32).reshape(1), *operands)
     return out.reshape(-1)[:n]
 
 

@@ -100,10 +100,12 @@ def fused_weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def fused_delta_accum(delta: jnp.ndarray, w_end: jnp.ndarray,
-                      p: jnp.ndarray, coeff, *, block_rows: int = 0,
+                      p, coeff, *, block_rows: int = 0,
                       interpret: bool = False) -> jnp.ndarray:
     """One client's contribution to the pod backend's running f32
-    weighted-delta sum: ``delta + coeff * (w_end32 - p32)``."""
+    weighted-delta sum: ``delta + coeff * (w_end32 - p32)``, or the
+    p-free accum-only form ``delta + coeff * w_end32`` when ``p=None``
+    (hierarchical per-lane partials)."""
     return _fu.delta_accum(delta, w_end, p, coeff,
                            block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
                            interpret=interpret)

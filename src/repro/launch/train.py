@@ -233,7 +233,8 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                      aggregation: str = "sequential",
                      n_pods: Optional[int] = None,
                      store: str = "dense",
-                     store_capacity: int = 1024) -> PodTrainResult:
+                     store_capacity: int = 1024,
+                     overlap: str = "on") -> PodTrainResult:
     """CyclicFL end-to-end on the pod backend: a declarative P1→P2 phase
     schedule through the shared round engine — no hand-rolled loops.
 
@@ -259,10 +260,14 @@ def run_pod_training(cfg: TransformerConfig, data, *,
     common = dict(mesh=mesh, clients_per_round=clients_per_round, spec=spec,
                   layout=layout, chunk_size=chunk_size, sampling=sampling,
                   eval_every=eval_every, eval_batch=eval_batch)
-    # P2-only knobs: aggregation topology and the client-state store
-    # (P1 relays the model and keeps no per-client state)
+    # P2-only knobs: aggregation topology, the client-state store and
+    # the overlapped residency pipeline (P1 relays the model and keeps
+    # no per-client state, so overlap has nothing to hide there)
+    if overlap not in ("on", "off"):
+        raise ValueError(f"--overlap must be on|off, got {overlap!r}")
     fl_extra = dict(aggregation=aggregation, n_pods=n_pods, store=store,
-                    store_capacity=store_capacity)
+                    store_capacity=store_capacity,
+                    overlap=(overlap == "on"))
     phases = []
     if cyclic_rounds > 0:
         phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
@@ -354,6 +359,11 @@ def main(argv=None) -> int:
                     help="sparse store rows; must cover the distinct "
                          "participants of one dispatch "
                          "(chunk-size x clients-per-round)")
+    ap.add_argument("--overlap", default="on", choices=("on", "off"),
+                    help="pipeline sparse-store residency for dispatch "
+                         "N+1 behind dispatch N's device compute "
+                         "(bitwise-identical results; off = synchronous "
+                         "prepare between dispatches)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -379,7 +389,8 @@ def main(argv=None) -> int:
         eval_every=args.eval_every,
         sampling=args.sampling, layout=args.layout,
         aggregation=args.aggregation, n_pods=args.n_pods,
-        store=args.store, store_capacity=args.store_capacity)
+        store=args.store, store_capacity=args.store_capacity,
+        overlap=args.overlap)
     first = res.history[0]["loss"]
     last = res.history[-1]["loss"]
     print(f"[train] {args.arch}: loss {first:.4f} -> {last:.4f} "

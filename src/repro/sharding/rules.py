@@ -235,6 +235,28 @@ def flat_param_shardings(view, mesh: Mesh) -> dict:
             for g in view.groups}
 
 
+def mesh_axis_size(mesh: Mesh, axis: str = DATA) -> int:
+    """Size of a named mesh axis (1 when the axis is absent)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
+
+
+def lane_axis_pspec(leaf_rank: int = 3) -> P:
+    """Hierarchical-aggregation lane buffers ``(G, n_shards,
+    per_shard)``: the pod-lane axis shards over the mesh ``data`` axis —
+    one pod per data shard — while each lane's flat tile stays whole
+    (replicated over the remaining axes) so the per-lane
+    ``fused_delta_accum`` is shard-local and the cross-pod combine is
+    one ``psum`` over ``data``."""
+    return P(DATA, *([None] * (leaf_rank - 1)))
+
+
+def lane_shardings(view, mesh: Mesh) -> dict:
+    """NamedSharding per bucket for lane-stacked ``(G, n_shards,
+    per_shard)`` accumulators."""
+    return {g.name: NamedSharding(mesh, lane_axis_pspec())
+            for g in view.groups}
+
+
 # ---------------------------------------------------------------------------
 # federated batch / client-stack sharding (pod round programs)
 # ---------------------------------------------------------------------------

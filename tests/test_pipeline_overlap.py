@@ -1,0 +1,182 @@
+"""Overlapped round pipeline: ``RoundSchedule(overlap=True)`` must be
+bitwise-identical to the synchronous path.
+
+The pipeline only reorders WHEN host residency planning happens (chunk
+N+1 is staged while dispatch N runs on device) — never WHAT is planned:
+the host rng / device-sampling replay streams advance in execution
+order either way, and ``commit_chunk`` splices staged rows against the
+latest slot table.  These tests pin that contract:
+
+  - host engine, sparse store with capacity forcing eviction + spill +
+    refill across dispatch boundaries (scaffold AND moon, host AND
+    replayed device sampling): bitwise;
+  - dense store (residency is a no-op, the pipeline still prefetches
+    plans): bitwise;
+  - pod backend on the 1-device host mesh with the sharded store:
+    bitwise;
+  - a pathologically slow ``stage_chunk`` degrades throughput only —
+    results stay bitwise and the dispatch count is exact;
+  - ``EngineResult.timing`` carries the pipeline breakdown;
+  - a switch policy forces the pipeline off (chunk=1 probing) without
+    changing results.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.federated import FederatedDataset
+from repro.fl.engine import (
+    AggregateStrategy,
+    DenseClientStateStore,
+    RoundSchedule,
+    SparseClientStateStore,
+    run_rounds,
+)
+from repro.fl.local import LocalSpec
+from repro.fl.pod import PodAggregateStrategy, ShardedSparseClientStateStore
+from repro.fl.task import vision_task
+from repro.launch.mesh import make_host_mesh
+
+SEED = 0
+N_CLIENTS = 8
+CAPACITY = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = vision_task("mlp", in_ch=1, seed_kwargs={"img": 8, "d_hidden": 16})
+    rng = np.random.default_rng(SEED)
+    per = 16
+    x = rng.normal(size=(N_CLIENTS, per, 8, 8, 1)).astype(np.float32)
+    y = rng.integers(0, 10, size=(N_CLIENTS, per)).astype(np.int32)
+    data = FederatedDataset(x=x, y=y,
+                            n_real=np.full((N_CLIENTS,), per, np.int32),
+                            test_x=x[0], test_y=y[0], n_classes=10,
+                            name="overlap-test")
+    return task, data
+
+
+def _sched(sampling, *, overlap, rounds=6, chunk=2):
+    return RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                         seed=SEED, chunk_size=chunk, sampling=sampling,
+                         host_rng_offset=17, overlap=overlap)
+
+
+def _spec(algo="scaffold"):
+    return LocalSpec(n_steps=2, batch_size=4, lr=0.05, variant=algo,
+                     update_impl="fused_interpret")
+
+
+def _host_run(task, data, store, sched, algo="scaffold"):
+    strat = AggregateStrategy(spec=_spec(algo), algorithm=algo,
+                              participation=0.25, state_store=store)
+    return run_rounds(task, data, strat, sched)
+
+
+def _assert_bitwise(res_a, res_b):
+    np.testing.assert_array_equal(
+        [h["local_loss"] for h in res_a.history],
+        [h["local_loss"] for h in res_b.history])
+    for a, b in zip(jax.tree_util.tree_leaves(res_a.params),
+                    jax.tree_util.tree_leaves(res_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(res_a.algo_state),
+                    jax.tree_util.tree_leaves(res_b.algo_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res_a.dispatches == res_b.dispatches
+
+
+@pytest.mark.parametrize("algo", ["scaffold", "moon"])
+@pytest.mark.parametrize("sampling", ["host", "device"])
+def test_overlap_matches_sync_sparse_host(setup, algo, sampling):
+    """capacity=4 with chunk=2 × K=2 evicts, spills and refaults rows
+    across every dispatch boundary — the exact window where a stale
+    slot table or an early/late replay draw would diverge."""
+    task, data = setup
+    sync = _host_run(task, data, SparseClientStateStore(capacity=CAPACITY),
+                     _sched(sampling, overlap=False), algo)
+    ovl = _host_run(task, data, SparseClientStateStore(capacity=CAPACITY),
+                    _sched(sampling, overlap=True), algo)
+    _assert_bitwise(sync, ovl)
+
+
+def test_overlap_matches_sync_dense(setup):
+    """Dense store: no residency to pipeline, but plan prefetch still
+    reorders host rng consumption relative to dispatch — must not."""
+    task, data = setup
+    sync = _host_run(task, data, DenseClientStateStore(),
+                     _sched("host", overlap=False))
+    ovl = _host_run(task, data, DenseClientStateStore(),
+                    _sched("host", overlap=True))
+    _assert_bitwise(sync, ovl)
+
+
+def test_overlap_matches_sync_pod(setup):
+    task, data = setup
+    mesh = make_host_mesh()
+
+    def run(overlap):
+        strat = PodAggregateStrategy(
+            spec=_spec(), algorithm="scaffold", mesh=mesh,
+            clients_per_round=2,
+            state_store=ShardedSparseClientStateStore(capacity=CAPACITY,
+                                                      mesh=mesh))
+        return run_rounds(task, data, strat, _sched("host", overlap=overlap))
+
+    _assert_bitwise(run(False), run(True))
+
+
+class _SlowStageStore(SparseClientStateStore):
+    """Host planning slower than device compute: the pipeline's stage
+    step becomes the bottleneck.  Overlap must degrade to sync-like
+    throughput without reordering any observable effect."""
+
+    def stage_chunk(self, ids_block):
+        time.sleep(0.02)
+        return super().stage_chunk(ids_block)
+
+
+def test_slow_host_prep_degrades_gracefully(setup):
+    task, data = setup
+    sync = _host_run(task, data, _SlowStageStore(capacity=CAPACITY),
+                     _sched("host", overlap=False))
+    ovl = _host_run(task, data, _SlowStageStore(capacity=CAPACITY),
+                    _sched("host", overlap=True))
+    _assert_bitwise(sync, ovl)
+    assert ovl.dispatches == 3          # ceil(6 rounds / chunk 2)
+
+
+def test_timing_breakdown_populated(setup):
+    task, data = setup
+    res = _host_run(task, data, SparseClientStateStore(capacity=CAPACITY),
+                    _sched("host", overlap=True))
+    assert res.timing is not None
+    for key in ("host_residency_ms", "staged_transfer_ms",
+                "dispatch_enqueue_ms", "device_wait_ms"):
+        assert key in res.timing and res.timing[key] >= 0.0, res.timing
+    # the sparse path really moved staged bytes through device_put
+    assert res.timing["staged_transfer_ms"] > 0.0
+
+
+def test_switch_policy_forces_overlap_off(setup):
+    """Probing policies need per-round history before planning the next
+    round, so the engine silently drops to the synchronous chunk=1
+    path — results must equal an explicit sync run."""
+    task, data = setup
+
+    class _NeverSwitch:
+        def should_switch(self, rnd, history):
+            return False
+
+    def run(overlap, policy):
+        strat = AggregateStrategy(spec=_spec(), algorithm="scaffold",
+                                  participation=0.25,
+                                  state_store=SparseClientStateStore(
+                                      capacity=CAPACITY))
+        return run_rounds(task, data, strat,
+                          _sched("host", overlap=overlap, rounds=4),
+                          switch_policy=policy)
+
+    _assert_bitwise(run(False, _NeverSwitch()), run(True, _NeverSwitch()))

@@ -470,3 +470,108 @@ def test_pod_hierarchical_combine_16dev_subprocess():
                          timeout=420)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "POD_HIER_SUBPROCESS_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# multi-device: the sharded-lane hierarchical combine IS one psum over
+# `data` — asserted on the lowered HLO, plus fused end-to-end parity
+# ---------------------------------------------------------------------------
+
+_PSUM_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import re
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data.federated import FederatedDataset
+    from repro.fl.engine import RoundSchedule, run_rounds
+    from repro.fl.local import LocalSpec
+    from repro.fl.pod import (PodAggregateStrategy,
+                              ShardedSparseClientStateStore,
+                              _sharded_flat_ops)
+    from repro.fl.task import vision_task
+    from repro.sharding import rules
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    task = vision_task("mlp", in_ch=1, seed_kwargs={"img": 8, "d_hidden": 16})
+    fops = _sharded_flat_ops(task, mesh, "fsdp_tp", True)
+    G = fops.lane_count()
+    assert G == 4, G
+
+    # -- HLO: the cross-pod combine lowers to EXACTLY ONE all-reduce
+    # whose replica groups are the mesh `data` columns — no host gather,
+    # no all-gather/all-to-all
+    rng = np.random.default_rng(0)
+    acc = fops.lane_zeros(G)
+    acc = fops.lane_accum(
+        acc,
+        {k: jnp.asarray(rng.normal(size=(G,) + v.shape[1:], scale=0.1)
+                        .astype(np.float32)) for k, v in acc.items()},
+        jnp.asarray(rng.random(G).astype(np.float32)))
+    hlo = jax.jit(fops.lane_combine).lower(acc).compile().as_text()
+    n_ar = len(re.findall(r"all-reduce(?:-start)?\\(", hlo))
+    assert n_ar == 1, f"expected exactly one psum, found {n_ar}"
+    assert "all-gather" not in hlo and "all-to-all" not in hlo, hlo[-2000:]
+    # the data axis strides the (4, 4) device grid by 4: columns
+    want = "{{0,4,8,12},{1,5,9,13},{2,6,10,14},{3,7,11,15}}"
+    m = re.search(r"replica_groups=(\\{\\{[0-9,{}]*\\}\\})", hlo)
+    assert m and m.group(1) == want, (m and m.group(1), want)
+
+    # -- numerics: combine(accum(...)) == the plain weighted sum
+    comb = fops.lane_combine(acc)
+    for k, v in comb.items():
+        assert v.shape == fops.lane_zeros(G)[k].shape[1:]
+
+    # -- end-to-end: fused hierarchical (sharded lanes + psum) matches
+    # the sequential scan, sparse store refills landing per shard
+    N, per = 8, 16
+    x = rng.normal(size=(N, per, 8, 8, 1)).astype(np.float32)
+    y = rng.integers(0, 10, size=(N, per)).astype(np.int32)
+    data = FederatedDataset(x=x, y=y, n_real=np.full((N,), per, np.int32),
+                            test_x=x[0], test_y=y[0], n_classes=10,
+                            name="psum-test")
+    spec = LocalSpec(n_steps=2, batch_size=4, lr=0.05, variant="scaffold",
+                     update_impl="fused_interpret")
+
+    def run(aggregation, overlap):
+        strat = PodAggregateStrategy(
+            spec=spec, algorithm="scaffold", mesh=mesh, clients_per_round=4,
+            aggregation=aggregation, n_pods=4,
+            state_store=ShardedSparseClientStateStore(capacity=8, mesh=mesh))
+        return run_rounds(task, data, strat,
+                          RoundSchedule(rounds=4, lr_decay=1.0, eval_every=0,
+                                        seed=0, chunk_size=2, sampling="host",
+                                        host_rng_offset=17, overlap=overlap))
+
+    seq = run("sequential", False)
+    hier = run("hierarchical", False)
+    hier_ovl = run("hierarchical", True)
+    np.testing.assert_allclose(
+        [h["local_loss"] for h in seq.history],
+        [h["local_loss"] for h in hier.history], atol=5e-5, rtol=0)
+    for a, b in zip(jax.tree_util.tree_leaves(seq.params),
+                    jax.tree_util.tree_leaves(hier.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=0)
+    # overlapped pipeline == synchronous, BITWISE, on the pod
+    np.testing.assert_array_equal(
+        [h["local_loss"] for h in hier.history],
+        [h["local_loss"] for h in hier_ovl.history])
+    for a, b in zip(jax.tree_util.tree_leaves(hier.params),
+                    jax.tree_util.tree_leaves(hier_ovl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hier_ovl.dispatches == hier.dispatches == 2
+    print("POD_PSUM_SUBPROCESS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pod_hierarchical_psum_lowering_16dev_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _PSUM_SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "POD_PSUM_SUBPROCESS_OK" in out.stdout
