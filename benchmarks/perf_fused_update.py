@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import save_result, time_best_of
 from repro.data.synthetic import DATASETS
+from repro.fl import privacy
 from repro.fl.engine import fused_aggregate
 from repro.fl.local import (
     FlatParamOps,
@@ -87,7 +88,16 @@ def bench_step_tail(task, *, model: str, steps: int, repeats: int,
       fused+treepack — the retired PR-4 flow kept as the before/after
                      reference: gradients arrive TREE-form and are
                      packed every step (``view.flatten`` — a
-                     concatenate).  Reported, not gated."""
+                     concatenate).  Reported, not gated.
+
+    A fourth row, ``fused+dp``, appends the PER-ROUND DP-FedAvg upload
+    to the same S-step scan: the round-delta squared norm, the clip
+    scale and ONE ``dp_clip_noise`` pass (clip + calibrated Gaussian
+    noise fused per bucket, noise pre-drawn like production's
+    round_extra).  DP is per-round work amortized over the S local
+    steps, so the row is gated at >= 0.9x the bare fused row on the
+    dispatch-bound mlp config — privacy must cost one kernel pass, not
+    a second tail."""
     params = task.init(jax.random.PRNGKey(seed))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
     n_leaves = len(jax.tree_util.tree_leaves(params))
@@ -125,16 +135,34 @@ def bench_step_tail(task, *, model: str, steps: int, repeats: int,
         (p, _), _ = jax.lax.scan(step, (p_bufs, view.zeros()), gs)
         return p
 
+    dp = privacy.DPSpec(1.0, 0.1)
+
+    @jax.jit
+    def run_fused_dp(p_bufs, gbs, z_bufs):
+        def step(carry, gb):
+            return fused_step_tail(spec, fops, carry[0], gb, carry[1],
+                                   None, lr_scale), ()
+        (p, _), _ = jax.lax.scan(step, (p_bufs, view.zeros()), gbs)
+        # the round's DP upload on top of the same S steps: squared
+        # norm -> clip scale -> one fused clip+noise pass per bucket
+        delta = {name: p[name].astype(jnp.float32) -
+                 p_bufs[name].astype(jnp.float32) for name in p}
+        scale = privacy.clip_scale(dp, privacy.flat_delta_sqnorm(p, p_bufs))
+        return fops.dp_clip_noise(delta, z_bufs, scale, dp.sigma * dp.clip)
+
     g_bufs = view.flatten_stacked(g_stack)
     p_bufs = view.flatten(params)
+    z_bufs = fops.normal(jax.random.PRNGKey(seed + 3))
     jax.block_until_ready(run_tree(params, g_stack))
     jax.block_until_ready(run_fused(p_bufs, g_bufs))
     jax.block_until_ready(run_fused_treepack(p_bufs, g_stack))
+    jax.block_until_ready(run_fused_dp(p_bufs, g_bufs, z_bufs))
     timings = {}
     for impl, fn in (
             ("tree", lambda: run_tree(params, g_stack)),
             ("fused", lambda: run_fused(p_bufs, g_bufs)),
-            ("fused+treepack", lambda: run_fused_treepack(p_bufs, g_stack))):
+            ("fused+treepack", lambda: run_fused_treepack(p_bufs, g_stack)),
+            ("fused+dp", lambda: run_fused_dp(p_bufs, g_bufs, z_bufs))):
         timings[impl] = time_best_of(lambda: jax.block_until_ready(fn()),
                                      repeats)
     # the production flow has no per-step pack op, so the
@@ -142,7 +170,8 @@ def bench_step_tail(task, *, model: str, steps: int, repeats: int,
     # measurement under both labels (see docstring)
     timings["fused+pack"] = timings["fused"]
     rows = []
-    for impl in ("tree", "fused", "fused+pack", "fused+treepack"):
+    for impl in ("tree", "fused", "fused+pack", "fused+treepack",
+                 "fused+dp"):
         secs = timings[impl]
         rows.append({"bench": "step_tail", "model": model, "impl": impl,
                      "n_params": n_params, "n_leaves": n_leaves,
@@ -174,18 +203,30 @@ def bench_aggregate(task, *, model: str, clients: int, repeats: int,
     p_bufs = view.flatten(params)
     s_bufs = view.flatten_stacked(stacked)
 
+    dp = privacy.DPSpec(1.0, 0.1)
+    key = jax.random.PRNGKey(seed + 3)
+    ids = jnp.arange(K)
+
     run_tree = jax.jit(lambda s, w: tm.stacked_weighted_mean(s, w))
     run_fused = jax.jit(lambda p, s, w: fused_aggregate(fops, p, s, w))
     run_repack = jax.jit(
         lambda p, s, w: fused_aggregate(fops, p, view.flatten_stacked(s), w))
+    # the privacy-aware aggregate (clip scales folded into the
+    # coefficients, per-client noise summed into the extra operand of
+    # the same weighted_delta pass) — informational, K noise draws
+    # dominate at this CPU scale
+    run_dp = jax.jit(lambda k, i, p, s, w: privacy.fused_dp_aggregate(
+        dp, False, fops, k, i, p, s, w))
     jax.block_until_ready(run_tree(stacked, weights))
     jax.block_until_ready(run_fused(p_bufs, s_bufs, weights))
     jax.block_until_ready(run_repack(p_bufs, stacked, weights))
+    jax.block_until_ready(run_dp(key, ids, p_bufs, s_bufs, weights))
     rows = []
     for impl, fn in (
             ("tree", lambda: run_tree(stacked, weights)),
             ("fused", lambda: run_fused(p_bufs, s_bufs, weights)),
-            ("fused+repack", lambda: run_repack(p_bufs, stacked, weights))):
+            ("fused+repack", lambda: run_repack(p_bufs, stacked, weights)),
+            ("fused+dp", lambda: run_dp(key, ids, p_bufs, s_bufs, weights))):
         secs = time_best_of(lambda: jax.block_until_ready(fn()), repeats)
         rows.append({"bench": "aggregate", "model": model, "impl": impl,
                      "clients": K, "secs": round(secs, 6),
@@ -322,6 +363,15 @@ def main(argv=None) -> int:
     if fused_sps < 0.9 * tree_sps:
         print("[perf_fused_update] REGRESSION: fused step tail >10% slower "
               f"than tree on mlp ({fused_sps} vs {tree_sps} steps/s)",
+              file=sys.stderr)
+        ok = False
+    # 3. the DP row (S steps + one clip+noise pass) must stay within 10%
+    #    of the bare fused row — privacy is per-round work amortized
+    #    over the scan, not a second tail
+    dp_sps = sub["fused+dp"]["steps_per_sec"]
+    if dp_sps < 0.9 * fused_sps:
+        print("[perf_fused_update] REGRESSION: DP step tail >10% slower "
+              f"than bare fused on mlp ({dp_sps} vs {fused_sps} steps/s)",
               file=sys.stderr)
         ok = False
     packs = production_pack_sizes(task, data)    # mlp pair from eval-on row

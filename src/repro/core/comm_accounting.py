@@ -26,10 +26,22 @@ Pytree = Any
 
 _PER_ROUND_FACTOR = {"fedavg": 2, "fedprox": 2, "moon": 2, "scaffold": 4}
 
+# secure-aggregation key-agreement payload: one shared seed per ordered
+# client pair per round (Bonawitz-style pairwise masking; the masks
+# themselves are derived locally and add zero wire bytes)
+SEED_BYTES = 32
+
 
 def model_bytes(params: Pytree) -> int:
     """X — the model capacity in bytes."""
     return tm.size_bytes(params)
+
+
+def secure_agg_mask_bytes(k: int) -> int:
+    """Per-round secure-agg overhead: each of the K clients exchanges a
+    SEED_BYTES seed with each of the other K−1 — the model payload is
+    unchanged (masks are the same shape as the upload they hide in)."""
+    return k * (k - 1) * SEED_BYTES
 
 
 def overhead_without_cyclic(algorithm: str, k_p2: int, t_tot: int, x_bytes: int) -> int:
@@ -58,21 +70,25 @@ class CommLedger:
     p2_bytes: int = 0
     p1_rounds: int = 0
     p2_rounds: int = 0
+    mask_bytes: int = 0         # secure-agg pairwise seed exchanges
     _x_bytes: Optional[int] = None
 
     @property
     def total_bytes(self) -> int:
-        return self.p1_bytes + self.p2_bytes
+        return self.p1_bytes + self.p2_bytes + self.mask_bytes
 
     def record_cyclic_round(self, k_p1: int, params: Pytree) -> None:
         x = self._capacity(params)
         self.p1_bytes += 2 * k_p1 * x       # download + upload per client
         self.p1_rounds += 1
 
-    def record_round(self, algorithm: str, k_p2: int, params: Pytree) -> None:
+    def record_round(self, algorithm: str, k_p2: int, params: Pytree, *,
+                     secure_agg: bool = False) -> None:
         x = self._capacity(params)
         self.p2_bytes += _PER_ROUND_FACTOR[algorithm] * k_p2 * x
         self.p2_rounds += 1
+        if secure_agg:
+            self.mask_bytes += secure_agg_mask_bytes(k_p2)
 
     def _capacity(self, params: Pytree) -> int:
         if self._x_bytes is None:
@@ -83,6 +99,7 @@ class CommLedger:
         return {
             "p1_rounds": self.p1_rounds, "p2_rounds": self.p2_rounds,
             "p1_bytes": self.p1_bytes, "p2_bytes": self.p2_bytes,
+            "mask_bytes": self.mask_bytes,
             "total_bytes": self.total_bytes,
             "model_bytes": self._x_bytes or 0,
         }

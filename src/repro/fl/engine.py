@@ -138,6 +138,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.federated import FederatedDataset
+from repro.fl import privacy
 from repro.fl.local import (
     FlatParamOps,
     LocalSpec,
@@ -600,6 +601,13 @@ class RelayStrategy(HostBackend):
 
     name = "relay"
 
+    def __post_init__(self):
+        # P1 has no aggregation step: there is nothing to clip, noise or
+        # mask, so a privacy spec on the relay is a config error
+        if self.spec.dp is not None or self.spec.secure_agg:
+            raise ValueError("RelayStrategy (P1) has no aggregation; "
+                             "dp/secure_agg apply to P2 only")
+
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
 
@@ -786,13 +794,29 @@ class AggregateStrategy(HostBackend):
         local = make_local_fn(task, spec, fops)
         algo = self.algorithm
         store = self.state_store
+        # aggregation takes (round_key, ids, params, w_locals, weights):
+        # the key/ids thread the DP noise and secure-agg mask derivation
+        # (repro.fl.privacy) into the round program; with privacy off the
+        # closures ignore them and reduce to the exact baseline math
+        private = privacy.privacy_on(spec.dp, spec.secure_agg)
         if fops is None:
-            aggregate = lambda p, wl, w: tm.stacked_weighted_mean(wl, w)  # noqa: E731
+            if private:
+                aggregate = functools.partial(
+                    privacy.tree_dp_aggregate, spec.dp, spec.secure_agg)
+            else:
+                aggregate = lambda rk, ids, p, wl, w: \
+                    tm.stacked_weighted_mean(wl, w)                       # noqa: E731
             unpack = stacked_unpack = lambda t: t                         # noqa: E731
         else:
             # the vmapped flat local outputs ARE the stacked (K, N)
             # buffers — aggregation consumes them with zero packing
-            aggregate = functools.partial(fused_aggregate, fops)
+            if private:
+                aggregate = functools.partial(
+                    privacy.fused_dp_aggregate, spec.dp, spec.secure_agg,
+                    fops)
+            else:
+                aggregate = lambda rk, ids, p, wl, w: \
+                    fused_aggregate(fops, p, wl, w)                       # noqa: E731
             unpack = fops.unflatten
             stacked_unpack = fops.stacked_unflatten
 
@@ -811,7 +835,7 @@ class AggregateStrategy(HostBackend):
                 w_locals, aux = jax.vmap(
                     local, in_axes=(0, None, in_ext, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
-                new_params = aggregate(params, w_locals, weights)
+                new_params = aggregate(key, ids, params, w_locals, weights)
                 return new_params, algo_state, jnp.mean(aux["loss"])
 
             if algo == "scaffold":
@@ -849,7 +873,7 @@ class AggregateStrategy(HostBackend):
                         lambda ci, cg, w, wl: ci - cg[None] +
                         (w[None] - wl) / denom,
                         c_i, c, params, w_locals)
-                new_params = aggregate(params, w_locals, weights)
+                new_params = aggregate(key, ids, params, w_locals, weights)
                 # c ← c + (K/N)·mean_i(c_i⁺ − c_i); N is the POPULATION
                 # (the sparse store's physical table is only capacity rows)
                 frac = K / store.population(c_all)
@@ -871,7 +895,7 @@ class AggregateStrategy(HostBackend):
                     local,
                     in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
-                new_params = aggregate(params, w_locals, weights)
+                new_params = aggregate(key, ids, params, w_locals, weights)
                 state = {"w_prev": store.scatter(w_prev_all, ids, w_locals)}
                 return new_params, state, jnp.mean(aux["loss"])
 
@@ -880,7 +904,8 @@ class AggregateStrategy(HostBackend):
         return body
 
     def record(self, ledger, k: int, params: Pytree) -> None:
-        ledger.record_round(self.algorithm, k, params)
+        ledger.record_round(self.algorithm, k, params,
+                            secure_agg=self.spec.secure_agg)
 
 
 # ---------------------------------------------------------------------------

@@ -47,6 +47,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.fl.privacy import DPSpec
 from repro.fl.task import Task
 from repro.kernels import ops
 from repro.kernels.fused_update import GRID_ALIGN
@@ -81,6 +82,11 @@ class LocalSpec:
     temperature: float = 0.5        # moon
     grad_clip: Optional[float] = None
     update_impl: str = "tree"       # tree | fused | fused_interpret
+    # round-aggregate privacy (repro.fl.privacy): DP-FedAvg clip+noise
+    # on each client's round delta, and/or pairwise secure-agg masks.
+    # Both apply at AGGREGATION — the local run itself is unchanged.
+    dp: Optional[DPSpec] = None
+    secure_agg: bool = False
 
     def __post_init__(self):
         validate_update_impl(self.update_impl)
@@ -162,6 +168,13 @@ class FlatParamOps:
     def zeros(self, dtype=None) -> Dict[str, jnp.ndarray]:
         return self.pad(self.view.zeros(dtype))
 
+    def normal(self, key) -> Dict[str, jnp.ndarray]:
+        """Per-leaf standard-normal f32 buffers in carry layout (padded
+        to the kernel grid — pad lanes zero, like every carried buffer).
+        The draws are leaf-keyed (``view.normal``), so the tree oracle
+        and both buffer flavors see identical bits for one key."""
+        return self.pad(self.view.normal(key))
+
     def place(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
         """Commit freshly packed buffers to their home placement AND
         guarantee they do not alias the caller's arrays — flatten is a
@@ -229,12 +242,41 @@ class FlatParamOps:
                 new_m[name] = outs[1]
         return new_p, new_m
 
-    def weighted_delta(self, p_bufs, stacked_bufs, wbar):
+    def weighted_delta(self, p_bufs, stacked_bufs, wbar, extra=None):
         """Host FedAvg aggregation: the vmapped local outputs arrive as
-        already-stacked ``(K, N)`` buffers — no re-concatenate."""
+        already-stacked ``(K, N)`` buffers — no re-concatenate.
+        ``extra`` (optional f32 buffer dict — the round's DP noise +
+        secure-agg mask total) folds into the same kernel pass."""
         return {name: ops.fused_weighted_delta(
-            stacked_bufs[name], p, wbar, interpret=self.interpret)
+            stacked_bufs[name], p, wbar,
+            None if extra is None else extra[name],
+            interpret=self.interpret)
             for name, p in p_bufs.items()}
+
+    def dp_clip_noise(self, d_bufs, z_bufs, clip_scale, noise_scale):
+        """One client's DP upload per bucket in ONE blocked pass:
+        ``clip_scale·d₃₂ (+ noise_scale·z)`` (``z_bufs=None`` statically
+        drops the Gaussian term).  The production aggregates fold these
+        terms into ``weighted_delta``/``delta_accum`` coefficients and
+        extras instead; this is the standalone kernel form for callers
+        that materialize per-client uploads."""
+        interpret = self.interpret
+        has_z = z_bufs is not None
+
+        def fn(*a):
+            it = iter(a)
+            d1 = next(it)
+            z1 = next(it) if has_z else None
+            cs, ns = next(it), next(it)
+            return (ops.fused_dp_clip_noise(d1, z1, cs, ns,
+                                            interpret=interpret),)
+
+        out = {}
+        for name, d in d_bufs.items():
+            bufs = [d] + ([z_bufs[name]] if has_z else [])
+            out[name] = self._run(name, fn, bufs,
+                                  (clip_scale, noise_scale))[0]
+        return out
 
     def delta_accum(self, delta_bufs, w_bufs, p_bufs, coeff):
         """One client's contribution to the pod's running f32 delta."""

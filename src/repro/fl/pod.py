@@ -103,6 +103,7 @@ from repro.fl.engine import (
     tree_rows,
     tree_set_rows,
 )
+from repro.fl import privacy
 from repro.fl.local import FlatParamOps, LocalSpec, make_local_fn
 from repro.fl.simulation import HOST_RNG_OFFSET_P2
 from repro.fl.task import Task
@@ -142,6 +143,12 @@ class PodFLSpec:
     # layout (kernels run shard-locally under shard_map), so "fused" is
     # safe — and the CLI default — on real multi-device meshes.
     update_impl: str = "tree"       # tree | fused | fused_interpret
+    # round-aggregate privacy (repro.fl.privacy): per-client delta
+    # clipping + Gaussian noise (DP-FedAvg) and/or pairwise secure-agg
+    # masks.  Both apply at AGGREGATION — None/False is the exact
+    # baseline program.
+    dp: Optional[privacy.DPSpec] = None
+    secure_agg: bool = False
 
     def __post_init__(self):
         from repro.fl.local import validate_update_impl
@@ -153,7 +160,8 @@ class PodFLSpec:
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant=variant or _VARIANTS[self.algorithm], mu=self.mu,
             temperature=self.temperature, grad_clip=self.grad_clip,
-            update_impl=self.update_impl)
+            update_impl=self.update_impl, dp=self.dp,
+            secure_agg=self.secure_agg)
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +318,7 @@ class ShardedFlatOps(FlatParamOps):
         raise NotImplementedError("the pod backend aggregates "
                                   "sequentially — no stacked buffers")
 
-    def weighted_delta(self, p_bufs, stacked_bufs, wbar):
+    def weighted_delta(self, p_bufs, stacked_bufs, wbar, extra=None):
         raise NotImplementedError("the pod backend aggregates "
                                   "sequentially — use delta_accum")
 
@@ -549,6 +557,7 @@ class PodRelayStrategy(PodBackendMixin, RelayStrategy):
     clients_per_round: Optional[int] = None
 
     def __post_init__(self):
+        super().__post_init__()         # relay rejects dp/secure_agg
         if self.mesh is None:
             raise ValueError("PodRelayStrategy requires a mesh")
 
@@ -656,6 +665,8 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         p_sh = fops.shardings() if fused else self._param_shardings(task)
         unpack = fops.unflatten if fused else (lambda t: t)
         G = self._n_pods() if self.aggregation == "hierarchical" else 1
+        dp = spec.dp
+        dp_clips = dp is not None and dp.clips
 
         def pin(t):
             return jax.lax.with_sharding_constraint(t, p_sh)
@@ -699,6 +710,19 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                     return jax.tree_util.tree_map(
                         lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
                         params_, delta)
+
+            if dp_clips:
+                # DP clipping folds into the accumulation COEFFICIENT:
+                # coeff_i = (w_i/wsum)·min(1, C/‖w_end − p‖) — the
+                # p-present accumulators self-normalize, so clipping
+                # costs a squared-norm reduction, not an extra pass
+                sqnorm = privacy.flat_delta_sqnorm if fused else \
+                    privacy.tree_delta_sqnorm
+                base_add = add_delta
+
+                def add_delta(delta, w_end, w_i):
+                    scale = privacy.clip_scale(dp, sqnorm(w_end, params))
+                    return base_add(delta, w_end, w_i * scale)
 
             # -- per-algorithm client step -------------------------------
             # client(k, cxi, cyi, row) -> (w_end, out, loss): ``row`` is
@@ -787,7 +811,34 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                 # test meshes, tree impl, mismatched n_pods) lanes stay
                 # unsharded and the combine is a local tree-sum
                 lane_psum = fused and G == fops.lane_count()
-                if lane_psum:
+                if lane_psum and dp_clips:
+                    # clipped coefficients no longer sum to 1, so the
+                    # −(Σc)·p term cannot factor out as −p: carry the
+                    # running coefficient sum next to the p-free lane
+                    # partials and apply −csum·p once after the combine
+                    dp_scales = jax.vmap(
+                        lambda we: privacy.clip_scale(
+                            dp, privacy.flat_delta_sqnorm(we, params)))
+
+                    def one_step(carry, inp):
+                        delta_g, csum = carry
+                        k_g, cx_g, cy_g, w_g, row_g = inp
+                        w_end_g, out_g, loss_g = vclient(k_g, cx_g, cy_g,
+                                                         row_g)
+                        coeffs = (w_g / wsum) * dp_scales(w_end_g)
+                        return ((fops.lane_accum(delta_g, w_end_g, coeffs),
+                                 csum + jnp.sum(coeffs)),
+                                (out_g, loss_g))
+
+                    (delta_g, csum), (outs, losses) = jax.lax.scan(
+                        one_step, (fops.lane_zeros(G), jnp.float32(0.0)),
+                        resh((keys, cx, cy, w32, rows)))
+                    acc = fops.lane_combine(delta_g)
+                    acc = jax.lax.with_sharding_constraint(acc, p_sh)
+                    delta = {name: acc[name] -
+                             csum * params[name].astype(jnp.float32)
+                             for name in acc}
+                elif lane_psum:
                     def one_step(delta_g, inp):
                         k_g, cx_g, cy_g, w_g, row_g = inp
                         w_end_g, out_g, loss_g = vclient(k_g, cx_g, cy_g,
@@ -837,6 +888,17 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
 
                 delta, (outs, losses) = jax.lax.scan(
                     one_client, zeros_delta(), (keys, cx, cy, w32, rows))
+
+            # aggregated DP noise + secure-agg masks: independent of the
+            # client outputs, so computed once per round and added to the
+            # f32 delta in every topology (None statically when off)
+            extra = privacy.round_extra(
+                dp, spec.secure_agg, key, ids, w32 / wsum,
+                zeros_fn=zeros_delta,
+                normal_fn=fops.normal if fused else
+                (lambda k: privacy.tree_normal(k, params)))
+            if extra is not None:
+                delta = jax.tree_util.tree_map(jnp.add, delta, extra)
 
             new_params = pin(apply_delta(params, delta))
 

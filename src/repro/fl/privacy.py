@@ -1,0 +1,313 @@
+"""Security-critical FL primitives — DP-FedAvg clipping/noise and a
+secure-aggregation simulation, shared by the host and pod backends.
+
+The paper pitches CyclicFL as composable with "any security-critical FL
+methods"; this module is that composition point.  Two mechanisms, both
+applied to the ROUND's parameter aggregate (auxiliary algorithm state —
+scaffold control variates, moon anchors — is deliberately not privatized;
+only model deltas leave a client):
+
+DP-FedAvg (:class:`DPSpec`)
+    Each client's round delta ``δᵢ = wᵢ − w`` is clipped to the
+    sensitivity bound ``C`` — ``scaleᵢ = min(1, C/(‖δᵢ‖+ε))`` — and the
+    server adds Gaussian noise calibrated to ``σ·C``.  The aggregate is
+
+        w⁺ = cast(w₃₂ + Σᵢ w̄ᵢ·scaleᵢ·δᵢ + Σᵢ w̄ᵢ·σC·zᵢ)
+
+    With uniform weights the aggregated noise variance is ``σ²C²/K``
+    per parameter (property-tested in tests/test_privacy.py).  On the
+    fused path the clip scale FOLDS INTO the aggregation coefficient and
+    the noise rides the ``extra`` operand of
+    ``repro.kernels.fused_update.weighted_delta`` — privacy costs zero
+    additional buffer traversals; ``dp_clip_noise`` is the standalone
+    one-pass kernel form of the same upload for callers that materialize
+    per-client uploads.
+
+Secure-aggregation simulation (``secure_agg=True``)
+    Pairwise masks from shared per-pair keys: clients ``i < j`` both
+    derive ``z = normal(pair key)`` and add ``+z`` (lower id) / ``−z``
+    (higher id) to their weighted uploads, so ``m_ij = −m_ji`` holds
+    BITWISE and the mask total telescopes to zero over full
+    participation — the server learns only the sum.  Masks are added
+    AFTER client weighting (each client knows its own weight), so
+    cancellation is exact under non-uniform weights too.
+
+Key derivation (in-program, threefry): from the round key ``rk`` that
+the engine already threads into every round body,
+
+    noise key  (round, client i) : fold_in(fold_in(rk, DP_NOISE_TAG), i)
+    mask key   (round, pair i<j) : fold_in(fold_in(fold_in(rk, MASK_TAG),
+                                   lo), hi),  lo/hi = sorted(i, j)
+
+and every per-model draw expands a client/pair key PER LEAF —
+``fold_in(k, leaf_index)`` at the leaf's global shape — so the tree
+oracle, the host FlatView buffers and the pod's mesh-sharded
+ShardedFlatView buckets all draw IDENTICAL bits (the shard transform is
+pure data movement after the draw).  Host and pod round bodies receive
+the same ``rk`` under the parity sampling scheme, hence "host and pod
+draw identical bits".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# fold_in tags separating the privacy key streams from the engine's
+# client-key splits (and from each other)
+DP_NOISE_TAG = 0x6470_0001      # "dp" noise stream
+MASK_TAG = 0x6d61_0002          # "ma"sk pairwise stream
+
+# matches the fused/tree step-tail clip epsilon (repro.fl.local)
+CLIP_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSpec:
+    """Static DP-FedAvg parameters: clip bound ``C`` and noise
+    multiplier ``σ`` (noise stddev ``σ·C`` per client pre-weighting).
+
+    Frozen + hashable so it can ride ``LocalSpec`` through the engine's
+    lru-cached strategy/chunk builders.  ``clip=inf`` with ``sigma=0``
+    is the identity mechanism — the fused path then statically reduces
+    to the exact baseline program (bitwise, tests/test_privacy.py).
+    """
+    clip: float
+    sigma: float = 0.0
+
+    def __post_init__(self):
+        if not self.clip > 0.0:
+            raise ValueError(f"DP clip bound must be positive, got "
+                             f"{self.clip}")
+        if self.sigma < 0.0:
+            raise ValueError(f"DP noise multiplier must be >= 0, got "
+                             f"{self.sigma}")
+        if self.sigma > 0.0 and not math.isfinite(self.clip):
+            raise ValueError("DP noise needs a finite clip bound "
+                             "(the noise stddev is sigma*clip)")
+
+    @property
+    def clips(self) -> bool:
+        """Whether clipping is a real (finite-bound) operation — the
+        static switch that keeps the identity spec bitwise-exact."""
+        return math.isfinite(self.clip)
+
+    @property
+    def noised(self) -> bool:
+        return self.sigma > 0.0
+
+
+def privacy_on(dp: Optional[DPSpec], secure_agg: bool) -> bool:
+    """Whether the round aggregate needs the privacy-aware path at all."""
+    return dp is not None or secure_agg
+
+
+# ---------------------------------------------------------------------------
+# key derivation
+# ---------------------------------------------------------------------------
+
+def noise_base_key(round_key: jax.Array) -> jax.Array:
+    """Round-level base of the per-client DP noise stream."""
+    return jax.random.fold_in(round_key, DP_NOISE_TAG)
+
+def mask_base_key(round_key: jax.Array) -> jax.Array:
+    """Round-level base of the pairwise mask stream."""
+    return jax.random.fold_in(round_key, MASK_TAG)
+
+
+def client_noise_key(noise_base: jax.Array, cid) -> jax.Array:
+    return jax.random.fold_in(noise_base, cid)
+
+
+def pair_mask_key(mask_base: jax.Array, a, b) -> jax.Array:
+    """The SHARED key of pair (a, b) — order-independent (sorted ids),
+    so both endpoints derive identical mask bits."""
+    lo = jnp.minimum(a, b)
+    hi = jnp.maximum(a, b)
+    return jax.random.fold_in(jax.random.fold_in(mask_base, lo), hi)
+
+
+def pair_sign(cid, other) -> jnp.ndarray:
+    """+1 for the lower id, −1 for the higher, 0 for self — the sign
+    convention that makes ``m_ij = −m_ji`` hold bitwise."""
+    return jnp.sign(other - cid).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf draws — the tree twin of FlatView.normal / ShardedFlatView.normal
+# ---------------------------------------------------------------------------
+
+def tree_normal(key: jax.Array, tree: Pytree) -> Pytree:
+    """Standard-normal f32 tree over ``tree``'s shapes, leaf ``i``
+    (tree_flatten order) drawn with ``fold_in(key, i)`` at the leaf's
+    shape — bit-identical per parameter to the flat views' ``normal``
+    for the same key.  Non-inexact leaves draw zeros."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    outs = []
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(jnp.dtype(leaf.dtype), jnp.inexact):
+            outs.append(jax.random.normal(jax.random.fold_in(key, i),
+                                          jnp.shape(leaf), jnp.float32))
+        else:
+            outs.append(jnp.zeros(jnp.shape(leaf), jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# clip scales
+# ---------------------------------------------------------------------------
+
+def clip_scale(dp: DPSpec, sq: jnp.ndarray) -> jnp.ndarray:
+    """``min(1, C/(‖δ‖+ε))`` from a squared delta norm (any leading
+    batch shape)."""
+    return jnp.minimum(1.0, dp.clip / (jnp.sqrt(sq) + CLIP_EPS)) \
+        .astype(jnp.float32)
+
+
+def flat_delta_sqnorm(w_bufs: Dict[str, jnp.ndarray],
+                      p_bufs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """‖w − p‖² over every bucket for ONE client (host 1-D buffers or
+    pod ``(n_shards, per_shard)`` buckets — pad lanes are zero in both
+    operands, so they contribute nothing)."""
+    return sum(jnp.sum((w.astype(jnp.float32) -
+                        p_bufs[name].astype(jnp.float32)) ** 2)
+               for name, w in w_bufs.items())
+
+
+def tree_delta_sqnorm(w_end: Pytree, params: Pytree) -> jnp.ndarray:
+    """‖w − p‖² over every leaf for ONE client (tree impl)."""
+    return sum(jnp.sum((w.astype(jnp.float32) -
+                        p.astype(jnp.float32)) ** 2)
+               for w, p in zip(jax.tree_util.tree_leaves(w_end),
+                               jax.tree_util.tree_leaves(params)))
+
+
+def stacked_clip_scales(dp: Optional[DPSpec], params_leaves,
+                        stacked_leaves) -> Optional[jnp.ndarray]:
+    """Per-client ``(K,)`` clip scales from stacked (K, ...) locals
+    (leaf lists — shared by the tree and flat host aggregates).
+    ``None`` when clipping is statically off (no spec / infinite C)."""
+    if dp is None or not dp.clips:
+        return None
+    sq = sum(jnp.sum((wl.astype(jnp.float32) -
+                      p.astype(jnp.float32)[None]) ** 2,
+                     axis=tuple(range(1, wl.ndim)))
+             for p, wl in zip(params_leaves, stacked_leaves))
+    return clip_scale(dp, sq)
+
+
+# ---------------------------------------------------------------------------
+# the round's additive extra: Σᵢ (w̄ᵢ·σC·zᵢ + mᵢ)
+# ---------------------------------------------------------------------------
+
+def client_mask(mask_base: jax.Array, cid, ids: jnp.ndarray,
+                normal_fn: Callable, zeros_fn: Callable) -> Pytree:
+    """Client ``cid``'s secure-agg mask against participant set ``ids``:
+    ``mᵢ = Σⱼ sign(idsⱼ − cid)·normal(pair key)``.  Antisymmetric by
+    construction (shared pair keys + the sign convention), so the masks
+    of a full participant set sum to zero up to float reassociation."""
+    def one_pair(m, j):
+        other = ids[j]
+        z = normal_fn(pair_mask_key(mask_base, cid, other))
+        s = pair_sign(cid, other)
+        return jax.tree_util.tree_map(lambda a, b: a + s * b, m, z), None
+
+    m, _ = jax.lax.scan(one_pair, zeros_fn(), jnp.arange(ids.shape[0]))
+    return m
+
+
+def round_extra(dp: Optional[DPSpec], secure_agg: bool,
+                round_key: jax.Array, ids: jnp.ndarray,
+                wbar: jnp.ndarray, *, zeros_fn: Callable,
+                normal_fn: Callable) -> Optional[Pytree]:
+    """The additive privacy term of one round's aggregate:
+    ``Σᵢ (w̄ᵢ·σC·zᵢ + mᵢ)`` — per-client calibrated Gaussian noise plus
+    the pairwise secure-agg masks — in whatever f32 representation
+    ``zeros_fn``/``normal_fn`` speak (buffer dicts or trees).
+
+    Returns None when both mechanisms are statically off, so the
+    DP-off/identity program is untouched.  The masks are built per
+    client (each pair drawn once from EACH endpoint, opposite signs) —
+    the honest O(K²) simulation whose cancellation the tests assert,
+    not an algebraic shortcut to zero."""
+    noised = dp is not None and dp.noised
+    if not noised and not secure_agg:
+        return None
+    nk = noise_base_key(round_key)
+    mk = mask_base_key(round_key)
+
+    def one_client(acc, i):
+        cid = ids[i]
+        if noised:
+            z = normal_fn(client_noise_key(nk, cid))
+            c = wbar[i] * (dp.sigma * dp.clip)
+            acc = jax.tree_util.tree_map(lambda a, b: a + c * b, acc, z)
+        if secure_agg:
+            m = client_mask(mk, cid, ids, normal_fn, zeros_fn)
+            acc = jax.tree_util.tree_map(jnp.add, acc, m)
+        return acc, None
+
+    extra, _ = jax.lax.scan(one_client, zeros_fn(),
+                            jnp.arange(ids.shape[0]))
+    return extra
+
+
+# ---------------------------------------------------------------------------
+# round aggregates (host engine) — tree oracle and fused twin
+# ---------------------------------------------------------------------------
+
+def tree_dp_aggregate(dp: Optional[DPSpec], secure_agg: bool,
+                      key: jax.Array, ids: jnp.ndarray, params: Pytree,
+                      w_locals: Pytree, weights: jnp.ndarray) -> Pytree:
+    """The privacy-aware FedAvg aggregate over stacked (K, ...) local
+    trees — the parity oracle for :func:`fused_dp_aggregate`:
+    ``cast(p₃₂ + Σₖ w̄ₖ·scaleₖ·(wₖ − p) + extra)`` per leaf."""
+    wbar = (weights / jnp.sum(weights)).astype(jnp.float32)
+    scales = stacked_clip_scales(dp, jax.tree_util.tree_leaves(params),
+                                 jax.tree_util.tree_leaves(w_locals))
+    coeffs = wbar if scales is None else wbar * scales
+    extra = round_extra(
+        dp, secure_agg, key, ids, wbar,
+        zeros_fn=lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        normal_fn=lambda k: tree_normal(k, params))
+
+    def leaf(p, wl, e):
+        p32 = p.astype(jnp.float32)
+        d = jnp.tensordot(coeffs, wl.astype(jnp.float32) - p32[None],
+                          axes=1)
+        if e is not None:
+            d = d + e
+        return (p32 + d).astype(p.dtype)
+
+    if extra is None:
+        return jax.tree_util.tree_map(lambda p, wl: leaf(p, wl, None),
+                                      params, w_locals)
+    return jax.tree_util.tree_map(leaf, params, w_locals, extra)
+
+
+def fused_dp_aggregate(dp: Optional[DPSpec], secure_agg: bool, fops,
+                       key: jax.Array, ids: jnp.ndarray,
+                       p_bufs: Dict[str, jnp.ndarray],
+                       stacked_bufs: Dict[str, jnp.ndarray],
+                       weights: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """The same aggregate on the flat path: per-client clip scales fold
+    into the aggregation coefficients and the noise/mask total rides the
+    ``extra`` operand of ONE ``weighted_delta`` kernel pass per bucket.
+    With the identity spec (``clip=inf, sigma=0, secure_agg=False``)
+    every privacy term is STATICALLY absent and this is bitwise the
+    baseline ``fused_aggregate`` program."""
+    wbar = (weights / jnp.sum(weights)).astype(jnp.float32)
+    scales = stacked_clip_scales(
+        dp, [p_bufs[name] for name in stacked_bufs],
+        [s for s in stacked_bufs.values()])
+    coeffs = wbar if scales is None else wbar * scales
+    extra = round_extra(dp, secure_agg, key, ids, wbar,
+                        zeros_fn=lambda: fops.zeros(jnp.float32),
+                        normal_fn=fops.normal)
+    return fops.weighted_delta(p_bufs, stacked_bufs, coeffs, extra=extra)

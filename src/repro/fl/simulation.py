@@ -27,6 +27,7 @@ from repro.fl.engine import (
     run_rounds,
 )
 from repro.fl.local import LocalSpec
+from repro.fl.privacy import DPSpec
 from repro.fl.task import Task
 
 Pytree = Any
@@ -70,6 +71,10 @@ class FLConfig:
     # the engine as FlatView buffers, repro.kernels.fused_update);
     # "fused" auto-interprets off-TPU
     update_impl: str = "tree"       # tree | fused | fused_interpret
+    # round-aggregate privacy (repro.fl.privacy): DP-FedAvg clip/noise
+    # and/or the pairwise secure-agg mask simulation
+    dp: Optional[DPSpec] = None
+    secure_agg: bool = False
 
     def __post_init__(self):
         from repro.fl.local import validate_update_impl
@@ -85,7 +90,8 @@ class FLConfig:
             n_steps=self.local_steps, batch_size=self.batch_size, lr=self.lr,
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant=variant, mu=self.mu, temperature=self.temperature,
-            grad_clip=self.grad_clip, update_impl=self.update_impl)
+            grad_clip=self.grad_clip, update_impl=self.update_impl,
+            dp=self.dp, secure_agg=self.secure_agg)
 
     def strategy(self) -> AggregateStrategy:
         return AggregateStrategy(

@@ -17,7 +17,15 @@ buffer, f32 compute, cast on store):
                       m ← g + β·m            (momentum, optional)
                       p ← p − step·(m or g)
   weighted_delta  — FedAvg aggregation over a stacked (K, N) buffer:
-                      p ← cast(p₃₂ + Σₖ w̄ₖ·(wₖ − p))
+                      p ← cast(p₃₂ + Σₖ w̄ₖ·(wₖ − p) (+ e))
+                    ``e`` is an optional f32 extra operand folded into
+                    the same pass — the round's DP noise / secure-agg
+                    mask total rides the aggregation kernel for free.
+  dp_clip_noise   — the privacy form of the client upload, one pass:
+                      u ← clip_scale·d₃₂ (+ noise_scale·z)
+                    clip_scale = min(1, C/‖d‖) clips the client delta to
+                    the DP bound C; z is a standard-normal buffer and
+                    noise_scale = σ·C calibrates the Gaussian mechanism.
   delta_accum     — the pod backend's sequential form, one client:
                       d ← d + coeff·(w₃₂ − p₃₂)
   server_update   — server optimizer on the pseudo-gradient g = −delta:
@@ -165,9 +173,13 @@ def local_step(p: jnp.ndarray, g: jnp.ndarray,
 # weighted delta aggregation (host engine, all clients at once)
 # ---------------------------------------------------------------------------
 
-def _weighted_delta_kernel(w_ref, s_ref, p_ref, o_ref, *, K: int):
+def _weighted_delta_kernel(w_ref, *refs, K: int, has_extra: bool):
+    it = iter(refs)
+    s_ref, p_ref = next(it), next(it)
+    e_ref = next(it) if has_extra else None
+    o_ref = next(it)
     p = p_ref[...].astype(jnp.float32)
-    acc = jnp.zeros_like(p)
+    acc = e_ref[...] if has_extra else jnp.zeros_like(p)
     for k in range(K):                      # K is static and small
         acc = acc + w_ref[k] * (s_ref[k].astype(jnp.float32) - p)
     o_ref[...] = (p + acc).astype(o_ref.dtype)
@@ -175,31 +187,93 @@ def _weighted_delta_kernel(w_ref, s_ref, p_ref, o_ref, *, K: int):
 
 def weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
                    weights: jnp.ndarray, *,
+                   extra: Optional[jnp.ndarray] = None,
                    block_rows: int = DEFAULT_BLOCK_ROWS,
                    interpret: bool = False) -> jnp.ndarray:
-    """FedAvg aggregation: ``p₃₂ + Σₖ w̄ₖ·(stacked[k] − p)`` cast back to
-    ``p.dtype``.  ``stacked`` is (K, N), ``weights`` the (K,) normalized
-    client weights (must sum to 1 for the convex-combination reading)."""
+    """FedAvg aggregation: ``p₃₂ + Σₖ w̄ₖ·(stacked[k] − p) (+ extra)``
+    cast back to ``p.dtype``.  ``stacked`` is (K, N), ``weights`` the
+    (K,) normalized client weights (must sum to 1 for the
+    convex-combination reading; per-client DP clip scales fold into
+    them).  ``extra`` is an optional f32 (N,) buffer added inside the
+    same pass — the round's aggregated DP noise + secure-agg mask term —
+    so privacy costs zero additional traversals here."""
     K, n = stacked.shape
     if n == 0:
         return p
+    has_extra = extra is not None
     rows_p, n_blocks = _grid_rows(n, block_rows, interpret)
     br = rows_p // n_blocks
-    s2 = _pad_rows(stacked, rows_p)
-    p2 = _pad_rows(p, rows_p)
+    blk = pl.BlockSpec((br, LANES), lambda i, sc: (i, 0))
+    operands = [_pad_rows(stacked, rows_p), _pad_rows(p, rows_p)]
+    if has_extra:
+        operands.append(_pad_rows(extra, rows_p))
     outs = pl.pallas_call(
-        functools.partial(_weighted_delta_kernel, K=K),
+        functools.partial(_weighted_delta_kernel, K=K, has_extra=has_extra),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(n_blocks,),
-            in_specs=[pl.BlockSpec((K, br, LANES), lambda i, sc: (0, i, 0)),
-                      pl.BlockSpec((br, LANES), lambda i, sc: (i, 0))],
-            out_specs=pl.BlockSpec((br, LANES), lambda i, sc: (i, 0)),
+            in_specs=[pl.BlockSpec((K, br, LANES), lambda i, sc: (0, i, 0))] +
+                     [blk] * (len(operands) - 1),
+            out_specs=blk,
         ),
         out_shape=jax.ShapeDtypeStruct((rows_p, LANES), p.dtype),
         interpret=interpret,
-    )(weights.astype(jnp.float32), s2, p2)
+    )(weights.astype(jnp.float32), *operands)
     return outs.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# DP clip + noise — the privacy form of one client's upload
+# ---------------------------------------------------------------------------
+
+def _dp_clip_noise_kernel(sc_ref, *refs, has_z: bool):
+    it = iter(refs)
+    d_ref = next(it)
+    z_ref = next(it) if has_z else None
+    o_ref = next(it)
+    u = sc_ref[0] * d_ref[...].astype(jnp.float32)
+    if has_z:
+        u = u + sc_ref[1] * z_ref[...]
+    o_ref[...] = u.astype(o_ref.dtype)
+
+
+def dp_clip_noise(d: jnp.ndarray, z: Optional[jnp.ndarray],
+                  clip_scale, noise_scale, *,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False) -> jnp.ndarray:
+    """One client's DP upload in ONE blocked pass:
+    ``u = clip_scale·d₃₂ (+ noise_scale·z)`` returned as f32.
+
+    ``clip_scale`` is the traced ``min(1, C/(‖d‖+ε))`` factor that clips
+    the delta to the sensitivity bound C, and ``noise_scale`` the
+    calibrated ``σ·C`` Gaussian multiplier for the standard-normal f32
+    buffer ``z`` (``z=None`` statically drops the noise term — pure
+    clipping costs the same single pass).  Pad lanes stay zero: both
+    terms are multiplicative in zero-padded operands."""
+    n = d.shape[-1]
+    has_z = z is not None
+    if n == 0:
+        return d.astype(jnp.float32)
+    rows_p, n_blocks = _grid_rows(n, block_rows, interpret)
+    br = rows_p // n_blocks
+    blk = pl.BlockSpec((br, LANES), lambda i, sc: (i, 0))
+    operands = [_pad_rows(d, rows_p)]
+    if has_z:
+        operands.append(_pad_rows(z, rows_p))
+    scalars = jnp.stack([jnp.asarray(clip_scale, jnp.float32),
+                         jnp.asarray(noise_scale, jnp.float32)])
+    out = pl.pallas_call(
+        functools.partial(_dp_clip_noise_kernel, has_z=has_z),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_blocks,),
+            in_specs=[blk] * len(operands),
+            out_specs=blk,
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows_p, LANES), jnp.float32),
+        interpret=interpret,
+    )(scalars, *operands)
+    return out.reshape(-1)[:n]
 
 
 # ---------------------------------------------------------------------------

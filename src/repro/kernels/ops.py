@@ -89,13 +89,29 @@ def fused_local_step(p: jnp.ndarray, g: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def fused_weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
-                         weights: jnp.ndarray, *, block_rows: int = 0,
+                         weights: jnp.ndarray,
+                         extra: Optional[jnp.ndarray] = None, *,
+                         block_rows: int = 0,
                          interpret: bool = False) -> jnp.ndarray:
     """FedAvg aggregation over a stacked (K, N) flat buffer:
-    ``cast(p32 + sum_k w_k * (stacked[k] - p))``."""
-    return _fu.weighted_delta(stacked, p, weights,
+    ``cast(p32 + sum_k w_k * (stacked[k] - p) (+ extra))``.  ``extra``
+    is an optional f32 (N,) buffer (aggregated DP noise + secure-agg
+    masks) folded into the same blocked pass."""
+    return _fu.weighted_delta(stacked, p, weights, extra=extra,
                               block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_dp_clip_noise(d: jnp.ndarray, z: Optional[jnp.ndarray],
+                        clip_scale, noise_scale, *, block_rows: int = 0,
+                        interpret: bool = False) -> jnp.ndarray:
+    """One client's DP upload over one flat buffer:
+    ``clip_scale * d32 (+ noise_scale * z)`` in a single blocked pass
+    (``z=None`` statically drops the Gaussian term)."""
+    return _fu.dp_clip_noise(d, z, clip_scale, noise_scale,
+                             block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
+                             interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

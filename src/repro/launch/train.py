@@ -54,6 +54,7 @@ from repro.fl.pod import (
     PodFLConfig,
     PodFLSpec,
 )
+from repro.fl.privacy import DPSpec
 from repro.fl.task import lm_task
 from repro.models.transformer import TransformerConfig, init_lm, lm_loss
 from repro.sharding import rules
@@ -270,8 +271,13 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                     overlap=(overlap == "on"))
     phases = []
     if cyclic_rounds > 0:
+        # privacy applies at the P2 aggregate only — P1 relays the model
+        # client-to-client with no aggregation, so the relay phase runs
+        # with the privacy knobs stripped (RelayStrategy rejects them)
+        p1_common = dict(common, spec=dataclasses.replace(
+            spec, dp=None, secure_agg=False))
         phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
-                                                  seed=seed, **common),
+                                                  seed=seed, **p1_common),
                             eval_fn=eval_fn))
     if fl_rounds > 0:
         # decorrelate the P2 key stream from P1's: each phase restarts
@@ -364,6 +370,16 @@ def main(argv=None) -> int:
                          "N+1 behind dispatch N's device compute "
                          "(bitwise-identical results; off = synchronous "
                          "prepare between dispatches)")
+    ap.add_argument("--dp-clip", type=float, default=None,
+                    help="DP-FedAvg per-client delta clip bound C "
+                         "(None = no clipping)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="DP-FedAvg noise multiplier (per-client stddev "
+                         "sigma*C, applied at aggregation; needs "
+                         "--dp-clip)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="simulate pairwise-masked secure aggregation "
+                         "(masks cancel in the round sum)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -376,11 +392,14 @@ def main(argv=None) -> int:
     data = make_synthetic_tokenlm(
         n_clients=args.clients, seq_len=args.seq, n_seq_per_client=64,
         vocab=cfg.vocab_size, beta=0.5, seed=args.seed)
+    dp = DPSpec(args.dp_clip, args.dp_sigma) \
+        if args.dp_clip is not None else None
     spec = PodFLSpec(local_steps=args.local_steps, batch_size=args.batch,
                      lr=args.lr, algorithm=args.algorithm,
                      server_opt=args.server_opt, server_lr=args.server_lr,
                      server_momentum=args.server_momentum,
-                     update_impl=args.update_impl)
+                     update_impl=args.update_impl, dp=dp,
+                     secure_agg=args.secure_agg)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.rounds,

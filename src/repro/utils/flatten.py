@@ -153,6 +153,26 @@ class FlatView:
         return {name: jnp.zeros((size,), dtype or name)
                 for name, size in self.buffer_sizes.items()}
 
+    def normal(self, key) -> Dict[str, jnp.ndarray]:
+        """Standard-normal f32 buffers over this plan, drawn PER LEAF:
+        leaf ``i`` (tree_flatten order) draws with
+        ``fold_in(key, i)`` at the leaf's original shape, then packs
+        like :meth:`flatten`.  Keying and shaping the draws by leaf —
+        not by buffer — makes the bits independent of the packing, so a
+        tree-side twin (repro.fl.privacy.tree_normal) and the
+        ShardedFlatView flavor produce the SAME values per parameter.
+        Non-inexact (integer) slots draw zeros."""
+        parts: Dict[str, list] = {}
+        for i, slot in enumerate(self.slots):
+            if jnp.issubdtype(jnp.dtype(slot.buffer), jnp.inexact):
+                draw = jax.random.normal(jax.random.fold_in(key, i),
+                                         slot.shape, jnp.float32)
+            else:
+                draw = jnp.zeros(slot.shape, jnp.float32)
+            parts.setdefault(slot.buffer, []).append(draw.reshape(-1))
+        return {name: jnp.concatenate(chunks)
+                for name, chunks in parts.items()}
+
 
 # ---------------------------------------------------------------------------
 # sharded flat view — per-(dtype × mesh-axis-group) buffers
@@ -346,3 +366,23 @@ class ShardedFlatView:
         per-bucket dtype (e.g. the pod's f32 delta accumulator)."""
         return {g.name: jnp.zeros((g.n_shards, g.size), dtype or g.dtype)
                 for g in self.groups}
+
+    def normal(self, key) -> Dict[str, jnp.ndarray]:
+        """Standard-normal f32 buckets, drawn per leaf with
+        ``fold_in(key, i)`` at the GLOBAL leaf shape and then
+        shard-split — bit-identical per parameter to
+        ``FlatView.normal`` / the tree twin for the same key, whatever
+        the mesh layout (the draw precedes the pure-data-movement shard
+        transform).  Non-inexact slots draw zeros."""
+        gm = self.group_map
+        parts: Dict[str, list] = {}
+        for i, slot in enumerate(self.slots):
+            if jnp.issubdtype(jnp.dtype(gm[slot.buffer].dtype), jnp.inexact):
+                draw = jax.random.normal(jax.random.fold_in(key, i),
+                                         slot.shape, jnp.float32)
+            else:
+                draw = jnp.zeros(slot.shape, jnp.float32)
+            parts.setdefault(slot.buffer, []).append(
+                self._leaf_to_shards(draw, slot))
+        return {name: jnp.concatenate(rows, axis=1)
+                for name, rows in parts.items()}

@@ -1,0 +1,63 @@
+"""Secure-aggregation wire accounting (repro.core.comm_accounting).
+
+The pairwise-mask simulation adds NO model-payload bytes — masks hide
+inside the uploads they perturb — but each round the K participants run
+a Bonawitz-style seed agreement: one SEED_BYTES seed per ordered pair,
+K(K−1)·SEED_BYTES per round, tracked in ``CommLedger.mask_bytes``.
+The Table IV closed forms (tests/test_properties.py) are untouched:
+with ``secure_agg=False`` every pre-existing ledger total is identical.
+"""
+import numpy as np
+import pytest
+
+from repro.core import comm_accounting as acc
+from repro.core.comm_accounting import SEED_BYTES, CommLedger
+
+
+def _params(n_bytes=64):
+    return {"w": np.zeros(n_bytes, dtype=np.uint8)}
+
+
+@pytest.mark.parametrize("k", [1, 2, 5, 32])
+def test_mask_bytes_closed_form(k):
+    assert acc.secure_agg_mask_bytes(k) == k * (k - 1) * SEED_BYTES
+
+
+def test_mask_bytes_zero_for_single_client():
+    # one participant has nobody to pair with
+    assert acc.secure_agg_mask_bytes(1) == 0
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedprox", "moon", "scaffold"])
+def test_ledger_accumulates_mask_bytes(algo):
+    params = _params()
+    k, rounds = 6, 3
+    led = CommLedger()
+    for _ in range(rounds):
+        led.record_round(algo, k, params, secure_agg=True)
+    want_mask = rounds * acc.secure_agg_mask_bytes(k)
+    assert led.mask_bytes == want_mask
+    assert led.total_bytes == led.p2_bytes + want_mask
+    s = led.summary()
+    assert s["mask_bytes"] == want_mask
+    assert s["total_bytes"] == led.total_bytes
+
+
+def test_secure_agg_off_is_the_existing_ledger():
+    params = _params()
+    base, off = CommLedger(), CommLedger()
+    for _ in range(4):
+        base.record_round("fedavg", 5, params)
+        off.record_round("fedavg", 5, params, secure_agg=False)
+    assert off.mask_bytes == 0
+    assert off.summary() == base.summary()
+    assert off.total_bytes == off.p1_bytes + off.p2_bytes
+
+
+def test_mask_bytes_independent_of_model_size():
+    # seed agreement scales with K only, never with X
+    small, big = CommLedger(), CommLedger()
+    small.record_round("fedavg", 8, _params(16), secure_agg=True)
+    big.record_round("fedavg", 8, _params(16_384), secure_agg=True)
+    assert small.mask_bytes == big.mask_bytes == acc.secure_agg_mask_bytes(8)
+    assert small.p2_bytes < big.p2_bytes

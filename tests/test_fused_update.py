@@ -34,6 +34,7 @@ import numpy as np
 import pytest
 
 from repro.data.synthetic import DATASETS, make_synthetic_tokenlm
+from repro.fl import privacy
 from repro.fl.engine import RoundSchedule, run_rounds
 from repro.fl.local import (
     FlatParamOps,
@@ -44,6 +45,12 @@ from repro.fl.local import (
 from repro.fl.simulation import HOST_RNG_OFFSET_P2, FLConfig, run_federated
 from repro.fl.task import lm_task, vision_task
 from repro.utils.flatten import FlatView
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                         # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 SEED = 0
 
@@ -367,3 +374,56 @@ def test_pod_fused_sharded_layout_parity_subprocess():
                          timeout=900)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "FUSED_SHARDED_PARITY_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: fused DP aggregation == tree DP aggregation
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    def _dp_case(seed, n_leaves, k):
+        """Deterministic (params, w_locals, weights) from a drawn seed."""
+        rng = np.random.default_rng(seed)
+        shapes = [tuple(rng.integers(1, 7, size=rng.integers(1, 3)))
+                  for _ in range(n_leaves)]
+        params = {f"p{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+                  for i, s in enumerate(shapes)}
+        w_locals = {f"p{i}": jnp.asarray(
+            rng.normal(size=(k,) + s, scale=rng.uniform(0.01, 3.0)),
+            jnp.float32) for i, s in enumerate(shapes)}
+        weights = jnp.asarray(rng.uniform(0.5, 4.0, size=k), jnp.float32)
+        ids = jnp.asarray(rng.choice(32, size=k, replace=False), jnp.int32)
+        return params, w_locals, weights, ids
+
+    @given(seed=st.integers(0, 2 ** 30),
+           n_leaves=st.integers(1, 4),
+           k=st.integers(1, 6),
+           clip=st.one_of(st.none(),
+                          st.floats(0.05, 20.0, allow_nan=False)),
+           sigma=st.sampled_from([0.0, 0.05, 0.7]),
+           secure_agg=st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_fused_dp_aggregate_matches_tree_sweep(
+            seed, n_leaves, k, clip, sigma, secure_agg):
+        """For random (clip, sigma, K, shapes, secure-agg flag) the fused
+        single-pass DP aggregate and the tree oracle agree: same clip
+        scales, same noise/mask bits (per-leaf keyed draws), one kernel
+        pass vs tree_map arithmetic."""
+        if clip is None and sigma > 0.0:
+            sigma = 0.0         # DPSpec: noise requires a finite clip
+        dp = None if clip is None else privacy.DPSpec(clip, sigma)
+        params, w_locals, weights, ids = _dp_case(seed, n_leaves, k)
+        rk = jax.random.PRNGKey(seed % 997)
+
+        ref = privacy.tree_dp_aggregate(dp, secure_agg, rk, ids, params,
+                                        w_locals, weights)
+        view = FlatView.of(params)
+        fops = FlatParamOps(view=view, interpret=True)
+        got = fops.unflatten(privacy.fused_dp_aggregate(
+            dp, secure_agg, fops, rk, ids, fops.flatten(params),
+            view.flatten_stacked(w_locals), weights))
+        for a, b in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=3e-5, rtol=3e-5)
