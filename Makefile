@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store bench-pipeline
+.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store bench-pipeline bench-compress
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -32,3 +32,6 @@ bench-store:     ## client-state store scaling (dense vs sparse)
 
 bench-pipeline:  ## overlapped round pipeline vs synchronous (sparse store)
 	$(PY) -m benchmarks.perf_pipeline
+
+bench-compress:  ## compressed client uploads vs baseline (wire + throughput)
+	$(PY) -m benchmarks.perf_compression

@@ -88,20 +88,23 @@ def cyclic_cfg(scale: Scale, seed=0, rounds: Optional[int] = None) -> CyclicConf
 
 
 def fl_cfg(scale: Scale, algorithm: str, seed=0,
-           rounds: Optional[int] = None) -> FLConfig:
+           rounds: Optional[int] = None, compression=None) -> FLConfig:
     return FLConfig(
         algorithm=algorithm,
         rounds=rounds if rounds is not None else scale.p2_rounds,
         participation=scale.p2_participation,
         local_steps=scale.p2_local_steps, eval_every=scale.eval_every,
-        seed=seed)
+        seed=seed, compression=compression)
 
 
 def run_method(task, data, scale: Scale, *, algorithm: str, cyclic: bool,
                seed=0, p1_rounds: Optional[int] = None,
-               p2_rounds: Optional[int] = None, verbose=False):
+               p2_rounds: Optional[int] = None, compression=None,
+               verbose=False):
     """One (method × setting) cell.  Baselines get the FULL round budget
-    (P1+P2) in P2, matching the paper's equal-total-rounds protocol."""
+    (P1+P2) in P2, matching the paper's equal-total-rounds protocol.
+    ``compression`` applies to the P2 uploads only (P1 relays the model
+    itself, which must stay exact — see repro.fl.compression)."""
     p1 = (p1_rounds if p1_rounds is not None else scale.p1_rounds) if cyclic else 0
     p2 = p2_rounds if p2_rounds is not None else scale.p2_rounds
     total = (scale.p1_rounds if p1_rounds is None else p1_rounds) + \
@@ -111,7 +114,8 @@ def run_method(task, data, scale: Scale, *, algorithm: str, cyclic: bool,
     res = run_cyclic_then_federated(
         task, data,
         cyclic_cfg(scale, seed=seed, rounds=p1) if cyclic else None,
-        fl_cfg(scale, algorithm, seed=seed, rounds=p2),
+        fl_cfg(scale, algorithm, seed=seed, rounds=p2,
+               compression=compression),
         verbose=verbose)
     return res
 

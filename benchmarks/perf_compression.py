@@ -1,0 +1,175 @@
+"""Compressed communication on the fused round path: wire savings vs
+compute cost, end to end.
+
+Each mode runs the SAME engine program shape — K vmapped local runs, a
+scan over chunked rounds, fused flat-buffer aggregation — differing only
+in the per-client upload transform (repro.fl.compression):
+
+  baseline : compression=None (the pre-compression program, verbatim)
+  identity : CompressionSpec(bits=32, density=1.0) — must compile to the
+             exact baseline program (the identity spec is statically off)
+  int8     : blockwise symmetric int8 quantization, bf16 block scales
+  int8+topk+ef : + 25% magnitude top-k + error feedback residuals
+
+Reported per mode: rounds/s, dispatch count, and the ledger's
+upload-side ``payload_ratio``.
+
+Regression gates (exit 1):
+  1. dispatch counts are exact — ceil(rounds / chunk) in every mode;
+  2. every compressed mode sustains ≥ 0.9× baseline rounds/s — the
+     compress kernels ride the already-fused flat pass, so they may not
+     dominate the round;
+  3. identity final params == baseline, BITWISE;
+  4. ledger payload_ratio ≥ 3.9 at int8 dense (bf16 block scales:
+     4 bytes → 1 + 2/128 per element).
+
+    PYTHONPATH=src python -m benchmarks.perf_compression
+    PYTHONPATH=src python -m benchmarks.perf_compression --scale full
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result, time_best_of
+from repro.core.comm_accounting import CommLedger
+from repro.data.federated import FederatedDataset
+from repro.fl.compression import CompressionSpec
+from repro.fl.engine import AggregateStrategy, RoundSchedule, run_rounds
+from repro.fl.local import LocalSpec
+from repro.fl.task import vision_task
+
+IMG = 4
+D_HIDDEN = 128
+PER_CLIENT = 4
+# paper-scale local work (≈20 steps/round): the compress transform runs
+# once per client per round, so the gate below measures its cost
+# AMORTIZED against a representative round, not against a near-empty one
+N_STEPS = 10
+
+MODES = (
+    ("baseline", None),
+    ("identity", CompressionSpec()),
+    ("int8", CompressionSpec(bits=8)),
+    ("int8+topk+ef", CompressionSpec(bits=8, density=0.25,
+                                     error_feedback=True)),
+)
+
+# full scale grows the population and round count, not the model — the
+# compress kernels scale with model bytes, the engine with K·rounds
+N_CLIENTS = {"quick": 32, "full": 256}
+
+
+def _make_data(n_clients: int, seed: int) -> FederatedDataset:
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n_clients, PER_CLIENT, IMG, IMG, 1)) \
+        .astype(np.float32)
+    y = rng.integers(0, 10, size=(n_clients, PER_CLIENT)).astype(np.int32)
+    return FederatedDataset(x=x, y=y,
+                            n_real=np.full((n_clients,), PER_CLIENT,
+                                           np.int32),
+                            test_x=x[0], test_y=y[0], n_classes=10,
+                            name=f"perf-compression-{n_clients}")
+
+
+def _bench_one(task, data, spec: Optional[CompressionSpec], *,
+               clients_per_round: int, rounds: int, chunk: int,
+               repeats: int, seed: int) -> Dict:
+    lspec = LocalSpec(n_steps=N_STEPS, batch_size=PER_CLIENT, lr=0.05,
+                      variant="plain", update_impl="fused_interpret",
+                      compression=spec)
+    strat = AggregateStrategy(spec=lspec, algorithm="fedavg",
+                              participation=clients_per_round
+                              / data.n_clients)
+    sched = RoundSchedule(rounds=rounds, lr_decay=1.0, eval_every=0,
+                          seed=seed, chunk_size=chunk, sampling="host",
+                          host_rng_offset=17)
+    ledger = CommLedger()
+    res = run_rounds(task, data, strat, sched, ledger=ledger)  # warm
+    secs = time_best_of(
+        lambda: jax.block_until_ready(jax.tree_util.tree_leaves(
+            run_rounds(task, data, strat, sched).params)), repeats)
+    assert np.isfinite(res.history[-1]["local_loss"])
+    return {"secs": secs, "rounds_per_sec": rounds / secs,
+            "dispatches": res.dispatches,
+            "payload_ratio": ledger.summary()["payload_ratio"],
+            "params": jax.tree_util.tree_map(np.asarray, res.params)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="quick", choices=("quick", "full"))
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=2)
+    ap.add_argument("--clients-per-round", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    task = vision_task("mlp", in_ch=1,
+                       seed_kwargs={"img": IMG, "d_hidden": D_HIDDEN})
+    data = _make_data(N_CLIENTS[args.scale], args.seed)
+    want_dispatches = math.ceil(args.rounds / args.chunk)
+    print(f"[perf_compression] n={data.n_clients}, "
+          f"K={args.clients_per_round}, rounds={args.rounds}, "
+          f"chunk={args.chunk} → {want_dispatches} dispatches", flush=True)
+
+    ok = True
+    rows: List[Dict] = []
+    results: Dict[str, Dict] = {}
+    for mode, spec in MODES:
+        r = _bench_one(task, data, spec,
+                       clients_per_round=args.clients_per_round,
+                       rounds=args.rounds, chunk=args.chunk,
+                       repeats=args.repeats, seed=args.seed)
+        results[mode] = r
+        rows.append({"mode": mode,
+                     "rounds_per_sec": round(r["rounds_per_sec"], 2),
+                     "dispatches": r["dispatches"],
+                     "payload_ratio": round(r["payload_ratio"], 3)})
+        print(f"  {mode:13s} {r['rounds_per_sec']:7.2f} r/s  "
+              f"ratio {r['payload_ratio']:.3f}", flush=True)
+
+    # --- gates ------------------------------------------------------------
+    base = results["baseline"]
+    for mode, r in results.items():
+        if r["dispatches"] != want_dispatches:
+            print(f"[perf_compression] REGRESSION: {mode} ran "
+                  f"{r['dispatches']} dispatches, want {want_dispatches}",
+                  file=sys.stderr)
+            ok = False
+        rel = r["rounds_per_sec"] / base["rounds_per_sec"]
+        if mode != "baseline" and rel < 0.9:
+            print(f"[perf_compression] REGRESSION: {mode} at {rel:.2f}x "
+                  f"baseline — compression dominates the round",
+                  file=sys.stderr)
+            ok = False
+    for a, b in zip(jax.tree_util.tree_leaves(base["params"]),
+                    jax.tree_util.tree_leaves(results["identity"]["params"])):
+        if not np.array_equal(a, b):
+            print("[perf_compression] REGRESSION: identity != baseline "
+                  "params (bitwise)", file=sys.stderr)
+            ok = False
+            break
+    if results["int8"]["payload_ratio"] < 3.9:
+        print(f"[perf_compression] REGRESSION: int8 dense payload_ratio "
+              f"{results['int8']['payload_ratio']:.3f} < 3.9",
+              file=sys.stderr)
+        ok = False
+
+    print()
+    print(fmt_table(rows, ["mode", "rounds_per_sec", "dispatches",
+                           "payload_ratio"]))
+    save_result(f"perf_compression_{args.scale}",
+                {"config": vars(args), "want_dispatches": want_dispatches,
+                 "rows": rows})
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

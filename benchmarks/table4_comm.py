@@ -6,9 +6,17 @@ The paper derives per-algorithm communication totals:
     FedAvg/FedProx/Moon  w/ cyclic  : 2·[K_P1·T_cyc + K_P2·T_res]·X
     SCAFFOLD             w/ cyclic  : 2·[K_P1·T_cyc + 2·K_P2·T_res]·X
 
-We run a short pipeline per (algorithm × cyclic) under a byte ledger and
-assert the measured totals equal the closed forms EXACTLY (this is an
-accounting identity, not a statistical claim — a tiny scale suffices).
+Compressed P2 uploads (repro.fl.compression) change the per-round cost
+to ``K_P2·legs·(X + payload)`` — downloads still ship the full model —
+so the compressed rows check
+    w/o cyclic : T_tot·compressed_round_bytes(algo, K_P2, X, payload)
+    w/ cyclic  : 2·K_P1·T_cyc·X + T_res·compressed_round_bytes(...)
+(P1 relays the model itself and is never compressed).
+
+We run a short pipeline per (algorithm × cyclic × compression) under a
+byte ledger and assert the measured totals equal the closed forms
+EXACTLY (this is an accounting identity, not a statistical claim — a
+tiny scale suffices).
 """
 from __future__ import annotations
 
@@ -16,6 +24,13 @@ import argparse
 
 from benchmarks import common as C
 from repro.core import comm_accounting as acc
+from repro.fl import compression as comp
+from repro.fl.compression import CompressionSpec
+from repro.fl.local import host_flat_ops
+
+# the compressed column's wire spec: int8 blocks + 25% top-k, the
+# highest-leverage point of the sweep (BENCHMARKS.md 'Compression')
+COMPRESSED = CompressionSpec(bits=8, density=0.25, error_feedback=True)
 
 
 def run(scale: C.Scale, seed: int = 0):
@@ -30,26 +45,43 @@ def run(scale: C.Scale, seed: int = 0):
     k_p2 = C.fl_cfg(scale, "fedavg").n_selected(data.n_clients)
     t_cyc, t_res = scale.p1_rounds, scale.p2_rounds
     t_tot = t_cyc + t_res
+    sizes = tuple(host_flat_ops(task, True).view.buffer_sizes.values())
+    payload = comp.payload_bytes(COMPRESSED, sizes)
     for algo in ("fedavg", "fedprox", "moon", "scaffold"):
         for cyclic in (False, True):
-            res = C.run_method(task, data, scale, algorithm=algo,
-                               cyclic=cyclic, seed=seed)
-            led = res.ledger.summary()
-            x = led["model_bytes"]
-            if cyclic:
-                closed = acc.overhead_with_cyclic(algo, k_p1, t_cyc, k_p2,
-                                                  t_res, x)
-            else:
-                closed = acc.overhead_without_cyclic(algo, k_p2, t_tot, x)
-            rows.append({
-                "algorithm": algo, "cyclic": cyclic,
-                "measured_bytes": led["total_bytes"],
-                "closed_form_bytes": closed,
-                "match": led["total_bytes"] == closed,
-            })
-            print(f"[table4] {algo:9s} cyclic={cyclic} "
-                  f"measured={led['total_bytes']:.3e} closed={closed:.3e} "
-                  f"match={rows[-1]['match']}", flush=True)
+            for spec in (None, COMPRESSED):
+                res = C.run_method(task, data, scale, algorithm=algo,
+                                   cyclic=cyclic, seed=seed,
+                                   compression=spec)
+                led = res.ledger.summary()
+                x = led["model_bytes"]
+                if spec is None:
+                    if cyclic:
+                        closed = acc.overhead_with_cyclic(
+                            algo, k_p1, t_cyc, k_p2, t_res, x)
+                    else:
+                        closed = acc.overhead_without_cyclic(
+                            algo, k_p2, t_tot, x)
+                else:
+                    # P1 (if any) stays exact; every P2 round pays the
+                    # compressed form
+                    p2_rounds = t_res if cyclic else t_tot
+                    closed = (2 * k_p1 * t_cyc * x if cyclic else 0) + \
+                        p2_rounds * acc.compressed_round_bytes(
+                            algo, k_p2, x, payload)
+                rows.append({
+                    "algorithm": algo, "cyclic": cyclic,
+                    "compressed": spec is not None,
+                    "measured_bytes": led["total_bytes"],
+                    "closed_form_bytes": closed,
+                    "payload_ratio": round(led["payload_ratio"], 3),
+                    "match": led["total_bytes"] == closed,
+                })
+                print(f"[table4] {algo:9s} cyclic={cyclic} "
+                      f"compressed={spec is not None} "
+                      f"measured={led['total_bytes']:.3e} "
+                      f"closed={closed:.3e} "
+                      f"match={rows[-1]['match']}", flush=True)
     return rows
 
 
@@ -60,8 +92,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     scale = C.SCALES[args.scale]
     rows = run(scale, seed=args.seed)
-    print(C.fmt_table(rows, ["algorithm", "cyclic", "measured_bytes",
-                             "closed_form_bytes", "match"]))
+    print(C.fmt_table(rows, ["algorithm", "cyclic", "compressed",
+                             "measured_bytes", "closed_form_bytes",
+                             "payload_ratio", "match"]))
     C.save_result(f"table4_{args.scale}", {"rows": rows})
     n_match = sum(1 for r in rows if r["match"])
     print(f"[table4] ledger == closed form: {n_match}/{len(rows)}")

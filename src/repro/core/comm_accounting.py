@@ -54,6 +54,16 @@ def overhead_with_cyclic(algorithm: str, k_p1: int, t_cyc: int,
     return 2 * k_p1 * t_cyc * x_bytes + p2_factor * k_p2 * t_res * x_bytes
 
 
+def compressed_round_bytes(algorithm: str, k_p2: int, x_bytes: int,
+                           payload_bytes: int) -> int:
+    """One compressed P2 round: each of the K clients downloads the full
+    model (X) and uploads the compressed payload, once per leg pair —
+    the closed form ``table4_comm.py``'s compression column checks the
+    ledger against."""
+    legs = _PER_ROUND_FACTOR[algorithm] // 2
+    return k_p2 * legs * (x_bytes + payload_bytes)
+
+
 def rounds_budget_equivalent(algorithm: str, k_p1: int, t_cyc: int,
                              k_p2: int, x_bytes: int) -> float:
     """How many P2 rounds the P1 phase costs — converts the paper's
@@ -65,35 +75,70 @@ def rounds_budget_equivalent(algorithm: str, k_p1: int, t_cyc: int,
 
 @dataclasses.dataclass
 class CommLedger:
-    """Runtime byte counter incremented by the P1/P2 drivers."""
+    """Runtime byte counter incremented by the P1/P2 drivers.
+
+    Capacity is recomputed PER RECORD (or taken from the explicit
+    ``x_bytes`` override the engine passes) — P1 relay and compressed P2
+    payloads legitimately differ, so nothing may latch the first call's
+    bytes forever.  ``model_bytes`` in :meth:`summary` reports the
+    first-seen capacity separately, as the X the closed forms use.
+
+    Compressed communication (repro.fl.compression) threads
+    ``payload_bytes`` — the wire bytes of ONE client's compressed
+    upload — into :meth:`record_round`: the download legs still ship the
+    full model (clients need exact params to train on), so a round costs
+    ``K · legs · (X + payload)`` with ``legs = factor/2`` up/down leg
+    pairs per client (SCAFFOLD's control variates double both
+    directions).  ``payload_ratio`` in the summary is the UPLOAD-side
+    reduction — full upload bytes over actual — which is the axis
+    compression acts on (1.0 when nothing was compressed).
+    """
     p1_bytes: int = 0
     p2_bytes: int = 0
     p1_rounds: int = 0
     p2_rounds: int = 0
     mask_bytes: int = 0         # secure-agg pairwise seed exchanges
-    _x_bytes: Optional[int] = None
+    p2_upload_bytes: int = 0        # actual up-leg bytes
+    p2_upload_full_bytes: int = 0   # up-leg bytes had nothing compressed
+    _x_bytes: Optional[int] = None  # first-seen capacity (reporting only)
 
     @property
     def total_bytes(self) -> int:
         return self.p1_bytes + self.p2_bytes + self.mask_bytes
 
-    def record_cyclic_round(self, k_p1: int, params: Pytree) -> None:
-        x = self._capacity(params)
+    @property
+    def payload_ratio(self) -> float:
+        """Upload-side compression factor: full / actual up-leg bytes."""
+        if not self.p2_upload_bytes:
+            return 1.0
+        return self.p2_upload_full_bytes / self.p2_upload_bytes
+
+    def record_cyclic_round(self, k_p1: int, params: Pytree, *,
+                            x_bytes: Optional[int] = None) -> None:
+        x = self._capacity(params, x_bytes)
         self.p1_bytes += 2 * k_p1 * x       # download + upload per client
         self.p1_rounds += 1
 
     def record_round(self, algorithm: str, k_p2: int, params: Pytree, *,
-                     secure_agg: bool = False) -> None:
-        x = self._capacity(params)
-        self.p2_bytes += _PER_ROUND_FACTOR[algorithm] * k_p2 * x
+                     secure_agg: bool = False,
+                     x_bytes: Optional[int] = None,
+                     payload_bytes: Optional[int] = None) -> None:
+        x = self._capacity(params, x_bytes)
+        legs = _PER_ROUND_FACTOR[algorithm] // 2    # down/up pairs
+        up = x if payload_bytes is None else int(payload_bytes)
+        self.p2_bytes += k_p2 * legs * (x + up)
+        self.p2_upload_bytes += k_p2 * legs * up
+        self.p2_upload_full_bytes += k_p2 * legs * x
         self.p2_rounds += 1
         if secure_agg:
             self.mask_bytes += secure_agg_mask_bytes(k_p2)
 
-    def _capacity(self, params: Pytree) -> int:
+    def _capacity(self, params: Pytree,
+                  x_bytes: Optional[int] = None) -> int:
+        x = int(x_bytes) if x_bytes is not None else model_bytes(params)
         if self._x_bytes is None:
-            self._x_bytes = model_bytes(params)
-        return self._x_bytes
+            self._x_bytes = x           # first-seen, for reporting only
+        return x
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -102,4 +147,6 @@ class CommLedger:
             "mask_bytes": self.mask_bytes,
             "total_bytes": self.total_bytes,
             "model_bytes": self._x_bytes or 0,
+            "p2_upload_bytes": self.p2_upload_bytes,
+            "payload_ratio": self.payload_ratio,
         }

@@ -128,6 +128,7 @@ replicated (n_clients, model) blow-up.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
 import time
@@ -138,7 +139,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.federated import FederatedDataset
-from repro.fl import privacy
+from repro.fl import compression, privacy
 from repro.fl.local import (
     FlatParamOps,
     LocalSpec,
@@ -187,6 +188,26 @@ def fused_aggregate(fops: FlatParamOps, p_bufs: Dict, stacked_bufs: Dict,
     ``flatten_stacked`` re-concatenate of the PR-4 flow is gone."""
     wbar = (weights / jnp.sum(weights)).astype(jnp.float32)
     return fops.weighted_delta(p_bufs, stacked_bufs, wbar)
+
+
+@functools.lru_cache(maxsize=64)
+def _logical_model_bytes(task: Task) -> int:
+    """X for the comm ledger: the LOGICAL model capacity from the task's
+    param shapes — never the engine's carried representation, whose
+    grid-padded flat buffers would over-count, and whose padding differs
+    between P1/P2 and host/pod while the wire cost does not."""
+    p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    return tm.size_bytes(p_specs)
+
+
+@functools.lru_cache(maxsize=64)
+def _upload_payload_bytes(task: Task, comp) -> int:
+    """Closed-form wire bytes of ONE compressed client upload over the
+    task's logical flat bucket sizes (the accounting wire model on both
+    backends — the pod's per-shard split carries the same logical
+    elements)."""
+    view = host_flat_ops(task, True).view
+    return compression.payload_bytes(comp, tuple(view.buffer_sizes.values()))
 
 
 def unpack_server_state(fops: FlatParamOps, state: Any) -> Any:
@@ -241,23 +262,65 @@ class DenseClientStateStore:
 DENSE_STORE = DenseClientStateStore()
 
 
+_SPILL_POOL: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+
+def _spill_pool() -> concurrent.futures.ThreadPoolExecutor:
+    """One background worker shared by every sparse store: spill blocks
+    convert their device rows to numpy OFF the engine thread.  A single
+    worker serializes the conversions, so at most one competes with the
+    engine's dispatch enqueue for host cycles."""
+    global _SPILL_POOL
+    if _SPILL_POOL is None:
+        _SPILL_POOL = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="spill-materialize")
+    return _SPILL_POOL
+
+
 class _SpillBlock:
     """One dispatch's stacked evicted rows, parked on the CPU device by a
-    single (async) batched transfer at commit time; materialized to numpy
-    lazily on first refault — by which point the dispatch that produced
-    the source table has long drained, so the asarray never stalls the
-    pipeline."""
+    single (async) batched transfer at commit time.  ``commit_chunk``
+    submits the numpy materialization to a background worker
+    (:meth:`materialize_async`) — the conversion blocks until the
+    dispatch that produced the source table drains, so running it on the
+    worker hides that wait AND the copy itself off the critical path; by
+    the time a refault burst needs the rows in ``stage_chunk``,
+    ``leaves()`` just joins the (usually finished) worker.  Blocks that
+    were never submitted (direct construction in tests) keep the old
+    lazy first-refault conversion."""
 
-    __slots__ = ("rows", "_np")
+    __slots__ = ("rows", "_np", "_future")
 
     def __init__(self, rows):
         self.rows = rows                # list of (n_evicted, ...) leaves
         self._np = None
+        self._future = None
+
+    def materialize_async(self, meta: Optional[dict] = None) -> None:
+        """Convert to numpy on the shared background worker; ``meta``
+        (the owning store's ``_meta``) accumulates the off-thread ms
+        under ``"spill_ms"`` — single-writer, the one pool worker."""
+        if self._future is None and self._np is None:
+            self._future = _spill_pool().submit(self._materialize, meta)
+
+    def _materialize(self, meta: Optional[dict]):
+        t0 = time.perf_counter()
+        out = [np.asarray(leaf) for leaf in self.rows]
+        if meta is not None:
+            meta["spill_ms"] = meta.get("spill_ms", 0.0) + \
+                (time.perf_counter() - t0) * 1e3
+        self._np = out
+        self.rows = None                # drop the device handles
+        return out
 
     def leaves(self):
+        f = self._future
+        if f is not None:
+            f.result()                  # join the background conversion
+            self._future = None
         if self._np is None:
             self._np = [np.asarray(leaf) for leaf in self.rows]
-            self.rows = None            # drop the device handles
+            self.rows = None
         return self._np
 
 
@@ -326,6 +389,7 @@ class SparseClientStateStore:
         self._meta["stamp"] = np.zeros((cap,), np.int32)
         self._meta["stage_bufs"] = None
         self._meta["transfer_ms"] = 0.0
+        self._meta["spill_ms"] = 0.0
         return {
             "table": stack_copies(template, cap),
             "slot_of": jnp.full((n_clients,), -1, jnp.int32),
@@ -351,6 +415,14 @@ class SparseClientStateStore:
     def staged_transfer_ms(self) -> float:
         """Cumulative wall time spent enqueueing refill transfers."""
         return float(self._meta.get("transfer_ms", 0.0))
+
+    @property
+    def spill_materialize_ms(self) -> float:
+        """Cumulative background time converting spilled rows to numpy —
+        host ms moved OFF the stage/commit critical path (satellite of
+        the overlapped pipeline: a refault burst no longer pays the
+        device→numpy conversion inside ``stage_chunk``)."""
+        return float(self._meta.get("spill_ms", 0.0))
 
     # -- host-side residency (eager, between dispatches) --------------------
 
@@ -464,6 +536,9 @@ class SparseClientStateStore:
                 except RuntimeError:
                     pass                # no CPU device: plain device refs
                 block = _SpillBlock(jax.tree_util.tree_leaves(rows))
+                # eager off-thread materialization: the conversion waits
+                # for the in-flight dispatch on the WORKER, not here
+                block.materialize_async(self._meta)
                 for j, cid in enumerate(evicted[live]):
                     self._cold[int(cid)] = (block, j)
             rows_tree = jax.tree_util.tree_unflatten(
@@ -607,6 +682,12 @@ class RelayStrategy(HostBackend):
         if self.spec.dp is not None or self.spec.secure_agg:
             raise ValueError("RelayStrategy (P1) has no aggregation; "
                              "dp/secure_agg apply to P2 only")
+        # ... and the relayed model IS the next client's start state, so
+        # a lossy upload would corrupt training, not just the aggregate
+        if compression.compression_on(self.spec.compression):
+            raise ValueError("RelayStrategy (P1) relays the model itself; "
+                             "lossy compression applies to P2 round "
+                             "deltas only")
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -639,8 +720,9 @@ class RelayStrategy(HostBackend):
 
         return body
 
-    def record(self, ledger, k: int, params: Pytree) -> None:
-        ledger.record_cyclic_round(k, params)
+    def record(self, ledger, k: int, params: Pytree, task=None) -> None:
+        x = _logical_model_bytes(task) if task is not None else None
+        ledger.record_cyclic_round(k, params, x_bytes=x)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -667,49 +749,98 @@ class AggregateStrategy(HostBackend):
     # the store key each algorithm keeps its per-client rows under
     _STORE_KEYS = {"scaffold": "c_clients", "moon": "w_prev"}
 
+    @functools.cached_property
+    def _ef_store(self):
+        """A FRESH store instance for the error-feedback residual rows —
+        sparse stores keep eager per-pytree residency state (host
+        mirrors, the spill dict), so the algorithm rows and the residual
+        rows cannot share one instance.  Dense stores are stateless and
+        reused as-is."""
+        store = self.state_store
+        if isinstance(store, SparseClientStateStore):
+            return dataclasses.replace(store, _cold={}, _meta={})
+        return store
+
+    def _residency_entries(self):
+        """``(algo_state key, store)`` pairs carrying per-client rows —
+        the algorithm's own state plus, under compressed communication
+        with error feedback, the residual rows.  Order is stable; the
+        staged-token lists below index into it."""
+        out = []
+        key = self._STORE_KEYS.get(self.algorithm)
+        if key is not None:
+            out.append((key, self.state_store))
+        comp = self.spec.compression
+        if compression.compression_on(comp) and comp.error_feedback:
+            out.append(("ef_residuals", self._ef_store))
+        return out
+
+    @property
+    def residency_stores(self):
+        """Every store instance holding per-client rows (engine timing
+        aggregates their transfer/materialization counters)."""
+        return [s for _, s in self._residency_entries()]
+
     def init_state(self, task: Task, params: Pytree, n_clients: int) -> Dict:
         # flat-first: ``params`` arrive as the engine's placed flat
         # buffers, so the per-client state is flat too — the store is
         # representation-agnostic and the round bodies below run the
         # scaffold/moon state algebra directly on the (K, N) row buffers
         fops = self.flat_ops(task)
+        state: Dict[str, Pytree] = {}
         if self.algorithm == "scaffold":
             zeros = fops.zeros() if fops is not None else tm.zeros_like(params)
-            return {"c_global": zeros,
-                    "c_clients": self.state_store.init(zeros, n_clients)}
-        if self.algorithm == "moon":
-            return {"w_prev": self.state_store.init(params, n_clients)}
-        return {}
+            state = {"c_global": zeros,
+                     "c_clients": self.state_store.init(zeros, n_clients)}
+        elif self.algorithm == "moon":
+            state = {"w_prev": self.state_store.init(params, n_clients)}
+        comp = self.spec.compression
+        if compression.compression_on(comp) and comp.error_feedback:
+            # error-feedback residuals are per-client f32 rows in the
+            # engine's flat bucket layout on BOTH paths (compression is
+            # defined on the flat buckets): padded carry buffers on the
+            # fused path, the host FlatView's logical buckets on tree
+            tmpl = (fops.zeros(jnp.float32) if fops is not None
+                    else host_flat_ops(task, True).view.zeros(jnp.float32))
+            state["ef_residuals"] = self._ef_store.init(tmpl, n_clients)
+        return state
 
     def prepare_chunk_state(self, algo_state: Dict, ids_block) -> Dict:
-        store = self.state_store
-        key = self._STORE_KEYS.get(self.algorithm)
-        if key is None or not getattr(store, "needs_host_ids", False):
-            return algo_state
-        return dict(algo_state,
-                    **{key: store.prepare_chunk(algo_state[key], ids_block)})
+        out = algo_state
+        for key, store in self._residency_entries():
+            if not getattr(store, "needs_host_ids", False):
+                continue
+            out = dict(out, **{key: store.prepare_chunk(out[key], ids_block)})
+        return out
 
     def stage_chunk_state(self, ids_block) -> Any:
-        store = self.state_store
-        key = self._STORE_KEYS.get(self.algorithm)
-        if key is None or not getattr(store, "needs_host_ids", False):
-            return None
-        if hasattr(store, "stage_chunk"):
-            return ("staged", key, store.stage_chunk(ids_block))
-        # stores without a staged contract degrade gracefully: remember
-        # the ids and run the classic synchronous prepare at commit time
-        return ("ids", key, np.asarray(ids_block))
+        toks = []
+        for key, store in self._residency_entries():
+            if not getattr(store, "needs_host_ids", False):
+                toks.append(None)
+            elif hasattr(store, "stage_chunk"):
+                toks.append(("staged", key, store.stage_chunk(ids_block)))
+            else:
+                # stores without a staged contract degrade gracefully:
+                # remember the ids and run the classic synchronous
+                # prepare at commit time
+                toks.append(("ids", key, np.asarray(ids_block)))
+        return toks if any(t is not None for t in toks) else None
 
     def commit_chunk_state(self, algo_state: Dict, staged: Any) -> Dict:
         if staged is None:
             return algo_state
-        tag, key, val = staged
-        store = self.state_store
-        if tag == "ids":
-            return dict(algo_state,
-                        **{key: store.prepare_chunk(algo_state[key], val)})
-        return dict(algo_state,
-                    **{key: store.commit_chunk(algo_state[key], val)})
+        out = dict(algo_state)
+        stores = dict(self._residency_entries())
+        for tok in staged:
+            if tok is None:
+                continue
+            tag, key, val = tok
+            if tag == "ids":
+                out[key] = stores[key].prepare_chunk(out[key], val)
+            else:
+                out[key] = stores[key].commit_chunk(out[key], val)
+        return out
 
     def make_server_update(self, task: Optional[Task] = None
                            ) -> Optional[Tuple[Callable, Callable]]:
@@ -794,29 +925,60 @@ class AggregateStrategy(HostBackend):
         local = make_local_fn(task, spec, fops)
         algo = self.algorithm
         store = self.state_store
-        # aggregation takes (round_key, ids, params, w_locals, weights):
-        # the key/ids thread the DP noise and secure-agg mask derivation
-        # (repro.fl.privacy) into the round program; with privacy off the
-        # closures ignore them and reduce to the exact baseline math
+        # aggregation takes (round_key, ids, params, w_locals, weights,
+        # algo_state) and returns (new_params, algo_state): the key/ids
+        # thread the DP noise and secure-agg mask derivation
+        # (repro.fl.privacy) into the round program, and the state rides
+        # through so compressed communication (repro.fl.compression) can
+        # gather/scatter its error-feedback residual rows; with privacy
+        # and compression off the closures ignore all three and reduce
+        # to the exact baseline math
         private = privacy.privacy_on(spec.dp, spec.secure_agg)
+        comp = spec.compression
+        compressed = compression.compression_on(comp)
+        ef = compressed and comp.error_feedback
+        ef_store = self._ef_store if ef else None
+
+        def with_ef(agg_fn):
+            def run(rk, ids, p, wl, w, st):
+                res = (ef_store.gather(st["ef_residuals"], ids)
+                       if ef else None)
+                new_p, new_r = agg_fn(p, wl, w, res)
+                if ef:
+                    st = dict(st, ef_residuals=ef_store.scatter(
+                        st["ef_residuals"], ids, new_r))
+                return new_p, st
+            return run
+
+        def stateless(agg_fn):
+            return lambda rk, ids, p, wl, w, st: (agg_fn(rk, ids, p, wl, w),
+                                                  st)
+
         if fops is None:
-            if private:
-                aggregate = functools.partial(
-                    privacy.tree_dp_aggregate, spec.dp, spec.secure_agg)
+            if compressed:
+                view = host_flat_ops(task, True).view
+                aggregate = with_ef(functools.partial(
+                    compression.tree_compressed_aggregate, comp, view))
+            elif private:
+                aggregate = stateless(functools.partial(
+                    privacy.tree_dp_aggregate, spec.dp, spec.secure_agg))
             else:
-                aggregate = lambda rk, ids, p, wl, w: \
-                    tm.stacked_weighted_mean(wl, w)                       # noqa: E731
+                aggregate = stateless(
+                    lambda rk, ids, p, wl, w: tm.stacked_weighted_mean(wl, w))
             unpack = stacked_unpack = lambda t: t                         # noqa: E731
         else:
             # the vmapped flat local outputs ARE the stacked (K, N)
             # buffers — aggregation consumes them with zero packing
-            if private:
-                aggregate = functools.partial(
+            if compressed:
+                aggregate = with_ef(functools.partial(
+                    compression.fused_compressed_aggregate, comp, fops))
+            elif private:
+                aggregate = stateless(functools.partial(
                     privacy.fused_dp_aggregate, spec.dp, spec.secure_agg,
-                    fops)
+                    fops))
             else:
-                aggregate = lambda rk, ids, p, wl, w: \
-                    fused_aggregate(fops, p, wl, w)                       # noqa: E731
+                aggregate = stateless(
+                    lambda rk, ids, p, wl, w: fused_aggregate(fops, p, wl, w))
             unpack = fops.unflatten
             stacked_unpack = fops.stacked_unflatten
 
@@ -835,7 +997,9 @@ class AggregateStrategy(HostBackend):
                 w_locals, aux = jax.vmap(
                     local, in_axes=(0, None, in_ext, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
-                new_params = aggregate(key, ids, params, w_locals, weights)
+                new_params, algo_state = aggregate(key, ids, params,
+                                                   w_locals, weights,
+                                                   algo_state)
                 return new_params, algo_state, jnp.mean(aux["loss"])
 
             if algo == "scaffold":
@@ -873,7 +1037,9 @@ class AggregateStrategy(HostBackend):
                         lambda ci, cg, w, wl: ci - cg[None] +
                         (w[None] - wl) / denom,
                         c_i, c, params, w_locals)
-                new_params = aggregate(key, ids, params, w_locals, weights)
+                new_params, algo_state = aggregate(key, ids, params,
+                                                   w_locals, weights,
+                                                   algo_state)
                 # c ← c + (K/N)·mean_i(c_i⁺ − c_i); N is the POPULATION
                 # (the sparse store's physical table is only capacity rows)
                 frac = K / store.population(c_all)
@@ -881,7 +1047,8 @@ class AggregateStrategy(HostBackend):
                     lambda cg, new, old: cg + frac * jnp.mean(new - old, axis=0),
                     c, c_i_new, c_i)
                 c_all_new = store.scatter(c_all, ids, c_i_new)
-                state = {"c_global": c_new, "c_clients": c_all_new}
+                state = dict(algo_state, c_global=c_new,
+                             c_clients=c_all_new)
                 return new_params, state, jnp.mean(aux["loss"])
 
             if algo == "moon":
@@ -895,17 +1062,26 @@ class AggregateStrategy(HostBackend):
                     local,
                     in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
                     keys, params, extras, cx, cy, lr_scale)
-                new_params = aggregate(key, ids, params, w_locals, weights)
-                state = {"w_prev": store.scatter(w_prev_all, ids, w_locals)}
+                new_params, algo_state = aggregate(key, ids, params,
+                                                   w_locals, weights,
+                                                   algo_state)
+                state = dict(algo_state,
+                             w_prev=store.scatter(w_prev_all, ids, w_locals))
                 return new_params, state, jnp.mean(aux["loss"])
 
             raise ValueError(f"unknown algorithm {algo!r}")
 
         return body
 
-    def record(self, ledger, k: int, params: Pytree) -> None:
+    def record(self, ledger, k: int, params: Pytree, task=None) -> None:
+        comp = self.spec.compression
+        x = _logical_model_bytes(task) if task is not None else None
+        payload = (_upload_payload_bytes(task, comp)
+                   if task is not None and compression.compression_on(comp)
+                   else None)
         ledger.record_round(self.algorithm, k, params,
-                            secure_agg=self.spec.secure_agg)
+                            secure_agg=self.spec.secure_agg,
+                            x_bytes=x, payload_bytes=payload)
 
 
 # ---------------------------------------------------------------------------
@@ -1036,7 +1212,9 @@ class EngineResult:
     # host_residency_ms = stage planning + staging-transfer enqueue,
     # staged_transfer_ms = the device_put slice of that (store-reported),
     # dispatch_enqueue_ms = commit + chunk_fn call overhead,
-    # device_wait_ms = blocking on the dispatched chunk's outputs
+    # device_wait_ms = blocking on the dispatched chunk's outputs,
+    # spill_materialize_ms = background spill→numpy conversion time
+    # (work moved OFF the critical path, not added to it)
     timing: Optional[Dict[str, float]] = None
 
 
@@ -1220,18 +1398,28 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
         and switch_policy is None
 
     # sparse stores manage residency on the host between dispatches: they
-    # must see each chunk's client ids before the chunk runs
+    # must see each chunk's client ids before the chunk runs.  A strategy
+    # may carry several stores (algorithm rows + EF residual rows).
     store = getattr(strategy, "state_store", None)
-    sparse_residency = bool(getattr(store, "needs_host_ids", False)) \
-        and bool(algo_state)
+    stores = getattr(strategy, "residency_stores", None)
+    if stores is None:
+        stores = [store] if store is not None else []
+    sparse_residency = any(getattr(s, "needs_host_ids", False)
+                           for s in stores) and bool(algo_state)
     # device sampling: the replay key advances on the host by the same
     # split recurrence the program runs, so chunk N+1's draws are known
     # before chunk N's carried key has materialized
     replay_key = key
 
     timing = {"host_residency_ms": 0.0, "staged_transfer_ms": 0.0,
-              "dispatch_enqueue_ms": 0.0, "device_wait_ms": 0.0}
-    transfer_ms0 = float(getattr(store, "staged_transfer_ms", 0.0) or 0.0)
+              "dispatch_enqueue_ms": 0.0, "device_wait_ms": 0.0,
+              "spill_materialize_ms": 0.0}
+
+    def stores_ms(attr: str) -> float:
+        return sum(float(getattr(s, attr, 0.0) or 0.0) for s in stores)
+
+    transfer_ms0 = stores_ms("staged_transfer_ms")
+    spill_ms0 = stores_ms("spill_materialize_ms")
 
     def make_plan(rnd: int) -> _ChunkPlan:
         """Everything host-derived a dispatch needs: the round window,
@@ -1308,7 +1496,7 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
         rnd, R = plan.rnd, plan.R
         for j in range(R):
             if ledger is not None:
-                strategy.record(ledger, K, params)
+                strategy.record(ledger, K, params, task)
             row = {"round": rnd + j, "local_loss": float(losses[j]),
                    "phase": phase}
             if plan.do_eval[j]:
@@ -1326,8 +1514,12 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
             nxt = (make_plan(rnd + R) if rnd + R < schedule.rounds else None)
         plan = nxt
 
-    timing["staged_transfer_ms"] = \
-        float(getattr(store, "staged_transfer_ms", 0.0) or 0.0) - transfer_ms0
+    timing["staged_transfer_ms"] = stores_ms("staged_transfer_ms") \
+        - transfer_ms0
+    # background spill-materialization ms accrued this run (off the
+    # critical path — host work the refault bursts no longer pay)
+    timing["spill_materialize_ms"] = stores_ms("spill_materialize_ms") \
+        - spill_ms0
 
     if fops is not None:                # EngineResult speaks trees
         params = fops.unflatten(params)

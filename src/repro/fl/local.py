@@ -47,6 +47,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.fl.compression import (CompressionSpec, topk_k, topk_threshold,
+                                  validate_compression)
 from repro.fl.privacy import DPSpec
 from repro.fl.task import Task
 from repro.kernels import ops
@@ -87,9 +89,17 @@ class LocalSpec:
     # Both apply at AGGREGATION — the local run itself is unchanged.
     dp: Optional[DPSpec] = None
     secure_agg: bool = False
+    # compressed client→server uploads (repro.fl.compression): blockwise
+    # int8/int16 quantization + magnitude top-k on each round delta,
+    # optionally with error-feedback residuals.  Like dp/secure_agg this
+    # applies at AGGREGATION only; None and the identity spec keep the
+    # exact baseline program.
+    compression: Optional[CompressionSpec] = None
 
     def __post_init__(self):
         validate_update_impl(self.update_impl)
+        validate_compression(self.compression, dp=self.dp,
+                             secure_agg=self.secure_agg)
 
 
 def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
@@ -206,6 +216,14 @@ class FlatParamOps:
         del name
         return fn(*bufs, *scalars)
 
+    def _logical_size(self, name: str) -> int:
+        """Logical element count of bucket ``name`` as ONE kernel
+        invocation sees it — the top-k population (pad lanes are zero
+        and zeros never change the k-th largest |d|, so a logical k over
+        a padded buffer is exact).  Host: the FlatView bucket size; the
+        pod override returns the PER-SHARD size (shard-local top-k)."""
+        return self.view.buffer_sizes[name]
+
     def grad_sqsum(self, g_bufs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         """Σ‖g‖² over every bucket — the global clip norm is one
         reduction per bucket (sharded buffers reduce over the mesh)."""
@@ -242,16 +260,48 @@ class FlatParamOps:
                 new_m[name] = outs[1]
         return new_p, new_m
 
-    def weighted_delta(self, p_bufs, stacked_bufs, wbar, extra=None):
+    def weighted_delta(self, p_bufs, stacked_bufs, wbar, extra=None, *,
+                       deltas: bool = False):
         """Host FedAvg aggregation: the vmapped local outputs arrive as
         already-stacked ``(K, N)`` buffers — no re-concatenate.
         ``extra`` (optional f32 buffer dict — the round's DP noise +
-        secure-agg mask total) folds into the same kernel pass."""
+        secure-agg mask total) folds into the same kernel pass.
+        ``deltas=True`` reads the stack as already-formed client deltas
+        (the compressed-communication aggregate)."""
         return {name: ops.fused_weighted_delta(
             stacked_bufs[name], p, wbar,
             None if extra is None else extra[name],
-            interpret=self.interpret)
+            deltas=deltas, interpret=self.interpret)
             for name, p in p_bufs.items()}
+
+    def compress_delta(self, d_bufs, spec: CompressionSpec):
+        """Compressed-communication form of one client's f32 delta dict
+        — ``(c_bufs, r_bufs)``, ``r_bufs=None`` unless error feedback.
+        The top-k threshold is computed INSIDE the per-bucket fn (one
+        ``lax.top_k`` + one blocked kernel pass), so the pod flavor
+        thresholds shard-locally under shard_map with zero collectives
+        — each shard keeps its own k over its own elements."""
+        interpret = self.interpret
+        with_r = spec.error_feedback
+
+        def make_fn(k):
+            def fn(d1):
+                tau = (topk_threshold(d1, k) if spec.sparsifies
+                       else jnp.float32(0.0))
+                out = ops.fused_compress_delta(
+                    d1, tau, bits=spec.bits, topk=spec.sparsifies,
+                    with_residual=with_r, interpret=interpret)
+                return out if with_r else (out,)
+            return fn
+
+        c_out, r_out = {}, {}
+        for name, d in d_bufs.items():
+            k = topk_k(spec, self._logical_size(name))
+            outs = self._run(name, make_fn(k), [d], ())
+            c_out[name] = outs[0]
+            if with_r:
+                r_out[name] = outs[1]
+        return c_out, (r_out if with_r else None)
 
     def dp_clip_noise(self, d_bufs, z_bufs, clip_scale, noise_scale):
         """One client's DP upload per bucket in ONE blocked pass:
@@ -279,15 +329,24 @@ class FlatParamOps:
         return out
 
     def delta_accum(self, delta_bufs, w_bufs, p_bufs, coeff):
-        """One client's contribution to the pod's running f32 delta."""
+        """One client's contribution to the pod's running f32 delta.
+        ``p_bufs=None`` selects the accum-only form ``acc += coeff·w``
+        (compressed uploads ARE deltas — there is no −coeff·p term)."""
         interpret = self.interpret
+        with_p = p_bufs is not None
 
-        def fn(d1, w1, p1, c1):
+        def fn(*a):
+            if with_p:
+                d1, w1, p1, c1 = a
+            else:
+                (d1, w1, c1), p1 = a, None
             return (ops.fused_delta_accum(d1, w1, p1, c1,
                                           interpret=interpret),)
 
-        return {name: self._run(name, fn,
-                                [d, w_bufs[name], p_bufs[name]], (coeff,))[0]
+        return {name: self._run(
+                    name, fn,
+                    [d, w_bufs[name]] + ([p_bufs[name]] if with_p else []),
+                    (coeff,))[0]
                 for name, d in delta_bufs.items()}
 
     def apply_delta(self, p_bufs, delta_bufs):

@@ -103,7 +103,7 @@ from repro.fl.engine import (
     tree_rows,
     tree_set_rows,
 )
-from repro.fl import privacy
+from repro.fl import compression, privacy
 from repro.fl.local import FlatParamOps, LocalSpec, make_local_fn
 from repro.fl.simulation import HOST_RNG_OFFSET_P2
 from repro.fl.task import Task
@@ -149,10 +149,23 @@ class PodFLSpec:
     # baseline program.
     dp: Optional[privacy.DPSpec] = None
     secure_agg: bool = False
+    # compressed P2 uploads (repro.fl.compression): block-quantized +
+    # top-k sparsified client deltas, optional error feedback.  The
+    # identity spec / None compile to the exact baseline program.
+    compression: Optional[compression.CompressionSpec] = None
 
     def __post_init__(self):
+        from repro.fl import compression as comp_mod
         from repro.fl.local import validate_update_impl
         validate_update_impl(self.update_impl)
+        comp_mod.validate_compression(
+            self.compression, dp=self.dp, secure_agg=self.secure_agg)
+        if comp_mod.compression_on(self.compression) and \
+                self.update_impl == "tree":
+            raise ValueError(
+                "pod lossy compression needs the fused flat path "
+                "(update_impl='fused'|'fused_interpret') — the tree "
+                "backend has no shard-local compress kernel")
 
     def local_spec(self, variant: Optional[str] = None) -> LocalSpec:
         return LocalSpec(
@@ -161,7 +174,7 @@ class PodFLSpec:
             variant=variant or _VARIANTS[self.algorithm], mu=self.mu,
             temperature=self.temperature, grad_clip=self.grad_clip,
             update_impl=self.update_impl, dp=self.dp,
-            secure_agg=self.secure_agg)
+            secure_agg=self.secure_agg, compression=self.compression)
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +357,13 @@ class ShardedFlatOps(FlatParamOps):
                                        [P()] * len(scalars)),
                         out_specs=(bspec,) * n_out, check_rep=False)
         return run(*bufs, *scalars)
+
+    def _logical_size(self, name: str) -> int:
+        # one kernel invocation runs under shard_map on ONE shard's
+        # contiguous tile, so the top-k population is the PER-SHARD
+        # logical element count — compression keeps k elements per shard
+        # (shard-local top-k, zero collectives), not k globally
+        return self.view.group_map[name].size
 
     # -- hierarchical lanes: shard-local partials + one psum combine --------
     #
@@ -625,6 +645,12 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         if self.aggregation not in POD_AGGREGATIONS:
             raise ValueError(f"unknown aggregation {self.aggregation!r} "
                              f"(choose from {POD_AGGREGATIONS})")
+        if compression.compression_on(self.spec.compression) and \
+                self.spec.update_impl == "tree":
+            raise ValueError(
+                "pod lossy compression needs the fused flat path "
+                "(update_impl='fused'|'fused_interpret') — the tree "
+                "backend has no shard-local compress kernel")
         if self.state_store is DENSE_STORE:
             object.__setattr__(self, "state_store",
                                ShardedClientStateStore(self.mesh))
@@ -645,15 +671,25 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         # flat bucket dicts on the fused path, param trees otherwise
         template = jax.eval_shape(fops.zeros) if fops is not None else p_specs
         stacked = store.shardings(template, n_clients, self.mesh)
-        if stacked is None:
-            return {}
-        if self.algorithm == "scaffold":
-            c_sh = fops.shardings() if fops is not None else \
-                rules.param_shardings(p_specs, self.mesh, self.layout)
-            return {"c_global": c_sh, "c_clients": stacked}
-        if self.algorithm == "moon":
-            return {"w_prev": stacked}
-        return {}
+        out: Dict = {}
+        if stacked is not None:
+            if self.algorithm == "scaffold":
+                c_sh = fops.shardings() if fops is not None else \
+                    rules.param_shardings(p_specs, self.mesh, self.layout)
+                out = {"c_global": c_sh, "c_clients": stacked}
+            elif self.algorithm == "moon":
+                out = {"w_prev": stacked}
+        comp = self.spec.compression
+        if compression.compression_on(comp) and comp.error_feedback:
+            # error-feedback residual rows: f32 buffers in the carried
+            # flat layout, client axis sharded like every other stack
+            # (lossy compression on the pod implies the fused path)
+            ef_tmpl = jax.eval_shape(functools.partial(fops.zeros,
+                                                       jnp.float32))
+            ef_sh = self._ef_store.shardings(ef_tmpl, n_clients, self.mesh)
+            if ef_sh is not None:
+                out = dict(out, ef_residuals=ef_sh)
+        return out
 
     def build_round(self, task: Task) -> Callable:
         spec = self.spec
@@ -667,6 +703,10 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         G = self._n_pods() if self.aggregation == "hierarchical" else 1
         dp = spec.dp
         dp_clips = dp is not None and dp.clips
+        comp = spec.compression
+        compressed = compression.compression_on(comp)   # implies fused
+        ef = compressed and comp.error_feedback
+        ef_store = self._ef_store if ef else None
 
         def pin(t):
             return jax.lax.with_sharding_constraint(t, p_sh)
@@ -679,6 +719,8 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             cy = y_all[ids]
             w32 = weights.astype(jnp.float32)
             wsum = jnp.sum(w32)
+            ef_rows = (ef_store.gather(algo_state["ef_residuals"], ids)
+                       if ef else ())
 
             if fused:
                 # flat-first: params and the f32 delta accumulator are
@@ -694,6 +736,20 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
 
                 def apply_delta(params_, delta):
                     return fops.apply_delta(params_, delta)
+
+                # compressed uploads ARE deltas: each client compresses
+                # its own f32 (w_end − p [+ residual]) shard-locally —
+                # one lax.top_k + one blocked kernel pass per bucket
+                # under shard_map — and the accumulator sums coeff·c
+                # with the accum-only kernel (no −(Σc)·p term to apply;
+                # the upload already subtracted p)
+                def compress_client(w_end, r_row):
+                    d = {name: w_end[name].astype(jnp.float32) -
+                               params[name].astype(jnp.float32)
+                         for name in w_end}
+                    if ef:
+                        d = {name: d[name] + r_row[name] for name in d}
+                    return fops.compress_delta(d, comp)
             else:
                 def zeros_delta():
                     return jax.tree_util.tree_map(
@@ -811,7 +867,50 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                 # test meshes, tree impl, mismatched n_pods) lanes stay
                 # unsharded and the combine is a local tree-sum
                 lane_psum = fused and G == fops.lane_count()
-                if lane_psum and dp_clips:
+                if compressed:
+                    # per-lane compressed uploads: every lane compresses
+                    # its own client's delta before accumulating, so the
+                    # lane partials are sums of coeff·c (accum-only, no
+                    # −p rewrite needed — uploads already subtracted p)
+                    # and the cross-pod combine is untouched
+                    vcompress = jax.vmap(compress_client)
+                    if lane_psum:
+                        def one_step(delta_g, inp):
+                            k_g, cx_g, cy_g, w_g, row_g, r_g = inp
+                            w_end_g, out_g, loss_g = vclient(k_g, cx_g,
+                                                             cy_g, row_g)
+                            c_g, r_new_g = vcompress(w_end_g, r_g)
+                            return (fops.lane_accum(delta_g, c_g,
+                                                    w_g / wsum),
+                                    (out_g, loss_g, r_new_g))
+
+                        delta_g, (outs, losses, r_outs) = jax.lax.scan(
+                            one_step, fops.lane_zeros(G),
+                            resh((keys, cx, cy, w32, rows, ef_rows)))
+                        delta = fops.lane_combine(delta_g)
+                        delta = jax.lax.with_sharding_constraint(delta,
+                                                                 p_sh)
+                    else:
+                        vadd = jax.vmap(
+                            lambda a, c, w: fops.delta_accum(a, c, None, w))
+                        delta0 = jax.tree_util.tree_map(
+                            lambda d: jnp.zeros((G,) + d.shape, d.dtype),
+                            zeros_delta())
+
+                        def one_step(delta_g, inp):
+                            k_g, cx_g, cy_g, w_g, row_g, r_g = inp
+                            w_end_g, out_g, loss_g = vclient(k_g, cx_g,
+                                                             cy_g, row_g)
+                            c_g, r_new_g = vcompress(w_end_g, r_g)
+                            return (vadd(delta_g, c_g, w_g / wsum),
+                                    (out_g, loss_g, r_new_g))
+
+                        delta_g, (outs, losses, r_outs) = jax.lax.scan(
+                            one_step, delta0,
+                            resh((keys, cx, cy, w32, rows, ef_rows)))
+                        delta = jax.tree_util.tree_map(
+                            lambda d: jnp.sum(d, axis=0), delta_g)
+                elif lane_psum and dp_clips:
                     # clipped coefficients no longer sum to 1, so the
                     # −(Σc)·p term cannot factor out as −p: carry the
                     # running coefficient sum next to the p-free lane
@@ -880,6 +979,20 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                 outs = jax.tree_util.tree_map(
                     lambda a: a.reshape((K,) + a.shape[2:]), outs)
                 losses = losses.reshape(K)
+                if ef:
+                    r_outs = jax.tree_util.tree_map(
+                        lambda a: a.reshape((K,) + a.shape[2:]), r_outs)
+            elif compressed:
+                def one_client(delta, inp):
+                    k, cxi, cyi, w_i, row, r_row = inp
+                    w_end, out, loss = client(k, cxi, cyi, row)
+                    c, r_new = compress_client(w_end, r_row)
+                    return (fops.delta_accum(delta, c, None, w_i / wsum),
+                            (out, loss, r_new))
+
+                delta, (outs, losses, r_outs) = jax.lax.scan(
+                    one_client, zeros_delta(),
+                    (keys, cx, cy, w32, rows, ef_rows))
             else:
                 def one_client(delta, inp):
                     k, cxi, cyi, w_i, row = inp
@@ -909,12 +1022,16 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                     lambda cg, new, old: cg + frac * jnp.mean(new - old,
                                                               axis=0),
                     c, outs, rows)
-                state = {"c_global": c_new,
-                         "c_clients": store.scatter(c_all, ids, outs)}
+                state = dict(algo_state, c_global=c_new,
+                             c_clients=store.scatter(c_all, ids, outs))
             elif algo == "moon":
-                state = {"w_prev": store.scatter(w_prev_all, ids, outs)}
+                state = dict(algo_state,
+                             w_prev=store.scatter(w_prev_all, ids, outs))
             else:
                 state = algo_state
+            if ef:
+                state = dict(state, ef_residuals=ef_store.scatter(
+                    algo_state["ef_residuals"], ids, r_outs))
             return new_params, state, jnp.mean(losses)
 
         return body

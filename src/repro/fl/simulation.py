@@ -26,6 +26,7 @@ from repro.fl.engine import (
     make_eval_fn,
     run_rounds,
 )
+from repro.fl.compression import CompressionSpec, validate_compression
 from repro.fl.local import LocalSpec
 from repro.fl.privacy import DPSpec
 from repro.fl.task import Task
@@ -75,10 +76,16 @@ class FLConfig:
     # and/or the pairwise secure-agg mask simulation
     dp: Optional[DPSpec] = None
     secure_agg: bool = False
+    # compressed P2 uploads (repro.fl.compression): block-quantized +
+    # top-k sparsified client deltas with optional error feedback.
+    # None / the identity spec compile to the exact baseline program.
+    compression: Optional[CompressionSpec] = None
 
     def __post_init__(self):
         from repro.fl.local import validate_update_impl
         validate_update_impl(self.update_impl)
+        validate_compression(self.compression, dp=self.dp,
+                             secure_agg=self.secure_agg)
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -91,7 +98,8 @@ class FLConfig:
             momentum=self.momentum, weight_decay=self.weight_decay,
             variant=variant, mu=self.mu, temperature=self.temperature,
             grad_clip=self.grad_clip, update_impl=self.update_impl,
-            dp=self.dp, secure_agg=self.secure_agg)
+            dp=self.dp, secure_agg=self.secure_agg,
+            compression=self.compression)
 
     def strategy(self) -> AggregateStrategy:
         return AggregateStrategy(

@@ -21,6 +21,13 @@ buffer, f32 compute, cast on store):
                     ``e`` is an optional f32 extra operand folded into
                     the same pass — the round's DP noise / secure-agg
                     mask total rides the aggregation kernel for free.
+  compress_delta  — the compressed-communication form of the client
+                    upload, one pass:
+                      c ← quantize(topk(d));  r ← d − c
+                    magnitude top-k masking at a prefetched threshold τ
+                    plus blockwise symmetric int8/int16 fake
+                    quantization (per 128-lane-block bf16 scales); the
+                    optional residual r is the error-feedback carry.
   dp_clip_noise   — the privacy form of the client upload, one pass:
                       u ← clip_scale·d₃₂ (+ noise_scale·z)
                     clip_scale = min(1, C/‖d‖) clips the client delta to
@@ -173,7 +180,8 @@ def local_step(p: jnp.ndarray, g: jnp.ndarray,
 # weighted delta aggregation (host engine, all clients at once)
 # ---------------------------------------------------------------------------
 
-def _weighted_delta_kernel(w_ref, *refs, K: int, has_extra: bool):
+def _weighted_delta_kernel(w_ref, *refs, K: int, has_extra: bool,
+                           deltas: bool):
     it = iter(refs)
     s_ref, p_ref = next(it), next(it)
     e_ref = next(it) if has_extra else None
@@ -181,13 +189,17 @@ def _weighted_delta_kernel(w_ref, *refs, K: int, has_extra: bool):
     p = p_ref[...].astype(jnp.float32)
     acc = e_ref[...] if has_extra else jnp.zeros_like(p)
     for k in range(K):                      # K is static and small
-        acc = acc + w_ref[k] * (s_ref[k].astype(jnp.float32) - p)
+        if deltas:
+            acc = acc + w_ref[k] * s_ref[k].astype(jnp.float32)
+        else:
+            acc = acc + w_ref[k] * (s_ref[k].astype(jnp.float32) - p)
     o_ref[...] = (p + acc).astype(o_ref.dtype)
 
 
 def weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
                    weights: jnp.ndarray, *,
                    extra: Optional[jnp.ndarray] = None,
+                   deltas: bool = False,
                    block_rows: int = DEFAULT_BLOCK_ROWS,
                    interpret: bool = False) -> jnp.ndarray:
     """FedAvg aggregation: ``p₃₂ + Σₖ w̄ₖ·(stacked[k] − p) (+ extra)``
@@ -196,7 +208,10 @@ def weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
     convex-combination reading; per-client DP clip scales fold into
     them).  ``extra`` is an optional f32 (N,) buffer added inside the
     same pass — the round's aggregated DP noise + secure-agg mask term —
-    so privacy costs zero additional traversals here."""
+    so privacy costs zero additional traversals here.  ``deltas=True``
+    (static) reads ``stacked`` as already-formed client DELTAS
+    ``cₖ = compress(wₖ − p)`` and drops the per-term ``− p``:
+    ``p₃₂ + Σₖ w̄ₖ·cₖ`` — the compressed-communication aggregate."""
     K, n = stacked.shape
     if n == 0:
         return p
@@ -208,7 +223,8 @@ def weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
     if has_extra:
         operands.append(_pad_rows(extra, rows_p))
     outs = pl.pallas_call(
-        functools.partial(_weighted_delta_kernel, K=K, has_extra=has_extra),
+        functools.partial(_weighted_delta_kernel, K=K, has_extra=has_extra,
+                          deltas=deltas),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(n_blocks,),
@@ -220,6 +236,101 @@ def weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
         interpret=interpret,
     )(weights.astype(jnp.float32), *operands)
     return outs.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# compressed-communication client upload: top-k mask + blockwise quantize
+# ---------------------------------------------------------------------------
+
+# blockwise-symmetric quantization constants.  Wire scales are bf16 (the
+# 2-byte-per-128-lane-block format the payload accounting assumes); the
+# f32 scale is nudged UP by SCALE_PAD before the bf16 round-to-nearest
+# so the stored scale is always ≥ amax/qmax — quantized magnitudes then
+# never exceed qmax (no clipping distortion) and the per-element error
+# stays ≤ scale/2 for the WIRE scale.  bf16's 8 mantissa-free relative
+# step is 2⁻⁸; 1 + 2⁻⁶ dominates it with margin.
+QMAX = {8: 127.0, 16: 32767.0}
+SCALE_PAD = 1.0 + 2.0 ** -6
+
+
+def _compress_delta_kernel(sc_ref, *refs, bits: int, topk: bool,
+                           with_residual: bool):
+    it = iter(refs)
+    d_ref = next(it)
+    o_ref = next(it)
+    r_ref = next(it) if with_residual else None
+    d0 = d_ref[...].astype(jnp.float32)
+    d = d0
+    if topk:
+        tau = sc_ref[0]
+        d = jnp.where(jnp.abs(d) >= tau, d, 0.0)
+    if bits != 32:
+        qmax = QMAX[bits]
+        amax = jnp.max(jnp.abs(d), axis=-1, keepdims=True)
+        scale = (amax / qmax) * SCALE_PAD
+        scale = scale.astype(jnp.bfloat16).astype(jnp.float32)
+        q = jnp.where(scale > 0.0, d / jnp.where(scale > 0.0, scale, 1.0),
+                      0.0)
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+        c = q * scale
+    else:
+        c = d
+    o_ref[...] = c.astype(o_ref.dtype)
+    if with_residual:
+        r_ref[...] = (d0 - c).astype(r_ref.dtype)
+
+
+def compress_delta(d: jnp.ndarray, thresh, *, bits: int = 32,
+                   topk: bool = False, with_residual: bool = False,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False):
+    """Fake-quantized compressed form of one client's f32 flat delta —
+    exactly the values a decompressed wire payload would carry, in ONE
+    blocked pass:
+
+      1. ``topk`` (static): magnitude sparsification ``d ← d·[|d| ≥ τ]``
+         with the traced threshold ``τ = thresh`` (the caller's k-th
+         largest |d|; ties at τ are kept, matching the threshold
+         semantics of the NumPy oracle).
+      2. ``bits ∈ {8, 16}`` (static): blockwise symmetric quantization —
+         per 128-lane row, ``scale = bf16((amax/qmax)·(1+2⁻⁶))`` and
+         ``c = round(d/scale)·scale`` (round half-even, clip ±qmax);
+         all-zero rows keep scale 0 and emit zeros.  ``bits=32`` skips
+         quantization statically.
+
+    Returns ``c`` (f32, same length), plus the error-feedback residual
+    ``r = d − c`` (f32) when ``with_residual`` — computed against the
+    ORIGINAL delta, so sparsified-away mass lands in the residual.  Pad
+    lanes are zero in, zero out: zero rows quantize to zero and zero
+    elements always survive the ≥-threshold mask as zeros."""
+    n = d.shape[-1]
+    if bits not in (8, 16, 32):
+        raise ValueError(f"compress_delta bits must be 8|16|32, got {bits}")
+    if n == 0:
+        out = d.astype(jnp.float32)
+        return (out, jnp.zeros_like(out)) if with_residual else out
+    rows_p, n_blocks = _grid_rows(n, block_rows, interpret)
+    br = rows_p // n_blocks
+    blk = pl.BlockSpec((br, LANES), lambda i, sc: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((rows_p, LANES), jnp.float32)]
+    if with_residual:
+        out_shape.append(jax.ShapeDtypeStruct((rows_p, LANES), jnp.float32))
+    outs = pl.pallas_call(
+        functools.partial(_compress_delta_kernel, bits=bits, topk=topk,
+                          with_residual=with_residual),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_blocks,),
+            in_specs=[blk],
+            out_specs=[blk] * len(out_shape),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray(thresh, jnp.float32).reshape(1), _pad_rows(d, rows_p))
+    c = outs[0].reshape(-1)[:n]
+    if with_residual:
+        return c, outs[1].reshape(-1)[:n]
+    return c
 
 
 # ---------------------------------------------------------------------------

@@ -87,17 +87,38 @@ def fused_local_step(p: jnp.ndarray, g: jnp.ndarray,
                           interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("deltas", "block_rows",
+                                             "interpret"))
 def fused_weighted_delta(stacked: jnp.ndarray, p: jnp.ndarray,
                          weights: jnp.ndarray,
                          extra: Optional[jnp.ndarray] = None, *,
-                         block_rows: int = 0,
+                         deltas: bool = False, block_rows: int = 0,
                          interpret: bool = False) -> jnp.ndarray:
     """FedAvg aggregation over a stacked (K, N) flat buffer:
     ``cast(p32 + sum_k w_k * (stacked[k] - p) (+ extra))``.  ``extra``
     is an optional f32 (N,) buffer (aggregated DP noise + secure-agg
-    masks) folded into the same blocked pass."""
+    masks) folded into the same blocked pass.  ``deltas=True`` (static)
+    reads ``stacked`` as already-formed client deltas and drops the
+    per-term ``- p`` (the compressed-communication aggregate)."""
     return _fu.weighted_delta(stacked, p, weights, extra=extra,
+                              deltas=deltas,
+                              block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "topk", "with_residual",
+                                             "block_rows", "interpret"))
+def fused_compress_delta(d: jnp.ndarray, thresh, *, bits: int = 32,
+                         topk: bool = False, with_residual: bool = False,
+                         block_rows: int = 0, interpret: bool = False):
+    """Compressed-communication form of one client's f32 flat delta:
+    magnitude top-k masking at the traced threshold ``thresh`` (static
+    ``topk`` gate) followed by blockwise symmetric int8/int16 fake
+    quantization (per 128-lane-block bf16 scales; ``bits=32`` skips it
+    statically).  Returns ``c``, or ``(c, r)`` with the error-feedback
+    residual ``r = d - c`` when ``with_residual``."""
+    return _fu.compress_delta(d, thresh, bits=bits, topk=topk,
+                              with_residual=with_residual,
                               block_rows=block_rows or _fu.DEFAULT_BLOCK_ROWS,
                               interpret=interpret)
 

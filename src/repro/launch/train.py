@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pipeline import Phase, run_phase_schedule
+from repro.fl.compression import CompressionSpec
 from repro.fl.pod import (
     POD_ALGORITHMS,
     PodCyclicConfig,
@@ -271,11 +272,12 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                     overlap=(overlap == "on"))
     phases = []
     if cyclic_rounds > 0:
-        # privacy applies at the P2 aggregate only — P1 relays the model
-        # client-to-client with no aggregation, so the relay phase runs
-        # with the privacy knobs stripped (RelayStrategy rejects them)
+        # privacy and compression apply at the P2 aggregate only — P1
+        # relays the model client-to-client with no aggregation (clients
+        # need exact params to train on), so the relay phase runs with
+        # those knobs stripped (RelayStrategy rejects them)
         p1_common = dict(common, spec=dataclasses.replace(
-            spec, dp=None, secure_agg=False))
+            spec, dp=None, secure_agg=False, compression=None))
         phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
                                                   seed=seed, **p1_common),
                             eval_fn=eval_fn))
@@ -380,6 +382,19 @@ def main(argv=None) -> int:
     ap.add_argument("--secure-agg", action="store_true",
                     help="simulate pairwise-masked secure aggregation "
                          "(masks cancel in the round sum)")
+    ap.add_argument("--compress-bits", type=int, default=32,
+                    choices=(8, 16, 32),
+                    help="P2 upload quantization: blockwise symmetric "
+                         "int8/int16 fake quantization of each client's "
+                         "delta (32 = no quantization)")
+    ap.add_argument("--compress-density", type=float, default=1.0,
+                    help="P2 upload top-k sparsification: fraction of "
+                         "delta elements kept per bucket, by magnitude "
+                         "(1.0 = keep everything)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry each client's compression residual and "
+                         "add it to the next participating round's delta "
+                         "(needs a lossy --compress-bits/-density combo)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -394,12 +409,16 @@ def main(argv=None) -> int:
         vocab=cfg.vocab_size, beta=0.5, seed=args.seed)
     dp = DPSpec(args.dp_clip, args.dp_sigma) \
         if args.dp_clip is not None else None
+    comp = CompressionSpec(bits=args.compress_bits,
+                           density=args.compress_density,
+                           error_feedback=args.error_feedback)
     spec = PodFLSpec(local_steps=args.local_steps, batch_size=args.batch,
                      lr=args.lr, algorithm=args.algorithm,
                      server_opt=args.server_opt, server_lr=args.server_lr,
                      server_momentum=args.server_momentum,
                      update_impl=args.update_impl, dp=dp,
-                     secure_agg=args.secure_agg)
+                     secure_agg=args.secure_agg,
+                     compression=None if comp.identity else comp)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.rounds,

@@ -61,3 +61,65 @@ def test_mask_bytes_independent_of_model_size():
     big.record_round("fedavg", 8, _params(16_384), secure_agg=True)
     assert small.mask_bytes == big.mask_bytes == acc.secure_agg_mask_bytes(8)
     assert small.p2_bytes < big.p2_bytes
+
+
+# ---------------------------------------------------------------------------
+# capacity recompute + compressed-payload accounting
+# ---------------------------------------------------------------------------
+
+def test_capacity_recomputed_per_record_not_latched():
+    """Regression: the ledger used to latch the first record's model
+    bytes forever — later records with a DIFFERENT capacity (P1 relay vs
+    a resized P2 model, or an explicit override) were mis-billed."""
+    led = CommLedger()
+    led.record_round("fedavg", 1, _params(100))
+    led.record_round("fedavg", 1, _params(300))
+    assert led.p2_bytes == 2 * (100 + 300)      # legs=1, down+up per round
+    # first-seen capacity is REPORTING only, never the billing basis
+    assert led.summary()["model_bytes"] == 100
+
+
+def test_explicit_x_bytes_override_wins_over_params():
+    led = CommLedger()
+    led.record_round("fedavg", 2, _params(64), x_bytes=1000)
+    assert led.p2_bytes == 2 * 2 * 1000
+    led2 = CommLedger()
+    led2.record_cyclic_round(3, _params(64), x_bytes=500)
+    assert led2.p1_bytes == 2 * 3 * 500
+    assert led2.summary()["model_bytes"] == 500
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold"])
+def test_compressed_round_accounting(algo):
+    """payload_bytes splits the legs: downloads still ship full X,
+    uploads ship the compressed payload — ledger == closed form."""
+    x, payload, k, rounds = 4000, 1016, 5, 3
+    led = CommLedger()
+    for _ in range(rounds):
+        led.record_round(algo, k, _params(x), payload_bytes=payload)
+    legs = acc._PER_ROUND_FACTOR[algo] // 2
+    assert led.p2_bytes == rounds * acc.compressed_round_bytes(
+        algo, k, x, payload)
+    assert led.p2_bytes == rounds * k * legs * (x + payload)
+    assert led.p2_upload_bytes == rounds * k * legs * payload
+    assert led.p2_upload_full_bytes == rounds * k * legs * x
+    s = led.summary()
+    assert s["payload_ratio"] == x / payload
+    assert s["p2_upload_bytes"] == led.p2_upload_bytes
+
+
+def test_payload_ratio_is_one_without_compression():
+    led = CommLedger()
+    led.record_round("fedavg", 4, _params(256))
+    assert led.payload_ratio == 1.0
+    empty = CommLedger()
+    assert empty.payload_ratio == 1.0
+
+
+def test_mixed_compressed_and_full_rounds_blend_the_ratio():
+    led = CommLedger()
+    led.record_round("fedavg", 1, _params(1000))                    # full
+    led.record_round("fedavg", 1, _params(1000), payload_bytes=250)
+    assert led.p2_upload_bytes == 1000 + 250
+    assert led.p2_upload_full_bytes == 2000
+    assert led.payload_ratio == 2000 / 1250
