@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store bench-pipeline bench-compress
+.PHONY: test test-fast verify docs-check bench-quick bench-engine bench-pod bench-fused bench-store bench-pipeline bench-compress bench-peft
 
 test:            ## tier-1 suite (ROADMAP verify command)
 	$(PY) -m pytest -x -q
@@ -35,3 +35,6 @@ bench-pipeline:  ## overlapped round pipeline vs synchronous (sparse store)
 
 bench-compress:  ## compressed client uploads vs baseline (wire + throughput)
 	$(PY) -m benchmarks.perf_compression
+
+bench-peft:      ## trainable-slice (LoRA) rounds vs full fine-tune
+	$(PY) -m benchmarks.perf_peft

@@ -88,23 +88,28 @@ def cyclic_cfg(scale: Scale, seed=0, rounds: Optional[int] = None) -> CyclicConf
 
 
 def fl_cfg(scale: Scale, algorithm: str, seed=0,
-           rounds: Optional[int] = None, compression=None) -> FLConfig:
+           rounds: Optional[int] = None, compression=None,
+           peft=None, trainable_filter=None) -> FLConfig:
+    # the trainable-slice partition lives on the fused flat path only
+    impl = "fused" if (peft or trainable_filter) else "tree"
     return FLConfig(
         algorithm=algorithm,
         rounds=rounds if rounds is not None else scale.p2_rounds,
         participation=scale.p2_participation,
         local_steps=scale.p2_local_steps, eval_every=scale.eval_every,
-        seed=seed, compression=compression)
+        seed=seed, compression=compression, update_impl=impl,
+        peft=peft, trainable_filter=trainable_filter)
 
 
 def run_method(task, data, scale: Scale, *, algorithm: str, cyclic: bool,
                seed=0, p1_rounds: Optional[int] = None,
                p2_rounds: Optional[int] = None, compression=None,
-               verbose=False):
+               peft=None, trainable_filter=None, verbose=False):
     """One (method × setting) cell.  Baselines get the FULL round budget
     (P1+P2) in P2, matching the paper's equal-total-rounds protocol.
-    ``compression`` applies to the P2 uploads only (P1 relays the model
-    itself, which must stay exact — see repro.fl.compression)."""
+    ``compression``/``peft``/``trainable_filter`` apply to the P2
+    uploads only (P1 relays the model itself, which must stay exact —
+    see repro.fl.compression / repro.fl.local)."""
     p1 = (p1_rounds if p1_rounds is not None else scale.p1_rounds) if cyclic else 0
     p2 = p2_rounds if p2_rounds is not None else scale.p2_rounds
     total = (scale.p1_rounds if p1_rounds is None else p1_rounds) + \
@@ -115,7 +120,8 @@ def run_method(task, data, scale: Scale, *, algorithm: str, cyclic: bool,
         task, data,
         cyclic_cfg(scale, seed=seed, rounds=p1) if cyclic else None,
         fl_cfg(scale, algorithm, seed=seed, rounds=p2,
-               compression=compression),
+               compression=compression, peft=peft,
+               trainable_filter=trainable_filter),
         verbose=verbose)
     return res
 

@@ -16,9 +16,9 @@ import time
 
 from benchmarks import (
     fig5_switch_point, fig7_landscape, perf_client_store, perf_compression,
-    perf_fused_update, perf_pipeline, perf_pod_round, perf_round_engine,
-    roofline_report, table1_accuracy, table2_compat, table3_convergence,
-    table4_comm,
+    perf_fused_update, perf_peft, perf_pipeline, perf_pod_round,
+    perf_round_engine, roofline_report, table1_accuracy, table2_compat,
+    table3_convergence, table4_comm,
 )
 
 BENCHES = {
@@ -28,6 +28,7 @@ BENCHES = {
     "perf_store": lambda scale: perf_client_store.main(["--scale", scale]),
     "perf_pipeline": lambda scale: perf_pipeline.main(["--scale", scale]),
     "perf_compress": lambda scale: perf_compression.main(["--scale", scale]),
+    "perf_peft": lambda scale: perf_peft.main(["--scale", scale]),
     "table1": lambda scale: table1_accuracy.main(["--scale", scale,
                                                   "--betas", "0.1,0.5"]),
     "table2": lambda scale: table2_compat.main(["--scale", scale]),

@@ -13,6 +13,16 @@ so the compressed rows check
     w/ cyclic  : 2·K_P1·T_cyc·X + T_res·compressed_round_bytes(...)
 (P1 relays the model itself and is never compressed).
 
+Trainable-slice (PEFT) P2 rounds change the upload the same way: the
+download legs still ship the full model X but each client uploads its
+trainable slice only, so the per-round cost is
+``K_P2·legs·(X + payload_peft)`` with ``payload_peft`` the dtype-aware
+byte count of the trainable leaves — and a lossy spec on top compresses
+THAT slice, so the two ratios compose multiplicatively.  The PEFT rows
+recompute the payload independently (trainable_mask over the abstract
+param tree, not the engine's FlatView) and assert the measured ledger
+equals the closed form exactly.
+
 We run a short pipeline per (algorithm × cyclic × compression) under a
 byte ledger and assert the measured totals equal the closed forms
 EXACTLY (this is an accounting identity, not a statistical claim — a
@@ -22,15 +32,43 @@ from __future__ import annotations
 
 import argparse
 
+import jax
+import numpy as np
+
 from benchmarks import common as C
 from repro.core import comm_accounting as acc
 from repro.fl import compression as comp
 from repro.fl.compression import CompressionSpec
 from repro.fl.local import host_flat_ops
+from repro.sharding import rules
 
 # the compressed column's wire spec: int8 blocks + 25% top-k, the
 # highest-leverage point of the sweep (BENCHMARKS.md 'Compression')
 COMPRESSED = CompressionSpec(bits=8, density=0.25, error_feedback=True)
+
+# head-only fine-tune of the vision model: a verbatim path regex
+# (resolve_trainable_filter passes unregistered names through) keeping
+# only the classifier head f3 trainable — the vision-scale stand-in for
+# a LoRA slice (the LLM LoRA ratio gates in benchmarks/perf_peft.py)
+PEFT_FILTER = r"(^|/)f3/(w|b)$"
+
+
+def _peft_payload_bytes(task, filter_spec, spec=None) -> int:
+    """Closed-form upload payload of one client's trainable slice,
+    computed from the abstract param tree — independent of the engine's
+    FlatView bookkeeping it is checked against."""
+    p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
+    mask = rules.trainable_mask(p_specs, filter_spec)
+    leaves = jax.tree_util.tree_leaves(p_specs)
+    trainable = [l for l, m in zip(leaves, mask) if m]
+    if comp.compression_on(spec):
+        sizes = {}
+        for l in trainable:
+            sizes[np.dtype(l.dtype).name] = \
+                sizes.get(np.dtype(l.dtype).name, 0) + int(np.prod(l.shape))
+        return comp.payload_bytes(spec, tuple(sizes.values()))
+    return int(sum(np.dtype(l.dtype).itemsize * np.prod(l.shape)
+                   for l in trainable))
 
 
 def run(scale: C.Scale, seed: int = 0):
@@ -82,6 +120,36 @@ def run(scale: C.Scale, seed: int = 0):
                       f"measured={led['total_bytes']:.3e} "
                       f"closed={closed:.3e} "
                       f"match={rows[-1]['match']}", flush=True)
+    # trainable-slice (PEFT) column: head-only uploads, alone and
+    # composed with the lossy wire spec — the compression ratio applies
+    # to the SLICE, so the two reductions multiply
+    for algo in ("fedavg", "scaffold"):
+        for cyclic in (False, True):
+            for spec in (None, COMPRESSED):
+                res = C.run_method(task, data, scale, algorithm=algo,
+                                   cyclic=cyclic, seed=seed,
+                                   compression=spec,
+                                   trainable_filter=PEFT_FILTER)
+                led = res.ledger.summary()
+                x = led["model_bytes"]
+                p_bytes = _peft_payload_bytes(task, PEFT_FILTER, spec)
+                p2_rounds = t_res if cyclic else t_tot
+                closed = (2 * k_p1 * t_cyc * x if cyclic else 0) + \
+                    p2_rounds * acc.compressed_round_bytes(
+                        algo, k_p2, x, p_bytes)
+                rows.append({
+                    "algorithm": algo, "cyclic": cyclic,
+                    "compressed": spec is not None, "peft": True,
+                    "measured_bytes": led["total_bytes"],
+                    "closed_form_bytes": closed,
+                    "payload_ratio": round(led["payload_ratio"], 4),
+                    "match": led["total_bytes"] == closed,
+                })
+                print(f"[table4] {algo:9s} cyclic={cyclic} "
+                      f"compressed={spec is not None} peft=True "
+                      f"measured={led['total_bytes']:.3e} "
+                      f"closed={closed:.3e} "
+                      f"match={rows[-1]['match']}", flush=True)
     return rows
 
 
@@ -92,7 +160,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     scale = C.SCALES[args.scale]
     rows = run(scale, seed=args.seed)
-    print(C.fmt_table(rows, ["algorithm", "cyclic", "compressed",
+    for r in rows:
+        r.setdefault("peft", False)
+    print(C.fmt_table(rows, ["algorithm", "cyclic", "compressed", "peft",
                              "measured_bytes", "closed_form_bytes",
                              "payload_ratio", "match"]))
     C.save_result(f"table4_{args.scale}", {"rows": rows})

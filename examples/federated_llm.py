@@ -6,21 +6,33 @@ The model is a width/depth-reduced TinyLlama-family config scaled to
 ~100M parameters; data is the synthetic federated token stream
 (Dirichlet topic mixture over clients → natural non-IID).
 
-    PYTHONPATH=src python examples/federated_llm.py            # ~100M, slow on CPU
+The DEFAULT run is parameter-efficient: ``--peft lora:8`` builds the
+model with rank-8 LoRA adapters and P2 trains ONLY them — frozen
+leaves never enter the kernels, the donated round carry or the upload
+(repro.fl.local / repro.utils.flatten), so the client "upload" is the
+adapter slice (~1% of the model here).  ``--peft none`` asks for full
+fine-tuning, which this example refuses with a clear message when the
+estimated round working set does not fit in host memory.
+
+    PYTHONPATH=src python examples/federated_llm.py            # ~100M LoRA smoke
     PYTHONPATH=src python examples/federated_llm.py --tiny     # seconds-scale
+    PYTHONPATH=src python examples/federated_llm.py --peft none --fl-rounds 3
 """
 import argparse
 import dataclasses
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, get_reduced
+from repro.configs import get_config, get_reduced, with_peft
+from repro.configs.common import param_count
 from repro.data.synthetic import make_synthetic_tokenlm
 from repro.launch.train import PodFLSpec, run_pod_training
-from repro.models.transformer import lm_forward
-from repro.configs.common import param_count
+from repro.models.transformer import init_lm, lm_forward
+from repro.sharding import rules
 
 
 def model_100m():
@@ -32,20 +44,61 @@ def model_100m():
         dtype=jnp.float32, param_dtype=jnp.float32, remat=False)
 
 
+def host_memory_bytes() -> int:
+    try:
+        return os.sysconf("SC_PAGE_SIZE") * os.sysconf("SC_PHYS_PAGES")
+    except (ValueError, OSError):
+        return 1 << 34                          # unknown platform: assume 16 GiB
+
+
+def check_fits(cfg, peft) -> None:
+    """Refuse a full fine-tune that will not fit.  The P2 round program
+    holds the params, the donated next-params, the f32 delta accumulator
+    and one client's gradients/activations live at once — ~6× the param
+    bytes is the honest floor.  With a trainable filter only the slice
+    pays that multiplier; the frozen constant is held once."""
+    n_params = param_count(cfg)
+    if peft is not None:
+        return
+    need = 6 * n_params * 4
+    have = host_memory_bytes()
+    if need > 0.8 * have:
+        sys.exit(
+            f"[llm] full fine-tune of {cfg.name} needs ~{need / 1e9:.1f} GB "
+            f"of round working set (~6x {n_params / 1e6:.0f}M f32 params) "
+            f"but this host has {have / 1e9:.1f} GB — run the default "
+            f"--peft lora:8 (trains the adapter slice only) or --tiny")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
                     help="reduced config (CI-friendly)")
-    ap.add_argument("--cyclic-rounds", type=int, default=2)
-    ap.add_argument("--fl-rounds", type=int, default=3)
-    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--peft", default="lora:8", metavar="lora:<r>|none",
+                    help="P2 trainable slice: rank-r LoRA adapters "
+                         "(default lora:8) or 'none' for full fine-tuning")
+    ap.add_argument("--cyclic-rounds", type=int, default=1)
+    ap.add_argument("--fl-rounds", type=int, default=1)
+    ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_reduced("tinyllama-1.1b") if args.tiny else model_100m()
+    peft = None if args.peft in ("none", "") else args.peft
+    cfg = with_peft(get_reduced("tinyllama-1.1b") if args.tiny
+                    else model_100m(), peft)
+    check_fits(cfg, peft)
     n_params = param_count(cfg)
-    print(f"[llm] {cfg.name}: {n_params / 1e6:.1f}M params")
+    msg = f"[llm] {cfg.name}: {n_params / 1e6:.1f}M params"
+    if peft is not None:
+        p_specs = jax.eval_shape(lambda k: init_lm(k, cfg),
+                                 jax.random.PRNGKey(0))
+        mask = rules.trainable_mask(p_specs, "lora")
+        leaves = jax.tree_util.tree_leaves(p_specs)
+        n_train = sum(int(l.size) for l, m in zip(leaves, mask) if m)
+        msg += (f", {n_train / 1e6:.2f}M trainable ({peft}) — "
+                f"{n_params / n_train:.0f}x smaller uploads")
+    print(msg)
 
     data = make_synthetic_tokenlm(
         n_clients=16, seq_len=args.seq, n_seq_per_client=32,
@@ -68,7 +121,11 @@ def main():
         per_tok = (logz - gold) * valid
         return per_tok.sum(axis=-1) / jnp.maximum(valid.sum(axis=-1), 1.0)
 
-    spec = PodFLSpec(local_steps=args.local_steps, lr=0.03)
+    # peft rides the fused flat path (validate_peft enforces it); the
+    # P1 relay still hops the full model — run_pod_training strips the
+    # trainable filter for that phase
+    spec = PodFLSpec(local_steps=args.local_steps, lr=0.03,
+                     update_impl="fused" if peft else "tree", peft=peft)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.fl_rounds,
@@ -78,7 +135,7 @@ def main():
           f"{[round(h['eval'], 4) for h in res.history]}")
     first, last = res.history[0]["eval"], res.history[-1]["eval"]
     print(f"[llm] eval loss {first:.4f} -> {last:.4f} "
-          f"({time.time() - t0:.0f}s)  improved={last < first}")
+          f"({time.time() - t0:.0f}s)")
 
 
 if __name__ == "__main__":

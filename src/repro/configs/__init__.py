@@ -19,6 +19,7 @@ from repro.configs.common import (
     get_config,
     get_reduced,
     list_archs,
+    with_peft,
 )
 
 # import for registration side effects

@@ -67,6 +67,19 @@ def list_archs():
     return ARCHS.names()
 
 
+def with_peft(cfg: TransformerConfig, peft: Optional[str]) -> TransformerConfig:
+    """Apply a PEFT spec to an arch config: ``"lora:<r>"`` builds the
+    model with rank-``r`` adapters on every attention/MLP projection
+    (repro.models.layers.init_lora_linear) so the trainable filter in
+    repro.sharding.rules has leaves to match.  ``None`` is the identity."""
+    if peft is None:
+        return cfg
+    from repro.fl.local import parse_peft
+    kind, rank = parse_peft(peft)
+    assert kind == "lora"           # parse_peft rejects everything else
+    return dataclasses.replace(cfg, lora_rank=rank)
+
+
 def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 

@@ -143,6 +143,7 @@ from repro.fl import compression, privacy
 from repro.fl.local import (
     FlatParamOps,
     LocalSpec,
+    effective_trainable_filter,
     host_flat_ops,
     make_local_fn,
 )
@@ -201,13 +202,23 @@ def _logical_model_bytes(task: Task) -> int:
 
 
 @functools.lru_cache(maxsize=64)
-def _upload_payload_bytes(task: Task, comp) -> int:
-    """Closed-form wire bytes of ONE compressed client upload over the
-    task's logical flat bucket sizes (the accounting wire model on both
-    backends — the pod's per-shard split carries the same logical
-    elements)."""
-    view = host_flat_ops(task, True).view
-    return compression.payload_bytes(comp, tuple(view.buffer_sizes.values()))
+def _upload_payload_bytes(task: Task, comp,
+                          filter_spec: Optional[str] = None) -> int:
+    """Closed-form wire bytes of ONE client upload over the task's
+    logical TRAINABLE flat bucket sizes (the accounting wire model on
+    both backends — the pod's per-shard split carries the same logical
+    elements).  With a trainable filter the sizes are the trainable
+    slice only — frozen leaves never hit the wire — so the PEFT ratio
+    composes multiplicatively with the compression ratio.  Uncompressed
+    uploads count dtype-aware logical bytes (the bucket name IS the
+    dtype), matching :func:`_logical_model_bytes` for ``filter=None``.
+    """
+    view = host_flat_ops(task, True, filter_spec).view
+    if compression.compression_on(comp):
+        return compression.payload_bytes(
+            comp, tuple(view.buffer_sizes.values()))
+    return int(sum(np.dtype(name).itemsize * size
+                   for name, size in view.buffer_sizes.items()))
 
 
 def unpack_server_state(fops: FlatParamOps, state: Any) -> Any:
@@ -624,7 +635,8 @@ class HostBackend:
         pod backend overrides it with mesh-sharded buffers."""
         if self.spec.update_impl == "tree":
             return None
-        return host_flat_ops(task, ops.fused_interpret(self.spec.update_impl))
+        return host_flat_ops(task, ops.fused_interpret(self.spec.update_impl),
+                             effective_trainable_filter(self.spec))
 
     def prepare_data(self, data: FederatedDataset):
         return data.device_arrays()
@@ -688,6 +700,14 @@ class RelayStrategy(HostBackend):
             raise ValueError("RelayStrategy (P1) relays the model itself; "
                              "lossy compression applies to P2 round "
                              "deltas only")
+        # ... and the relay hops the FULL model client → client — a
+        # trainable-slice filter would freeze most of what P1 exists to
+        # pre-train, so it is a config error here (the pod launcher
+        # strips it for P1 like dp/compression)
+        if self.spec.peft is not None or self.spec.trainable_filter is not None:
+            raise ValueError("RelayStrategy (P1) relays the full model; "
+                             "peft/trainable_filter applies to P2 rounds "
+                             "only")
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -704,7 +724,8 @@ class RelayStrategy(HostBackend):
         # buffer dicts on the fused path
         local = make_local_fn(task, self.spec, self.flat_ops(task))
 
-        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state,
+                 frozen=None):
             del weights  # relay has no aggregation, hence no weighting
             cx = x_all[ids]                       # (K, n, ...)
             cy = y_all[ids]
@@ -712,7 +733,7 @@ class RelayStrategy(HostBackend):
 
             def relay(w, inp):
                 k, cxi, cyi = inp
-                w_next, aux = local(k, w, {}, cxi, cyi, lr_scale)
+                w_next, aux = local(k, w, {}, cxi, cyi, lr_scale, frozen)
                 return w_next, aux["loss"]
 
             params, losses = jax.lax.scan(relay, params, (keys, cx, cy))
@@ -965,7 +986,7 @@ class AggregateStrategy(HostBackend):
             else:
                 aggregate = stateless(
                     lambda rk, ids, p, wl, w: tm.stacked_weighted_mean(wl, w))
-            unpack = stacked_unpack = lambda t: t                         # noqa: E731
+            unpack = stacked_unpack = lambda t, fz=None: t                # noqa: E731
         else:
             # the vmapped flat local outputs ARE the stacked (K, N)
             # buffers — aggregation consumes them with zero packing
@@ -982,7 +1003,8 @@ class AggregateStrategy(HostBackend):
             unpack = fops.unflatten
             stacked_unpack = fops.stacked_unflatten
 
-        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state,
+                 frozen=None):
             K = ids.shape[0]
             keys = jax.random.split(key, K)
             cx = x_all[ids]
@@ -991,12 +1013,12 @@ class AggregateStrategy(HostBackend):
             if algo in ("fedavg", "fedprox"):
                 # extras are TREES (they feed the loss at the forward
                 # boundary) — materialized from the flat carry if needed
-                extras = {"w_global": unpack(params)} \
+                extras = {"w_global": unpack(params, frozen)} \
                     if algo == "fedprox" else {}
                 in_ext = jax.tree_util.tree_map(lambda _: None, extras)
                 w_locals, aux = jax.vmap(
-                    local, in_axes=(0, None, in_ext, 0, 0, None))(
-                    keys, params, extras, cx, cy, lr_scale)
+                    local, in_axes=(0, None, in_ext, 0, 0, None, None))(
+                    keys, params, extras, cx, cy, lr_scale, frozen)
                 new_params, algo_state = aggregate(key, ids, params,
                                                    w_locals, weights,
                                                    algo_state)
@@ -1017,9 +1039,9 @@ class AggregateStrategy(HostBackend):
                         lambda g, l: g[None] - l, c, c_i)
                     w_locals, aux = jax.vmap(
                         local, in_axes=(0, None, {"c_diff_flat": 0}, 0, 0,
-                                        None))(
+                                        None, None))(
                         keys, params, {"c_diff_flat": c_diff}, cx, cy,
-                        lr_scale)
+                        lr_scale, frozen)
                     c_i_new = jax.tree_util.tree_map(
                         lambda ci, cg, p, wl: ci - cg[None] +
                         (p[None] - wl) / denom,
@@ -1031,8 +1053,9 @@ class AggregateStrategy(HostBackend):
                         c, c_i)
                     extras = {"c_diff": c_diff}
                     w_locals, aux = jax.vmap(
-                        local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None))(
-                        keys, params, extras, cx, cy, lr_scale)
+                        local, in_axes=(0, None, {"c_diff": 0}, 0, 0, None,
+                                        None))(
+                        keys, params, extras, cx, cy, lr_scale, frozen)
                     c_i_new = jax.tree_util.tree_map(
                         lambda ci, cg, w, wl: ci - cg[None] +
                         (w[None] - wl) / denom,
@@ -1056,12 +1079,14 @@ class AggregateStrategy(HostBackend):
                 # flat path: rows gather/scatter as raw (K, N) buffers —
                 # ONE stacked unflatten at the loss boundary (extras are
                 # trees), zero per-client packing on the way back
-                w_prev = stacked_unpack(store.gather(w_prev_all, ids))
-                extras = {"w_global": unpack(params), "w_prev": w_prev}
+                w_prev = stacked_unpack(store.gather(w_prev_all, ids), frozen)
+                extras = {"w_global": unpack(params, frozen),
+                          "w_prev": w_prev}
                 w_locals, aux = jax.vmap(
                     local,
-                    in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0, None))(
-                    keys, params, extras, cx, cy, lr_scale)
+                    in_axes=(0, None, {"w_global": None, "w_prev": 0}, 0, 0,
+                             None, None))(
+                    keys, params, extras, cx, cy, lr_scale, frozen)
                 new_params, algo_state = aggregate(key, ids, params,
                                                    w_locals, weights,
                                                    algo_state)
@@ -1075,9 +1100,14 @@ class AggregateStrategy(HostBackend):
 
     def record(self, ledger, k: int, params: Pytree, task=None) -> None:
         comp = self.spec.compression
+        filt = effective_trainable_filter(self.spec)
         x = _logical_model_bytes(task) if task is not None else None
-        payload = (_upload_payload_bytes(task, comp)
-                   if task is not None and compression.compression_on(comp)
+        # the upload payload departs from the full model X whenever the
+        # wire carries less: compressed deltas, a trainable slice, or
+        # both (the ratios compose multiplicatively in the closed form)
+        payload = (_upload_payload_bytes(task, comp, filt)
+                   if task is not None and
+                   (compression.compression_on(comp) or filt is not None)
                    else None)
         ledger.record_round(self.algorithm, k, params,
                             secure_agg=self.spec.secure_agg,
@@ -1225,8 +1255,14 @@ def make_chunk_fn(task: Task, strategy, schedule: RoundSchedule,
 
     signature: chunk_fn(key, params, algo_state, server_state,
                         x_all, y_all, n_real, ids, lr_scales, eval_mask,
-                        ev_x, ev_y, ev_w)
+                        ev_x, ev_y, ev_w, frozen)
                -> (key, params, algo_state, server_state, losses, metrics)
+
+    ``frozen`` is the read-only frozen-leaf constant bucket of a
+    trainable-filtered run ({} for full-filter) — NOT donated, NOT in
+    the scan carry: the same buffers serve every round of every chunk
+    and merge with the trainable carry only at the loss / eval tree
+    boundaries.
     The per-round keys are derived INSIDE the scan by the same
     ``key, rk = jax.random.split(key)`` recurrence the seed drivers ran
     on the host (threefry is deterministic, so the streams are
@@ -1263,12 +1299,13 @@ def _cached_chunk_fn(task: Task, strategy, sampling: str,
     K = strategy.n_selected(n_clients)
 
     def chunk(key, params, algo_state, server_state, x_all, y_all, n_real,
-              ids, lr_scales, eval_mask, ev_x, ev_y, ev_w):
+              ids, lr_scales, eval_mask, ev_x, ev_y, ev_w, frozen):
         def evaluate(params):
             # the eval metric speaks param trees — the flat carry
             # materializes one here, at the model's forward boundary
+            # (merging the frozen constant bucket on filtered views)
             if fops is not None:
-                params = fops.unflatten(params)
+                params = fops.unflatten(params, frozen)
 
             # weighted mean over the batched test stream; ev_w zeroes
             # the wrap-around pad in the tail batch
@@ -1289,7 +1326,8 @@ def _cached_chunk_fn(task: Task, strategy, sampling: str,
                 ids_r = jax.random.permutation(k_sel, n_clients)[:K]
             weights = n_real[ids_r].astype(jnp.float32)
             new_params, algo_state, loss = body(
-                rk, params, x_all, y_all, ids_r, weights, lr_scale, algo_state)
+                rk, params, x_all, y_all, ids_r, weights, lr_scale, algo_state,
+                frozen)
             if server is not None:
                 new_params, server_state = server[1](params, new_params,
                                                      server_state)
@@ -1358,13 +1396,18 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
     # donated carries never eat the caller's tree and the per-leaf
     # placement would be dead work.
     fops = strategy.flat_ops(task)
+    frozen: Dict[str, jnp.ndarray] = {}
     if fops is None:
         # backend hook: copy (host) or device_put with shardings (pod) so
         # the donated carries never invalidate the caller's init_params
         params = strategy.place_params(params)
     else:
         # pack + place FIRST: init_state sees the engine's working
-        # representation, so per-client state initializes flat too
+        # representation, so per-client state initializes flat too.
+        # Frozen leaves pack ONCE per phase into the read-only constant
+        # bucket ({} for an unfiltered view): non-donated, outside the
+        # chunk carry, merged back only at tree boundaries.
+        frozen = fops.place_frozen(fops.flatten_frozen(params))
         params = fops.place(fops.flatten(params))
 
     n_clients = data.n_clients
@@ -1477,7 +1520,8 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
         algo_state = strategy.commit_chunk_state(algo_state, plan.staged)
         key, params, algo_state, server_state, losses, metrics = chunk_fn(
             key, params, algo_state, server_state, x_all, y_all, n_real,
-            plan.ids, plan.lr_scales, plan.eval_mask, ev_x, ev_y, ev_w)
+            plan.ids, plan.lr_scales, plan.eval_mask, ev_x, ev_y, ev_w,
+            frozen)
         dispatches += 1
         timing["dispatch_enqueue_ms"] += (time.perf_counter() - t0) * 1e3
 
@@ -1522,7 +1566,7 @@ def run_rounds(task: Task, data: FederatedDataset, strategy,
         - spill_ms0
 
     if fops is not None:                # EngineResult speaks trees
-        params = fops.unflatten(params)
+        params = fops.unflatten(params, frozen)
         server_state = unpack_server_state(fops, server_state)
         # algo_state stays in the carried representation (flat row
         # buffers / sparse store tables) — materializing an

@@ -71,6 +71,52 @@ def validate_update_impl(update_impl: str) -> str:
     return update_impl
 
 
+def parse_peft(peft: str) -> Tuple[str, int]:
+    """``"lora:<r>"`` → ``("lora", r)``, rejecting malformed specs the
+    way :func:`validate_update_impl` rejects impls."""
+    kind, sep, rank_s = peft.partition(":")
+    if not sep or kind != "lora":
+        raise ValueError(f"unknown peft spec {peft!r} "
+                         f"(expected 'lora:<rank>')")
+    try:
+        rank = int(rank_s)
+    except ValueError:
+        raise ValueError(f"lora rank must be a positive integer, "
+                         f"got {rank_s!r}") from None
+    if rank <= 0:
+        raise ValueError(f"lora rank must be a positive integer, got {rank}")
+    return kind, rank
+
+
+def validate_peft(peft: Optional[str], *,
+                  trainable_filter: Optional[str] = None,
+                  update_impl: str = "tree") -> Optional[str]:
+    """Construction-time checks for the trainable-slice knobs: the peft
+    spec must parse, and either knob requires the fused flat path —
+    the tree backend has no trainable/frozen partition."""
+    if peft is not None:
+        parse_peft(peft)
+    if (peft is not None or trainable_filter is not None) \
+            and update_impl == "tree":
+        raise ValueError(
+            "peft/trainable_filter needs the fused flat path "
+            "(update_impl='fused'|'fused_interpret') — the tree backend "
+            "has no trainable-slice partition")
+    return peft
+
+
+def effective_trainable_filter(spec: "LocalSpec") -> Optional[str]:
+    """The filter spec the round program runs under: an explicit
+    ``trainable_filter`` wins; otherwise ``peft`` implies the named
+    ``"lora"`` filter; ``None`` = every leaf trains (the full-filter
+    oracle path, bitwise identical to the pre-filter program)."""
+    if spec.trainable_filter is not None:
+        return spec.trainable_filter
+    if spec.peft is not None:
+        return "lora"
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class LocalSpec:
     """Static description of one client's local-training run."""
@@ -95,11 +141,25 @@ class LocalSpec:
     # applies at AGGREGATION only; None and the identity spec keep the
     # exact baseline program.
     compression: Optional[CompressionSpec] = None
+    # trainable-slice / PEFT (ISSUE 10): peft="lora:<r>" declares the
+    # model carries LoRA adapters of rank r (the model config must be
+    # built with the matching ``lora_rank`` — see parse_peft) and
+    # implies the "lora" trainable filter; trainable_filter names a
+    # filter from repro.sharding.rules.TRAINABLE_FILTERS (or is a raw
+    # path regex) selecting WHICH leaves train.  Either knob makes the
+    # entire fused round program — grads, clip, step tail, aggregation,
+    # server moments, the chunk carry, upload bytes — operate on the
+    # trainable buckets only; frozen leaves ride outside the carry as a
+    # read-only constant.  None/None is the full-filter oracle.
+    peft: Optional[str] = None
+    trainable_filter: Optional[str] = None
 
     def __post_init__(self):
         validate_update_impl(self.update_impl)
         validate_compression(self.compression, dp=self.dp,
                              secure_agg=self.secure_agg)
+        validate_peft(self.peft, trainable_filter=self.trainable_filter,
+                      update_impl=self.update_impl)
 
 
 def _moon_contrastive(z: jnp.ndarray, z_glob: jnp.ndarray, z_prev: jnp.ndarray,
@@ -144,8 +204,13 @@ class FlatParamOps:
     def flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
         return self.view.flatten(tree)
 
-    def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
-        return self.view.unflatten(bufs)
+    def unflatten(self, bufs: Dict[str, jnp.ndarray],
+                  frozen: Optional[Dict[str, jnp.ndarray]] = None) -> Pytree:
+        """Rebuild the tree from trainable buffers, merging ``frozen``
+        (the read-only constant bucket dict) for filtered views; absent
+        frozen buckets zero-fill — the right semantics for trees whose
+        frozen slots are definitionally zero (server moments, deltas)."""
+        return self.view.unflatten(bufs, frozen)
 
     @staticmethod
     def _pad_len(n: int) -> int:
@@ -204,8 +269,35 @@ class FlatParamOps:
     def stacked_flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
         return self.view.flatten_stacked(tree)
 
-    def stacked_unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
-        return self.view.unflatten_stacked(bufs)
+    def stacked_unflatten(self, bufs: Dict[str, jnp.ndarray],
+                          frozen: Optional[Dict[str, jnp.ndarray]] = None
+                          ) -> Pytree:
+        """Stacked twin of :meth:`unflatten` — ``frozen`` rows (no K
+        axis) broadcast over the stack."""
+        return self.view.unflatten_stacked(bufs, frozen)
+
+    # -- frozen bucket (filtered views; all no-ops when filter=None) --------
+
+    def flatten_frozen(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        """Pack the FROZEN leaves — once per phase, never re-packed
+        inside the round program.  Empty dict for an unfiltered view."""
+        return self.view.flatten_frozen(tree)
+
+    def frozen_zeros(self) -> Dict[str, jnp.ndarray]:
+        return self.view.frozen_zeros()
+
+    def place_frozen(self, bufs: Dict[str, jnp.ndarray]
+                     ) -> Dict[str, jnp.ndarray]:
+        """Commit the frozen constant bucket to its home placement.  NOT
+        padded — frozen buffers never enter the kernels (unflatten reads
+        the logical prefix only) — and NEVER donated: the same arrays
+        are closed over by every chunk of a phase.  Host: plain copy;
+        pod: device_put with the frozen-group shardings."""
+        return jax.tree_util.tree_map(jnp.array, bufs)
+
+    def frozen_shardings(self):
+        """Placement of the frozen constant bucket (host: None)."""
+        return None
 
     # -- kernel execution ---------------------------------------------------
 
@@ -387,11 +479,19 @@ class FlatParamOps:
 
 
 @functools.lru_cache(maxsize=64)
-def host_flat_ops(task: Task, interpret: bool) -> FlatParamOps:
+def host_flat_ops(task: Task, interpret: bool,
+                  filter_spec: Optional[str] = None) -> FlatParamOps:
     """The host backend's FlatParamOps for one task (cached — Task is a
-    frozen dataclass)."""
+    frozen dataclass).  ``filter_spec`` (a TRAINABLE_FILTERS name or a
+    path regex) partitions the view into trainable/frozen buckets;
+    None keeps the historical all-trainable view bitwise."""
     p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
-    return FlatParamOps(view=FlatView.of(p_specs), interpret=interpret)
+    filt = None
+    if filter_spec is not None:
+        from repro.sharding import rules  # local import: rules ← flatten only
+        filt = rules.trainable_mask(p_specs, filter_spec)
+    return FlatParamOps(view=FlatView.of(p_specs, filter=filt),
+                        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -444,11 +544,16 @@ def make_local_fn(task: Task, spec: LocalSpec,
                   flat_ops: Optional[FlatParamOps] = None) -> Callable:
     """Build the per-client local-training function.
 
-    tree impl : ``local(key, w_start, extras, cx, cy, lr_scale)
-                -> (w_end, aux)`` over parameter TREES.
+    tree impl : ``local(key, w_start, extras, cx, cy, lr_scale,
+                frozen=None) -> (w_end, aux)`` over parameter TREES
+                (``frozen`` is ignored — the tree path has no
+                trainable-slice partition).
     fused impl: the SAME signature over flat buffer dicts — ``w_start``
-                and ``w_end`` are FlatParamOps buffers; the tree exists
-                only inside the loss closure (forward/backward
+                and ``w_end`` are FlatParamOps buffers holding ONLY the
+                trainable slice; ``frozen`` is the read-only constant
+                bucket dict merged at the loss boundary (never
+                differentiated, never in the scan carry).  The tree
+                exists only inside the loss closure (forward/backward
                 boundary).  ``flat_ops`` selects the buffer flavor and
                 defaults to the host FlatView ops for this task.
 
@@ -475,10 +580,13 @@ def make_local_fn(task: Task, spec: LocalSpec,
 
     fused = spec.update_impl != "tree"
     if fused and flat_ops is None:
-        flat_ops = host_flat_ops(task, ops.fused_interpret(spec.update_impl))
+        flat_ops = host_flat_ops(task, ops.fused_interpret(spec.update_impl),
+                                 effective_trainable_filter(spec))
 
     def local_tree(key: jax.Array, w_start: Pytree, extras: Dict[str, Pytree],
-                   cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
+                   cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray,
+                   frozen: Optional[Dict] = None):
+        del frozen  # tree path has no trainable-slice partition
         grad_fn = jax.value_and_grad(loss_for_variant)
         n_data = cx.shape[0]
         mom0 = tm.zeros_like(w_start) if spec.momentum else ()
@@ -497,7 +605,8 @@ def make_local_fn(task: Task, spec: LocalSpec,
         return w_end, {"loss": jnp.mean(losses)}
 
     def local_fused(key: jax.Array, p_start: Dict, extras: Dict[str, Pytree],
-                    cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray):
+                    cx: jnp.ndarray, cy: jnp.ndarray, lr_scale: jnp.ndarray,
+                    frozen: Optional[Dict] = None):
         n_data = cx.shape[0]
         # momentum mirrors the incoming buffers exactly (padded or not),
         # so the scan carry is shape-consistent however p_start arrived
@@ -515,10 +624,13 @@ def make_local_fn(task: Task, spec: LocalSpec,
         # differentiate w.r.t. the FLAT buffers: the tree materializes
         # only here, inside the loss closure, so the backward's
         # cotangents land directly in packed buffer form — the per-step
-        # pack copy of the PR-4 flow does not exist
+        # pack copy of the PR-4 flow does not exist.  ``frozen`` enters
+        # as a closed-over constant on the non-differentiated side, so
+        # the backward never touches (or allocates cotangents for) the
+        # frozen leaves.
         def flat_loss(p_bufs, bx, by, rng):
-            return loss_for_variant(flat_ops.unflatten(p_bufs), extras,
-                                    bx, by, rng)
+            return loss_for_variant(flat_ops.unflatten(p_bufs, frozen),
+                                    extras, bx, by, rng)
 
         grad_fn = jax.value_and_grad(flat_loss)
 

@@ -104,7 +104,8 @@ from repro.fl.engine import (
     tree_set_rows,
 )
 from repro.fl import compression, privacy
-from repro.fl.local import FlatParamOps, LocalSpec, make_local_fn
+from repro.fl.local import (
+    FlatParamOps, LocalSpec, effective_trainable_filter, make_local_fn)
 from repro.fl.simulation import HOST_RNG_OFFSET_P2
 from repro.fl.task import Task
 from repro.kernels import ops
@@ -153,10 +154,16 @@ class PodFLSpec:
     # top-k sparsified client deltas, optional error feedback.  The
     # identity spec / None compile to the exact baseline program.
     compression: Optional[compression.CompressionSpec] = None
+    # trainable-slice / PEFT (see repro.fl.local.LocalSpec): frozen
+    # leaves stay out of the kernels, the donated carry and the wire;
+    # needs the fused flat path.  P1 (relay) strips both knobs — the
+    # relay hops the full model.
+    peft: Optional[str] = None
+    trainable_filter: Optional[str] = None
 
     def __post_init__(self):
         from repro.fl import compression as comp_mod
-        from repro.fl.local import validate_update_impl
+        from repro.fl.local import validate_peft, validate_update_impl
         validate_update_impl(self.update_impl)
         comp_mod.validate_compression(
             self.compression, dp=self.dp, secure_agg=self.secure_agg)
@@ -166,6 +173,8 @@ class PodFLSpec:
                 "pod lossy compression needs the fused flat path "
                 "(update_impl='fused'|'fused_interpret') — the tree "
                 "backend has no shard-local compress kernel")
+        validate_peft(self.peft, trainable_filter=self.trainable_filter,
+                      update_impl=self.update_impl)
 
     def local_spec(self, variant: Optional[str] = None) -> LocalSpec:
         return LocalSpec(
@@ -174,7 +183,8 @@ class PodFLSpec:
             variant=variant or _VARIANTS[self.algorithm], mu=self.mu,
             temperature=self.temperature, grad_clip=self.grad_clip,
             update_impl=self.update_impl, dp=self.dp,
-            secure_agg=self.secure_agg, compression=self.compression)
+            secure_agg=self.secure_agg, compression=self.compression,
+            peft=self.peft, trainable_filter=self.trainable_filter)
 
 
 # ---------------------------------------------------------------------------
@@ -327,9 +337,23 @@ class ShardedFlatOps(FlatParamOps):
         raise NotImplementedError("the pod backend aggregates "
                                   "sequentially — no stacked buffers")
 
-    def stacked_unflatten(self, bufs: Dict[str, jnp.ndarray]):
+    def stacked_unflatten(self, bufs: Dict[str, jnp.ndarray], frozen=None):
         raise NotImplementedError("the pod backend aggregates "
                                   "sequentially — no stacked buffers")
+
+    def place_frozen(self, bufs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        # frozen buckets never enter a kernel, so no pad — just pin the
+        # read-only constants to their mesh layout (replicated or FSDP
+        # per the group's axes) with the same unaliased-copy guard as
+        # place(): these live OUTSIDE the donated carry but must not
+        # alias a caller's array either.
+        placed = jax.device_put(bufs, self.frozen_shardings())
+        return jax.tree_util.tree_map(
+            lambda orig, out: jnp.copy(out) if out is orig else out,
+            bufs, placed)
+
+    def frozen_shardings(self) -> Dict[str, Any]:
+        return rules.frozen_flat_shardings(self.view, self.mesh)
 
     def weighted_delta(self, p_bufs, stacked_bufs, wbar, extra=None):
         raise NotImplementedError("the pod backend aggregates "
@@ -429,11 +453,12 @@ class ShardedFlatOps(FlatParamOps):
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_flat_ops(task: Task, mesh, layout: str,
-                      interpret: bool) -> ShardedFlatOps:
+def _sharded_flat_ops(task: Task, mesh, layout: str, interpret: bool,
+                      filter_spec: Optional[str] = None) -> ShardedFlatOps:
     p_specs = jax.eval_shape(task.init, jax.random.PRNGKey(0))
-    return ShardedFlatOps(view=rules.sharded_flat_view(p_specs, mesh, layout),
-                          interpret=interpret, mesh=mesh)
+    view = rules.sharded_flat_view(p_specs, mesh, layout,
+                                   filter_spec=filter_spec)
+    return ShardedFlatOps(view=view, interpret=interpret, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -449,7 +474,8 @@ class PodBackendMixin:
         if self.spec.update_impl == "tree":
             return None
         return _sharded_flat_ops(task, self.mesh, self.layout,
-                                 ops.fused_interpret(self.spec.update_impl))
+                                 ops.fused_interpret(self.spec.update_impl),
+                                 effective_trainable_filter(self.spec))
 
     def n_selected(self, n_clients: int) -> int:
         if self.clients_per_round:
@@ -559,9 +585,12 @@ class PodBackendMixin:
         #              prepare_eval_data (None = inherit), ids is None
         #              under on-device sampling, eval args are None in
         #              no-eval programs (a sharding entry broadcasts
-        #              over the empty pytree)
+        #              over the empty pytree); the trailing frozen
+        #              bucket dict gets its replicated-or-FSDP layout
+        #              ({} when nothing is frozen — any entry broadcasts)
+        fz_sh = fops.frozen_shardings() if fops is not None else rep
         in_sh = (rep, p_sh, st_sh, srv_sh, None, None, rep, None, rep,
-                 rep, None, None, None)
+                 rep, None, None, None, fz_sh)
         out_sh = (rep, p_sh, st_sh, srv_sh, rep, rep)
         return jax.jit(chunk, in_shardings=in_sh, out_shardings=out_sh,
                        donate_argnums=(0, 1, 2, 3))
@@ -588,10 +617,12 @@ class PodRelayStrategy(PodBackendMixin, RelayStrategy):
         p_sh = fops.shardings() if fops is not None else \
             self._param_shardings(task)
 
-        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+        def body(key, params, x_all, y_all, ids, weights, lr_scale,
+                 algo_state, frozen=None):
             params = jax.lax.with_sharding_constraint(params, p_sh)
             new_params, algo_state, loss = inner(
-                key, params, x_all, y_all, ids, weights, lr_scale, algo_state)
+                key, params, x_all, y_all, ids, weights, lr_scale,
+                algo_state, frozen)
             new_params = jax.lax.with_sharding_constraint(new_params, p_sh)
             return new_params, algo_state, loss
 
@@ -699,7 +730,7 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         store = self.state_store
         fused = fops is not None
         p_sh = fops.shardings() if fused else self._param_shardings(task)
-        unpack = fops.unflatten if fused else (lambda t: t)
+        unpack = fops.unflatten if fused else (lambda t, fz=None: t)
         G = self._n_pods() if self.aggregation == "hierarchical" else 1
         dp = spec.dp
         dp_clips = dp is not None and dp.clips
@@ -711,7 +742,8 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
         def pin(t):
             return jax.lax.with_sharding_constraint(t, p_sh)
 
-        def body(key, params, x_all, y_all, ids, weights, lr_scale, algo_state):
+        def body(key, params, x_all, y_all, ids, weights, lr_scale,
+                 algo_state, frozen=None):
             params = pin(params)
             K = ids.shape[0]
             keys = jax.random.split(key, K)
@@ -786,12 +818,13 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             # the row to scatter back (() when none).  The aggregation
             # topologies below are generic over it.
             if algo in ("fedavg", "fedprox"):
-                anchor = unpack(params) if algo == "fedprox" else None
+                anchor = unpack(params, frozen) if algo == "fedprox" else None
                 rows = ()
 
                 def client(k, cxi, cyi, row):
                     extras = {"w_global": anchor} if algo == "fedprox" else {}
-                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale)
+                    w_end, aux = local(k, params, extras, cxi, cyi, lr_scale,
+                                       frozen)
                     return w_end, (), aux["loss"]
 
             elif algo == "scaffold":
@@ -806,7 +839,7 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                         c_diff = jax.tree_util.tree_map(
                             lambda g, l: g - l, c, c_i_row)
                         w_end, aux = local(k, params, {"c_diff_flat": c_diff},
-                                           cxi, cyi, lr_scale)
+                                           cxi, cyi, lr_scale, frozen)
                         c_i_new = jax.tree_util.tree_map(
                             lambda ci, cg, p, we: ci - cg + (p - we) / denom,
                             c_i_row, c, params, w_end)
@@ -815,7 +848,7 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
                     def client(k, cxi, cyi, c_i_row):
                         extras = {"c_diff": tm.sub(c, c_i_row)}
                         w_end, aux = local(k, params, extras, cxi, cyi,
-                                           lr_scale)
+                                           lr_scale, frozen)
                         # option II: c_i⁺ = c_i − c + (w − w_i)/(S·lr)
                         c_i_new = jax.tree_util.tree_map(
                             lambda ci, cg, p, we: ci - cg + (p - we) / denom,
@@ -825,22 +858,23 @@ class PodAggregateStrategy(PodBackendMixin, AggregateStrategy):
             elif algo == "moon":
                 w_prev_all = algo_state["w_prev"]
                 rows = store.gather(w_prev_all, ids)
-                anchor = unpack(params)        # loop-invariant: hoist
+                anchor = unpack(params, frozen)  # loop-invariant: hoist
                 if fused:
                     # rows are flat buffers; the tree materializes once
                     # per client at the loss boundary, and the local
                     # output scatters back as raw buffers
                     def client(k, cxi, cyi, w_prev_row):
                         extras = {"w_global": anchor,
-                                  "w_prev": fops.unflatten(w_prev_row)}
+                                  "w_prev": fops.unflatten(w_prev_row,
+                                                           frozen)}
                         w_end, aux = local(k, params, extras, cxi, cyi,
-                                           lr_scale)
+                                           lr_scale, frozen)
                         return w_end, w_end, aux["loss"]
                 else:
                     def client(k, cxi, cyi, w_prev_row):
                         extras = {"w_global": anchor, "w_prev": w_prev_row}
                         w_end, aux = local(k, params, extras, cxi, cyi,
-                                           lr_scale)
+                                           lr_scale, frozen)
                         return w_end, w_end, aux["loss"]
 
             else:

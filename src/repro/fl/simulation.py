@@ -80,12 +80,21 @@ class FLConfig:
     # top-k sparsified client deltas with optional error feedback.
     # None / the identity spec compile to the exact baseline program.
     compression: Optional[CompressionSpec] = None
+    # trainable-slice / PEFT (repro.fl.local): peft="lora:<r>" trains
+    # only the adapter leaves — frozen leaves never enter the kernels,
+    # the donated carry or the wire; trainable_filter selects a named
+    # filter from repro.sharding.rules.TRAINABLE_FILTERS directly.
+    # Needs the fused flat path.
+    peft: Optional[str] = None
+    trainable_filter: Optional[str] = None
 
     def __post_init__(self):
-        from repro.fl.local import validate_update_impl
+        from repro.fl.local import validate_peft, validate_update_impl
         validate_update_impl(self.update_impl)
         validate_compression(self.compression, dp=self.dp,
                              secure_agg=self.secure_agg)
+        validate_peft(self.peft, trainable_filter=self.trainable_filter,
+                      update_impl=self.update_impl)
 
     def n_selected(self, n_clients: int) -> int:
         return max(1, int(round(self.participation * n_clients)))
@@ -99,7 +108,8 @@ class FLConfig:
             variant=variant, mu=self.mu, temperature=self.temperature,
             grad_clip=self.grad_clip, update_impl=self.update_impl,
             dp=self.dp, secure_agg=self.secure_agg,
-            compression=self.compression)
+            compression=self.compression, peft=self.peft,
+            trainable_filter=self.trainable_filter)
 
     def strategy(self) -> AggregateStrategy:
         return AggregateStrategy(

@@ -272,12 +272,14 @@ def run_pod_training(cfg: TransformerConfig, data, *,
                     overlap=(overlap == "on"))
     phases = []
     if cyclic_rounds > 0:
-        # privacy and compression apply at the P2 aggregate only — P1
-        # relays the model client-to-client with no aggregation (clients
-        # need exact params to train on), so the relay phase runs with
-        # those knobs stripped (RelayStrategy rejects them)
+        # privacy, compression and the trainable-slice filter apply at
+        # the P2 aggregate only — P1 relays the model client-to-client
+        # with no aggregation (clients need exact params to train on,
+        # and the relay hop carries the full model), so the relay phase
+        # runs with those knobs stripped (RelayStrategy rejects them)
         p1_common = dict(common, spec=dataclasses.replace(
-            spec, dp=None, secure_agg=False, compression=None))
+            spec, dp=None, secure_agg=False, compression=None,
+            peft=None, trainable_filter=None))
         phases.append(Phase("P1", PodCyclicConfig(rounds=cyclic_rounds,
                                                   seed=seed, **p1_common),
                             eval_fn=eval_fn))
@@ -395,10 +397,21 @@ def main(argv=None) -> int:
                     help="carry each client's compression residual and "
                          "add it to the next participating round's delta "
                          "(needs a lossy --compress-bits/-density combo)")
+    ap.add_argument("--peft", default=None, metavar="lora:<r>",
+                    help="parameter-efficient P2: build the model with "
+                         "rank-r LoRA adapters and train ONLY them — "
+                         "frozen leaves never enter the kernels, the "
+                         "donated carry or the upload (P1 still relays "
+                         "the full model)")
+    ap.add_argument("--trainable-filter", default=None,
+                    choices=sorted(rules.TRAINABLE_FILTERS),
+                    help="named trainable-leaf filter (overrides the one "
+                         "--peft implies); needs --update-impl fused")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_reduced(args.arch)
+    from repro.configs import with_peft
+    cfg = with_peft(get_reduced(args.arch), args.peft)
     if cfg.input_mode != "tokens":
         print(f"[train] {args.arch}: pod driver trains token-mode archs; "
               f"{cfg.input_mode}-mode archs train via the same round fns "
@@ -418,7 +431,8 @@ def main(argv=None) -> int:
                      server_momentum=args.server_momentum,
                      update_impl=args.update_impl, dp=dp,
                      secure_agg=args.secure_agg,
-                     compression=None if comp.identity else comp)
+                     compression=None if comp.identity else comp,
+                     peft=args.peft, trainable_filter=args.trainable_filter)
     t0 = time.time()
     res = run_pod_training(
         cfg, data, cyclic_rounds=args.cyclic_rounds, fl_rounds=args.rounds,

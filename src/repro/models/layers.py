@@ -76,7 +76,13 @@ def normal_init(key, shape, std=0.02, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 def init_linear(key, d_in: int, d_out: int, bias: bool = False,
-                dtype=jnp.float32, std: Optional[float] = None) -> Pytree:
+                dtype=jnp.float32, std: Optional[float] = None,
+                lora_rank: int = 0) -> Pytree:
+    """Plain linear, or — with ``lora_rank > 0`` — a LoRA-adapted linear
+    (see :func:`init_lora_linear`)."""
+    if lora_rank:
+        return init_lora_linear(key, d_in, d_out, lora_rank, bias=bias,
+                                dtype=dtype, std=std)
     wkey, _ = jax.random.split(key)
     w = normal_init(wkey, (d_in, d_out), std=std if std is not None else d_in ** -0.5,
                     dtype=dtype)
@@ -86,12 +92,63 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
     return p
 
 
+# LoRA (Hu et al. 2106.09685): y = x·W + (α/r)·x·A·B with A (d_in, r)
+# normal-init and B (r, d_out) ZERO-init, so the adapted model starts
+# exactly at the base model.  α is the fixed library-style constant
+# below; only A/B train under the "lora" trainable filter
+# (repro.sharding.rules.TRAINABLE_FILTERS) — the base W stays frozen.
+LORA_ALPHA = 16.0
+
+
+def lora_scale(rank: int) -> float:
+    return LORA_ALPHA / rank
+
+
+def init_lora_linear(key, d_in: int, d_out: int, rank: int,
+                     bias: bool = False, dtype=jnp.float32,
+                     std: Optional[float] = None) -> Pytree:
+    """LoRA-adapted linear: the base ``w`` (and optional ``b``) draw
+    EXACTLY like :func:`init_linear` for the same key, plus ``lora_a``
+    (normal, the key's unused split half) and ``lora_b`` (zeros) — so a
+    LoRA model's forward at init equals the base model's bitwise."""
+    if rank <= 0:
+        raise ValueError(f"lora rank must be a positive integer, got {rank}")
+    p = init_linear(key, d_in, d_out, bias=bias, dtype=dtype, std=std)
+    _, akey = jax.random.split(key)
+    p["lora_a"] = normal_init(akey, (d_in, rank), std=d_in ** -0.5,
+                              dtype=dtype)
+    p["lora_b"] = jnp.zeros((rank, d_out), dtype)
+    return p
+
+
 def linear(p: Pytree, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
     dtype = dtype or x.dtype
     y = jnp.einsum("...d,df->...f", x, p["w"].astype(dtype))
+    if "lora_a" in p:
+        a, b = p["lora_a"].astype(dtype), p["lora_b"].astype(dtype)
+        z = jnp.einsum("...d,dr->...r", x, a)
+        y = y + lora_scale(a.shape[-1]) * jnp.einsum("...r,rf->...f", z, b)
     if "b" in p:
         y = y + p["b"].astype(dtype)
     return y
+
+
+def merge_lora(p: Pytree) -> Pytree:
+    """Fold a LoRA adapter into its base weight — ``W + (α/r)·A·B`` in
+    f32, cast back to W's dtype — returning a PLAIN linear param dict
+    (the inference/merge form; parity-tested against the adapter
+    forward).  Recurses through nested dicts, so it merges a whole
+    model tree."""
+    if not isinstance(p, dict):
+        return p
+    if "lora_a" in p:
+        a = p["lora_a"].astype(jnp.float32)
+        b = p["lora_b"].astype(jnp.float32)
+        w = p["w"].astype(jnp.float32) + lora_scale(a.shape[-1]) * (a @ b)
+        out = {k: v for k, v in p.items() if k not in ("lora_a", "lora_b")}
+        out["w"] = w.astype(p["w"].dtype)
+        return out
+    return {k: merge_lora(v) for k, v in p.items()}
 
 
 def init_rmsnorm(d: int, dtype=jnp.float32) -> Pytree:
@@ -154,16 +211,22 @@ class AttnConfig:
     rope_theta: float = 10000.0
     window: Optional[int] = None  # sliding window; None = full causal
     attn_impl: str = "xla"  # xla | pallas | pallas_interpret
+    lora_rank: int = 0  # > 0: LoRA-adapt the q/k/v/o projections
 
 
 def init_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> Pytree:
     ks = jax.random.split(key, 5)
     d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    r = cfg.lora_rank
     p = {
-        "wq": init_linear(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype),
-        "wk": init_linear(ks[1], d, KH * hd, bias=cfg.qkv_bias, dtype=dtype),
-        "wv": init_linear(ks[2], d, KH * hd, bias=cfg.qkv_bias, dtype=dtype),
-        "wo": init_linear(ks[3], H * hd, d, bias=False, dtype=dtype),
+        "wq": init_linear(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype,
+                          lora_rank=r),
+        "wk": init_linear(ks[1], d, KH * hd, bias=cfg.qkv_bias, dtype=dtype,
+                          lora_rank=r),
+        "wv": init_linear(ks[2], d, KH * hd, bias=cfg.qkv_bias, dtype=dtype,
+                          lora_rank=r),
+        "wo": init_linear(ks[3], H * hd, d, bias=False, dtype=dtype,
+                          lora_rank=r),
     }
     if cfg.qk_norm:
         p["q_norm"] = init_rmsnorm(hd, dtype)
@@ -332,12 +395,16 @@ def mla_attention(p: Pytree, x: jnp.ndarray, cfg: MLAConfig, positions: jnp.ndar
 # MLPs and MoE
 # ---------------------------------------------------------------------------
 
-def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Pytree:
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
+             lora_rank: int = 0) -> Pytree:
     ks = jax.random.split(key, 3)
     return {
-        "w_gate": init_linear(ks[0], d_model, d_ff, dtype=dtype),
-        "w_up": init_linear(ks[1], d_model, d_ff, dtype=dtype),
-        "w_down": init_linear(ks[2], d_ff, d_model, dtype=dtype),
+        "w_gate": init_linear(ks[0], d_model, d_ff, dtype=dtype,
+                              lora_rank=lora_rank),
+        "w_up": init_linear(ks[1], d_model, d_ff, dtype=dtype,
+                            lora_rank=lora_rank),
+        "w_down": init_linear(ks[2], d_ff, d_model, dtype=dtype,
+                              lora_rank=lora_rank),
     }
 
 

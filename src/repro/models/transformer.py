@@ -81,6 +81,13 @@ class TransformerConfig:
     # multi-token prediction (deepseek-v3) --------------------------------
     mtp: bool = False
     mtp_loss_weight: float = 0.3
+    # PEFT -----------------------------------------------------------------
+    lora_rank: int = 0        # > 0: LoRA-adapt every block linear (attn
+                              # q/k/v/o + MLP gate/up/down); embeddings,
+                              # lm_head and norms stay plain.  Distinct from
+                              # the MLA kv_lora_rank/q_lora_rank above,
+                              # which are architectural low-rank factors,
+                              # not adapters.
     # input handling -------------------------------------------------------
     input_mode: str = "tokens"           # tokens | vlm | embeddings
     n_prefix_tokens: int = 0             # vlm patch count
@@ -117,7 +124,8 @@ class TransformerConfig:
             d_model=self.d_model, n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
             head_dim=self.resolved_head_dim, qkv_bias=self.qkv_bias,
             qk_norm=self.qk_norm, rope_theta=self.rope_theta,
-            window=self.window, attn_impl=self.attn_impl)
+            window=self.window, attn_impl=self.attn_impl,
+            lora_rank=self.lora_rank)
 
     def mla_cfg(self) -> MLAConfig:
         return MLAConfig(
@@ -189,7 +197,8 @@ def _init_block(key, cfg: TransformerConfig, moe_layer: bool) -> Pytree:
         if moe_layer:
             p["moe"] = init_moe(ks[2], cfg.moe_cfg(), pd)
         elif cfg.d_ff > 0:
-            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, pd)
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, pd,
+                                lora_rank=cfg.lora_rank)
     return p
 
 

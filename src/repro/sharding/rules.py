@@ -43,6 +43,12 @@ DATA, MODEL, POD = "data", "model", "pod"
 _PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
     (r"(^|/)embed$",                          (MODEL, DATA)),
     (r"(^|/)lm_head$",                        (DATA, MODEL)),
+    # LoRA adapter factors (models.layers.init_lora_linear): A (d_in, r)
+    # shards its d_in like an in-projection's FSDP dim, B (r, d_out) its
+    # d_out like a TP output dim — the tiny rank dim replicates (and the
+    # divisibility fallback replicates either when the dims are small)
+    (r"/lora_a$",                             (DATA, None)),
+    (r"/lora_b$",                             (None, MODEL)),
     # fused in-projections: (d_in, d_out) with d_out sharded over model
     (r"(wq|wk|wv|wq_a|wq_b|wkv_a|wkv_b|w_gate|w_up|in_proj|proj)/w$", (DATA, MODEL)),
     # out-projections: contraction dim over model
@@ -153,6 +159,57 @@ def param_shardings(params_tree: Pytree, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# trainable-slice filters (federated PEFT)
+# ---------------------------------------------------------------------------
+#
+# A trainable filter is a path pattern selecting which leaves the
+# flat-first FL path optimizes and communicates; everything else packs
+# into read-only "frozen:" buckets that never enter the kernels, the
+# donated carry, or the wire (repro.utils.flatten).  Filters match by
+# path suffix exactly like the param rules above, so a filter written
+# against the model's param paths also selects the mirroring leaves of
+# any wrapper pytree.
+
+TRAINABLE_FILTERS = {
+    # LoRA adapters: only the A/B factors train; every base weight
+    # stays frozen (models.layers.init_lora_linear)
+    "lora": r"/(lora_a|lora_b)$",
+    # head-only fine-tuning: output head (+ tied embedding) and final norm
+    "head": r"((^|/)(embed|lm_head)|norm_f/(scale|bias))$",
+}
+
+
+def resolve_trainable_filter(filter_spec: Optional[str]) -> Optional[str]:
+    """A named filter resolves to its registered path regex; anything
+    else is taken as a path regex verbatim."""
+    if filter_spec is None:
+        return None
+    return TRAINABLE_FILTERS.get(filter_spec, filter_spec)
+
+
+def trainable_mask(tree: Pytree,
+                   filter_spec: Optional[str]) -> Optional[Tuple[bool, ...]]:
+    """Per-leaf trainable booleans in ``tree_flatten`` order for a
+    path-pattern filter (the ``filter=`` argument of
+    ``FlatView.of`` / ``ShardedFlatView.of``).  ``None`` means no filter
+    — every leaf trains, and the views compile to the exact unfiltered
+    program.  A filter that selects zero leaves is a config error
+    (nothing would train), raised here at construction time."""
+    pattern = resolve_trainable_filter(filter_spec)
+    if pattern is None:
+        return None
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    mask = tuple(bool(re.search(pattern, _path_str(path))) for path, _ in flat)
+    if flat and not any(mask):
+        raise ValueError(
+            f"trainable filter {filter_spec!r} (pattern {pattern!r}) "
+            f"matches zero leaves of the param tree — nothing would "
+            f"train; check the filter against the model's param paths "
+            f"(a LoRA filter needs a model built with lora_rank > 0)")
+    return mask
+
+
+# ---------------------------------------------------------------------------
 # batch / cache sharding
 # ---------------------------------------------------------------------------
 
@@ -205,18 +262,23 @@ def replicated(mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 def sharded_flat_view(params_tree: Pytree, mesh: Mesh,
-                      layout: str = "fsdp_tp"):
+                      layout: str = "fsdp_tp",
+                      filter_spec: Optional[str] = None):
     """ShardedFlatView for ``params_tree`` under this mesh + layout:
     leaves bucket per (dtype, mesh-axis group) straight from the
     :func:`param_pspecs` rules, so packing preserves exactly the FSDP×TP
     decomposition the per-leaf path would use — each device ends up with
     one contiguous local buffer per bucket (see
-    repro.utils.flatten.ShardedFlatView)."""
+    repro.utils.flatten.ShardedFlatView).  ``filter_spec`` (a trainable
+    filter, see :func:`trainable_mask`) partitions the leaves into
+    trainable buckets and read-only ``frozen:`` buckets that keep the
+    same per-group FSDP×TP decomposition."""
     from repro.utils.flatten import ShardedFlatView
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return ShardedFlatView.of(params_tree,
                               param_pspecs(params_tree, mesh, layout),
-                              axis_sizes)
+                              axis_sizes,
+                              filter=trainable_mask(params_tree, filter_spec))
 
 
 def flat_buffer_pspec(group) -> P:
@@ -230,9 +292,20 @@ def flat_buffer_pspec(group) -> P:
 
 
 def flat_param_shardings(view, mesh: Mesh) -> dict:
-    """NamedSharding per bucket for a ShardedFlatView's buffers."""
+    """NamedSharding per TRAINABLE bucket for a ShardedFlatView's
+    buffers — the placement of the engine's donated flat carries."""
     return {g.name: NamedSharding(mesh, flat_buffer_pspec(g))
-            for g in view.groups}
+            for g in view.trainable_groups}
+
+
+def frozen_flat_shardings(view, mesh: Mesh) -> dict:
+    """NamedSharding per FROZEN bucket: the read-only constant bucket a
+    filtered run closes over keeps the same per-group FSDP×TP
+    decomposition as the trainable carries (frozen leaves shard instead
+    of replicating — the big frozen base is exactly what must not be
+    resident per device)."""
+    return {g.name: NamedSharding(mesh, flat_buffer_pspec(g))
+            for g in view.frozen_groups}
 
 
 def mesh_axis_size(mesh: Mesh, axis: str = DATA) -> int:
@@ -251,10 +324,11 @@ def lane_axis_pspec(leaf_rank: int = 3) -> P:
 
 
 def lane_shardings(view, mesh: Mesh) -> dict:
-    """NamedSharding per bucket for lane-stacked ``(G, n_shards,
-    per_shard)`` accumulators."""
+    """NamedSharding per (trainable) bucket for lane-stacked ``(G,
+    n_shards, per_shard)`` accumulators — deltas only ever cover the
+    optimized slice."""
     return {g.name: NamedSharding(mesh, lane_axis_pspec())
-            for g in view.groups}
+            for g in view.trainable_groups}
 
 
 # ---------------------------------------------------------------------------

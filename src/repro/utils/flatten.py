@@ -27,6 +27,20 @@ stacks): buffers come out ``(K, total)`` with the same per-leaf offsets.
 FlatView is a frozen, hashable value (treedef + slot tuple), so it can
 key caches and ride static arguments.
 
+Trainable-slice partitioning (federated PEFT): ``of(tree, filter=...)``
+takes a per-leaf boolean mask (True = trainable, tree_flatten order —
+repro.sharding.rules.trainable_mask builds one from a path pattern) and
+routes frozen leaves into separate ``"frozen:"``-prefixed buckets with
+their own static offsets.  Every emitting method — ``flatten``,
+``zeros``, ``normal``, the stacked variants, ``buffer_sizes`` — then
+speaks TRAINABLE buckets only, so gradients, momentum, deltas, server
+moments and upload accounting all shrink to the optimized slice without
+any caller-side masking; the frozen constants pack once via
+``flatten_frozen`` and merge back at the ``unflatten(bufs, frozen=...)``
+boundary (absent frozen buckets zero-fill, for moment trees).  With
+``filter=None`` there are no frozen buckets and every path is the exact
+unfiltered program.
+
 :class:`ShardedFlatView` is the mesh-aware sibling: leaves are bucketed
 per *(dtype, mesh-axis group)* — the group being the set of mesh axes
 their PartitionSpec shards them over — and each bucket packs into a
@@ -49,6 +63,25 @@ import jax.numpy as jnp
 
 Pytree = Any
 
+# frozen leaves pack into buckets under this name prefix; the plain
+# bucket name (dtype / dtype@axes) follows the prefix unchanged
+FROZEN_PREFIX = "frozen:"
+
+
+def is_frozen_bucket(name: str) -> bool:
+    return name.startswith(FROZEN_PREFIX)
+
+
+def _check_filter(filter, n_leaves: int):
+    """Normalize a per-leaf trainable mask (None = all trainable)."""
+    if filter is None:
+        return None
+    mask = tuple(bool(b) for b in filter)
+    if len(mask) != n_leaves:
+        raise ValueError(f"trainable filter has {len(mask)} entries for a "
+                         f"{n_leaves}-leaf tree")
+    return mask
+
 
 @dataclasses.dataclass(frozen=True)
 class LeafSlot:
@@ -66,14 +99,19 @@ class FlatView:
     slots: Tuple[LeafSlot, ...]
 
     @classmethod
-    def of(cls, tree: Pytree) -> "FlatView":
+    def of(cls, tree: Pytree, filter=None) -> "FlatView":
         """Build a view from shapes/dtypes only — leaves may be tracers,
-        ShapeDtypeStructs or concrete arrays."""
+        ShapeDtypeStructs or concrete arrays.  ``filter`` is an optional
+        per-leaf trainable mask (tree_flatten order): False routes the
+        leaf into a ``frozen:``-prefixed bucket (see module doc)."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
+        mask = _check_filter(filter, len(leaves))
         sizes: Dict[str, int] = {}
         slots = []
-        for leaf in leaves:
+        for i, leaf in enumerate(leaves):
             name = jnp.dtype(leaf.dtype).name
+            if mask is not None and not mask[i]:
+                name = FROZEN_PREFIX + name
             size = int(math.prod(leaf.shape))
             off = sizes.get(name, 0)
             slots.append(LeafSlot(buffer=name, offset=off, size=size,
@@ -85,10 +123,21 @@ class FlatView:
 
     @property
     def buffer_sizes(self) -> Dict[str, int]:
-        """Total elements per dtype buffer, in first-seen order."""
+        """Total elements per TRAINABLE dtype buffer, first-seen order
+        (everything the round program optimizes and communicates)."""
         sizes: Dict[str, int] = {}
         for s in self.slots:
-            sizes[s.buffer] = s.offset + s.size
+            if not is_frozen_bucket(s.buffer):
+                sizes[s.buffer] = s.offset + s.size
+        return sizes
+
+    @property
+    def frozen_sizes(self) -> Dict[str, int]:
+        """Total elements per frozen bucket ({} without a filter)."""
+        sizes: Dict[str, int] = {}
+        for s in self.slots:
+            if is_frozen_bucket(s.buffer):
+                sizes[s.buffer] = s.offset + s.size
         return sizes
 
     @property
@@ -105,19 +154,50 @@ class FlatView:
     # -- pack / unpack ------------------------------------------------------
 
     def flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
-        """Pack ``tree`` into ``{dtype_name: (total,) buffer}``."""
+        """Pack ``tree``'s trainable leaves into ``{dtype_name: (total,)
+        buffer}`` (all leaves without a filter)."""
         leaves = self._check(tree)
         parts: Dict[str, list] = {}
         for slot, leaf in zip(self.slots, leaves):
+            if is_frozen_bucket(slot.buffer):
+                continue
             parts.setdefault(slot.buffer, []).append(
                 jnp.asarray(leaf).reshape(-1))
         return {name: jnp.concatenate(chunks)
                 for name, chunks in parts.items()}
 
-    def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+    def flatten_frozen(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        """Pack the FROZEN leaves into their ``frozen:`` buckets — the
+        once-per-phase read-only constant dict ({} without a filter)."""
+        leaves = self._check(tree)
+        parts: Dict[str, list] = {}
+        for slot, leaf in zip(self.slots, leaves):
+            if not is_frozen_bucket(slot.buffer):
+                continue
+            parts.setdefault(slot.buffer, []).append(
+                jnp.asarray(leaf).reshape(-1))
+        return {name: jnp.concatenate(chunks)
+                for name, chunks in parts.items()}
+
+    def frozen_zeros(self) -> Dict[str, jnp.ndarray]:
+        """Zero frozen buckets at their recorded dtypes — the fill-in
+        for unflattening a trainable-only wrapper pytree (server
+        moments) whose frozen slots have no values."""
+        return {name: jnp.zeros((size,),
+                                name[len(FROZEN_PREFIX):])
+                for name, size in self.frozen_sizes.items()}
+
+    def unflatten(self, bufs: Dict[str, jnp.ndarray],
+                  frozen: Dict[str, jnp.ndarray] = None) -> Pytree:
         """Inverse of :meth:`flatten` (accepts buffers of any dtype —
         leaves are cast back to the slot's recorded dtype by reshape,
-        not re-cast; pass matching dtypes for an exact round-trip)."""
+        not re-cast; pass matching dtypes for an exact round-trip).
+        With a filter, ``frozen`` supplies the ``frozen:`` buckets
+        (:meth:`flatten_frozen`); absent frozen buckets zero-fill."""
+        if self.frozen_sizes:
+            merged = dict(bufs)
+            merged.update(frozen if frozen else self.frozen_zeros())
+            bufs = merged
         leaves = [bufs[s.buffer][s.offset:s.offset + s.size].reshape(s.shape)
                   for s in self.slots]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
@@ -125,20 +205,35 @@ class FlatView:
     # -- stacked variants (leading shared axis, e.g. (K, ...) clients) ------
 
     def flatten_stacked(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
-        """Pack a tree whose leaves carry one shared leading axis K into
-        ``{dtype_name: (K, total) buffers}``."""
+        """Pack a tree whose (trainable) leaves carry one shared leading
+        axis K into ``{dtype_name: (K, total) buffers}``."""
         leaves = self._check(tree)
         parts: Dict[str, list] = {}
         for slot, leaf in zip(self.slots, leaves):
+            if is_frozen_bucket(slot.buffer):
+                continue
             leaf = jnp.asarray(leaf)
             parts.setdefault(slot.buffer, []).append(
                 leaf.reshape(leaf.shape[0], -1))
         return {name: jnp.concatenate(chunks, axis=1)
                 for name, chunks in parts.items()}
 
-    def unflatten_stacked(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+    def unflatten_stacked(self, bufs: Dict[str, jnp.ndarray],
+                          frozen: Dict[str, jnp.ndarray] = None) -> Pytree:
+        """Inverse of :meth:`flatten_stacked`.  With a filter, frozen
+        slots broadcast the shared constant bucket (``frozen``, 1-D per
+        :meth:`flatten_frozen`; zero-filled when absent) over the K
+        axis — every row shares the same frozen base."""
+        fz = None
+        if self.frozen_sizes:
+            fz = dict(frozen) if frozen else self.frozen_zeros()
+        K = next(iter(bufs.values())).shape[0]
         leaves = []
         for s in self.slots:
+            if is_frozen_bucket(s.buffer):
+                row = fz[s.buffer][s.offset:s.offset + s.size].reshape(s.shape)
+                leaves.append(jnp.broadcast_to(row[None], (K,) + s.shape))
+                continue
             buf = bufs[s.buffer]
             leaves.append(buf[:, s.offset:s.offset + s.size].reshape(
                 (buf.shape[0],) + s.shape))
@@ -161,9 +256,14 @@ class FlatView:
         not by buffer — makes the bits independent of the packing, so a
         tree-side twin (repro.fl.privacy.tree_normal) and the
         ShardedFlatView flavor produce the SAME values per parameter.
-        Non-inexact (integer) slots draw zeros."""
+        Non-inexact (integer) slots draw zeros.  Frozen slots are never
+        noised, masked or uploaded — they emit nothing (the per-leaf
+        fold_in index stays the GLOBAL slot index, so a filtered view
+        draws the same bits per trainable parameter as the full view)."""
         parts: Dict[str, list] = {}
         for i, slot in enumerate(self.slots):
+            if is_frozen_bucket(slot.buffer):
+                continue
             if jnp.issubdtype(jnp.dtype(slot.buffer), jnp.inexact):
                 draw = jax.random.normal(jax.random.fold_in(key, i),
                                          slot.shape, jnp.float32)
@@ -234,16 +334,21 @@ class ShardedFlatView:
 
     @classmethod
     def of(cls, tree: Pytree, pspecs: Pytree,
-           axis_sizes: Dict[str, int]) -> "ShardedFlatView":
+           axis_sizes: Dict[str, int], filter=None) -> "ShardedFlatView":
         """Build a view from leaf shapes/dtypes plus a matching
         PartitionSpec tree (e.g. repro.sharding.rules.param_pspecs).
 
         ``axis_sizes`` maps mesh axis name -> size, in canonical mesh
         order; size-1 axes never shard anything and are dropped, so the
         same rules produce bit-identical single-device views.
-        """
+        ``filter`` is the per-leaf trainable mask (see
+        :class:`FlatView`): frozen leaves bucket into
+        ``frozen:``-prefixed groups that keep their (dtype × mesh-axis
+        group) decomposition — the frozen base stays FSDP-sharded — but
+        never appear in the trainable emitters."""
         from jax.sharding import PartitionSpec
         leaves, treedef = jax.tree_util.tree_flatten(tree)
+        mask = _check_filter(filter, len(leaves))
         spec_leaves, _ = jax.tree_util.tree_flatten(
             pspecs, is_leaf=lambda x: x is None or
             isinstance(x, PartitionSpec))
@@ -255,7 +360,7 @@ class ShardedFlatView:
         cursor: Dict[str, int] = {}
         meta: Dict[str, Tuple[str, Tuple[str, ...], int]] = {}
         slots = []
-        for leaf, pspec in zip(leaves, spec_leaves):
+        for i, (leaf, pspec) in enumerate(zip(leaves, spec_leaves)):
             shape = tuple(leaf.shape)
             dtype = jnp.dtype(leaf.dtype).name
             dim_axes = tuple(
@@ -272,6 +377,8 @@ class ShardedFlatView:
             axes = tuple(a for a in order if a in used)
             n_shards = math.prod(axis_sizes[a] for a in axes)
             name = dtype + ("@" + "+".join(axes) if axes else "")
+            if mask is not None and not mask[i]:
+                name = FROZEN_PREFIX + name
             size = int(math.prod(shape)) // max(n_shards, 1)
             off = cursor.get(name, 0)
             slots.append(ShardedLeafSlot(buffer=name, offset=off, size=size,
@@ -291,12 +398,20 @@ class ShardedFlatView:
         return {g.name: g for g in self.groups}
 
     @property
+    def trainable_groups(self) -> Tuple[ShardGroup, ...]:
+        return tuple(g for g in self.groups if not is_frozen_bucket(g.name))
+
+    @property
+    def frozen_groups(self) -> Tuple[ShardGroup, ...]:
+        return tuple(g for g in self.groups if is_frozen_bucket(g.name))
+
+    @property
     def buffer_shapes(self) -> Dict[str, Tuple[int, int]]:
-        return {g.name: (g.n_shards, g.size) for g in self.groups}
+        return {g.name: (g.n_shards, g.size) for g in self.trainable_groups}
 
     @property
     def total_size(self) -> int:
-        return sum(g.n_shards * g.size for g in self.groups)
+        return sum(g.n_shards * g.size for g in self.trainable_groups)
 
     def _axis_size(self, name: str) -> int:
         return dict(self.axis_sizes)[name]
@@ -346,26 +461,53 @@ class ShardedFlatView:
         return leaves
 
     def flatten(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
-        """Pack ``tree`` into ``{bucket: (n_shards, per_shard)}``."""
+        """Pack ``tree``'s trainable leaves into ``{bucket: (n_shards,
+        per_shard)}`` (all leaves without a filter)."""
         leaves = self._check(tree)
         parts: Dict[str, list] = {}
         for slot, leaf in zip(self.slots, leaves):
+            if is_frozen_bucket(slot.buffer):
+                continue
             parts.setdefault(slot.buffer, []).append(
                 self._leaf_to_shards(leaf, slot))
         return {name: jnp.concatenate(rows, axis=1)
                 for name, rows in parts.items()}
 
-    def unflatten(self, bufs: Dict[str, jnp.ndarray]) -> Pytree:
+    def flatten_frozen(self, tree: Pytree) -> Dict[str, jnp.ndarray]:
+        """Pack the FROZEN leaves into their ``frozen:`` buckets, same
+        per-group shard decomposition ({} without a filter)."""
+        leaves = self._check(tree)
+        parts: Dict[str, list] = {}
+        for slot, leaf in zip(self.slots, leaves):
+            if not is_frozen_bucket(slot.buffer):
+                continue
+            parts.setdefault(slot.buffer, []).append(
+                self._leaf_to_shards(leaf, slot))
+        return {name: jnp.concatenate(rows, axis=1)
+                for name, rows in parts.items()}
+
+    def frozen_zeros(self) -> Dict[str, jnp.ndarray]:
+        """Zero frozen buckets at their recorded dtypes/shapes."""
+        return {g.name: jnp.zeros((g.n_shards, g.size), g.dtype)
+                for g in self.frozen_groups}
+
+    def unflatten(self, bufs: Dict[str, jnp.ndarray],
+                  frozen: Dict[str, jnp.ndarray] = None) -> Pytree:
+        if self.frozen_groups:
+            merged = dict(bufs)
+            merged.update(frozen if frozen else self.frozen_zeros())
+            bufs = merged
         leaves = [self._shards_to_leaf(
             bufs[s.buffer][:, s.offset:s.offset + s.size], s)
             for s in self.slots]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
     def zeros(self, dtype=None) -> Dict[str, jnp.ndarray]:
-        """Zero buffers with this view's shapes; ``dtype`` overrides the
-        per-bucket dtype (e.g. the pod's f32 delta accumulator)."""
+        """Zero buffers with this view's trainable shapes; ``dtype``
+        overrides the per-bucket dtype (e.g. the pod's f32 delta
+        accumulator)."""
         return {g.name: jnp.zeros((g.n_shards, g.size), dtype or g.dtype)
-                for g in self.groups}
+                for g in self.trainable_groups}
 
     def normal(self, key) -> Dict[str, jnp.ndarray]:
         """Standard-normal f32 buckets, drawn per leaf with
@@ -373,10 +515,14 @@ class ShardedFlatView:
         shard-split — bit-identical per parameter to
         ``FlatView.normal`` / the tree twin for the same key, whatever
         the mesh layout (the draw precedes the pure-data-movement shard
-        transform).  Non-inexact slots draw zeros."""
+        transform).  Non-inexact slots draw zeros; frozen slots emit
+        nothing (fold_in keeps the global slot index, like
+        ``FlatView.normal``)."""
         gm = self.group_map
         parts: Dict[str, list] = {}
         for i, slot in enumerate(self.slots):
+            if is_frozen_bucket(slot.buffer):
+                continue
             if jnp.issubdtype(jnp.dtype(gm[slot.buffer].dtype), jnp.inexact):
                 draw = jax.random.normal(jax.random.fold_in(key, i),
                                          slot.shape, jnp.float32)
